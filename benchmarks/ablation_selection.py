@@ -1,0 +1,47 @@
+"""Ablation — the Lemma H.2 selection step (Algo 1's middle step).
+
+The paper's safety argument: at high heterogeneity A_local can END UP WORSE
+than the initial point; selection caps the handoff at min{F(x̂_0), F(x̂_1/2)}.
+This harness removes the selection (always hand A_local's output to A_global)
+and measures the damage across ζ. Derived: final suboptimality.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import algorithms as A, chain
+from repro.data import problems
+
+
+def main(quick: bool = True):
+    rounds = 16 if quick else 40  # short global phase: damage must be caught
+    rows = []
+    # Selection is a SAFETY property: it matters when A_local *damages* the
+    # iterate (here: client curvatures up to 2β make the local stepsize
+    # unstable on stiff clients) and the global phase is too short to recover.
+    for zeta, spread, eta_local in ((1.0, 0.0, 0.5), (5.0, 1.5, 2.5),
+                                    (20.0, 1.5, 2.5)):
+        p = problems.quadratic_problem(
+            jax.random.PRNGKey(0), num_clients=8, dim=16, mu=0.1, beta=1.0,
+            zeta=zeta, sigma=0.2, sigma_f=0.05, curvature_spread=spread)
+        x0 = p.init_params(jax.random.PRNGKey(0))
+        fa = A.FedAvg(eta=eta_local, local_steps=8, inner_batch=4)
+        sgd = A.SGD(eta=0.4, k=32, mu_avg=p.mu)
+        for sel in (True, False):
+            ch = chain.fedchain(fa, sgd, selection_k=32,
+                                select_between_stages=sel)
+            subs = []
+            for seed in range(3):
+                res, us = timed(lambda sd=seed: ch.run(
+                    p, x0, rounds, jax.random.PRNGKey(sd)))
+                subs.append(float(p.suboptimality(res.x_hat)))
+            tag = "with_selection" if sel else "no_selection"
+            rows.append(emit(f"ablation_selection/{tag}/zeta={zeta}", us,
+                             f"sub={np.median(subs):.3e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

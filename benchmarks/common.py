@@ -1,0 +1,28 @@
+"""Shared benchmark scaffolding: timing + CSV emission.
+
+Every harness prints ``name,us_per_call,derived`` rows (derived = the
+benchmark's headline quantity, e.g. final suboptimality or accuracy).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed(fn, *args, repeats: int = 1):
+    """(result, us_per_call). jit-warm before timing."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return out, us
+
+
+def emit(name: str, us_per_call: float, derived) -> str:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    print(row)
+    return row

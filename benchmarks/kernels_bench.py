@@ -1,0 +1,52 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU; compiled on TPU) vs the
+jnp reference, plus the step-function wall times at smoke scale.
+
+Derived: max |Δ| vs reference (correctness) — wall numbers are CPU-only and
+indicative, the TPU perf story lives in §Roofline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels.aggregate.aggregate import chain_aggregate
+from repro.kernels.aggregate.ref import chain_aggregate_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def main(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # aggregate
+    s, d = 8, 1 << 16
+    x = jax.random.normal(key, (d,))
+    g = jax.random.normal(key, (s, d))
+    ci = jax.random.normal(key, (s, d))
+    c = jax.random.normal(key, (d,))
+    w = jnp.full((s,), 1.0 / s)
+    ref, us_ref = timed(lambda: chain_aggregate_ref(x, g, ci, c, lr=0.1, weights=w))
+    out, us_k = timed(lambda: chain_aggregate(x, g, ci, c, w, lr=0.1, interpret=True))
+    err = float(jnp.max(jnp.abs(out - ref)))
+    rows.append(emit("kernels/chain_aggregate/ref", us_ref, f"d={d}"))
+    rows.append(emit("kernels/chain_aggregate/pallas_interpret", us_k, f"err={err:.1e}"))
+
+    # flash attention
+    b, s2, h, kv, hd = 1, 512, 4, 2, 64
+    q = jax.random.normal(key, (b, s2, h, hd), jnp.float32)
+    k2 = jax.random.normal(key, (b, s2, kv, hd), jnp.float32)
+    v2 = jax.random.normal(key, (b, s2, kv, hd), jnp.float32)
+    ref2, us_ref2 = timed(lambda: attention_ref(q, k2, v2, causal=True))
+    out2, us_k2 = timed(lambda: flash_attention(q, k2, v2, causal=True,
+                                                interpret=True))
+    err2 = float(jnp.max(jnp.abs(out2 - ref2)))
+    rows.append(emit("kernels/flash_attention/ref", us_ref2, f"s={s2}"))
+    rows.append(emit("kernels/flash_attention/pallas_interpret", us_k2,
+                     f"err={err2:.1e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

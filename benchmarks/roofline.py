@@ -1,0 +1,68 @@
+"""Roofline reporter (deliverable g): reads the dry-run artifacts from
+experiments/dryrun/*.json and emits the per-(arch × shape × mesh) roofline
+table (markdown + CSV rows).
+
+Derived column: dominant-term seconds.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(pattern: str = "*.json"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def markdown_table(recs, *, mesh_filter: str = "single_pod_16x16") -> str:
+    lines = [
+        "| arch | shape | T_comp (s) | T_mem (s) | T_coll (s) | dominant | "
+        "MODEL_FLOPS | useful | HBM GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") != "ok" or r.get("mesh") != mesh_filter or "roofline" not in r:
+            continue
+        if r.get("mode") == "fedchain":
+            continue
+        roof = r["roofline"]
+        mem_gb = (r["memory"]["argument_bytes"] + r["memory"]["temp_bytes"]) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {roof['compute_s']:.3e} | "
+            f"{roof['memory_s']:.3e} | {roof['collective_s']:.3e} | "
+            f"{roof['dominant']} | {roof['model_flops']:.2e} | "
+            f"{roof['useful_ratio']:.2f} | {mem_gb:.1f} |")
+    return "\n".join(lines)
+
+
+def main(quick: bool = True):
+    rows = []
+    recs = load_records()
+    if not recs:
+        rows.append(emit("roofline/missing", 0.0,
+                         "run repro.launch.dryrun first"))
+        return rows
+    for r in recs:
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        roof = r["roofline"]
+        dom_s = {"compute": roof["compute_s"], "memory": roof["memory_s"],
+                 "collective": roof["collective_s"]}[roof["dominant"]]
+        rows.append(emit(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            r.get("compile_s", 0.0) * 1e6,
+            f"dom={roof['dominant']};dom_s={dom_s:.3e};useful={roof['useful_ratio']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

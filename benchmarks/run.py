@@ -1,0 +1,55 @@
+"""Benchmark orchestrator — one harness per paper table/figure plus the
+roofline/kernel reports. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale rounds")
+    ap.add_argument("--only", default="", help="comma-separated harness names")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        ablation_selection, appj1_large_k, fig2_convergence, kernels_bench,
+        lower_bound_bench, roofline, table1_strongly_convex,
+        table2_general_convex, table3_nonconvex, table4_pl,
+    )
+
+    harnesses = {
+        "table1": table1_strongly_convex.main,  # Table 1 (strongly convex)
+        "table2": table2_general_convex.main,  # Table 2 (general convex)
+        "table3": table3_nonconvex.main,  # Table 3 (nonconvex accuracy)
+        "table4": table4_pl.main,  # Table 4 (PL)
+        "fig2": fig2_convergence.main,  # Figure 2 (heterogeneity sweep)
+        "lower_bound": lower_bound_bench.main,  # Thm 5.4 / App G
+        "appj1": appj1_large_k.main,  # App J.1 (large K)
+        "ablation_selection": ablation_selection.main,  # Lemma H.2 on/off
+        "kernels": kernels_bench.main,  # Pallas kernels
+        "roofline": roofline.main,  # deliverable (g) report
+    }
+    only = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in harnesses.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn(quick=not args.full)
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: FedChain (Algo 1) on an exactly-ζ-controlled federated
+quadratic — reproduces the paper's core claim in ~30 seconds on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import algorithms as A, chain, runner, theory
+from repro.data import problems
+
+
+def main():
+    # a strongly convex federated problem with moderate heterogeneity
+    p = problems.quadratic_problem(
+        jax.random.PRNGKey(0), num_clients=8, dim=16, mu=0.1, beta=1.0,
+        zeta=2.0, sigma=0.5, sigma_f=0.05)
+    x0 = p.init_params(jax.random.PRNGKey(0))
+    rounds, k = 60, 32
+    print(f"problem: {p.name}  Δ={p.delta(x0):.2f}  κ={p.kappa():.0f}  R={rounds}")
+
+    fedavg = A.FedAvg.from_k(k, eta=0.3)
+    sgd = A.SGD(eta=0.3, k=k, mu_avg=p.mu)
+    asg = A.NesterovSGD(eta=0.2, mu=p.mu, beta=p.beta, k=k)
+
+    results = {}
+    for name, algo in [("FedAvg", fedavg), ("SGD", sgd), ("ASG", asg)]:
+        res = runner.run(algo, p, x0, rounds, jax.random.PRNGKey(1))
+        results[name] = float(res.history[-1])
+
+    for name, glob in [("FedAvg->SGD", sgd), ("FedAvg->ASG", asg)]:
+        ch = chain.fedchain(fedavg, glob, selection_k=k)
+        res = ch.run(p, x0, rounds, jax.random.PRNGKey(1))
+        results[name] = float(p.suboptimality(res.x_hat))
+
+    c = theory.Constants(delta=p.delta(x0), d=p.dist_sq(x0) ** 0.5, mu=p.mu,
+                         beta=p.beta, zeta=p.zeta, sigma=p.sigma, n=8, s=8, k=k)
+    print(f"\n{'method':>14s} {'F(x̂)−F*':>12s}")
+    for name, sub in sorted(results.items(), key=lambda kv: kv[1]):
+        print(f"{name:>14s} {sub:12.3e}")
+    print(f"\nalgorithm-independent lower bound (Thm 5.4): "
+          f"{theory.lower_bound_strongly_convex(c, rounds):.3e}")
+    best_chain = min(results["FedAvg->SGD"], results["FedAvg->ASG"])
+    best_base = min(results["FedAvg"], results["SGD"], results["ASG"])
+    print(f"chaining gain vs best single method: {best_base / best_chain:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.checkpoint.checkpoint import (
+    latest_step, latest_steps, load_checkpoint, restore, save_checkpoint,
+)
+
+__all__ = ["latest_step", "latest_steps", "load_checkpoint", "restore",
+           "save_checkpoint"]

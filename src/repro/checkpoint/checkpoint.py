@@ -1,0 +1,106 @@
+"""Numpy-based pytree checkpointing (no external deps).
+
+Layout: <dir>/step_<N>/arrays.npz + tree.json (structure + dtypes).
+Atomic via write-to-tmp + rename; ``keep`` rotates old checkpoints out.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+        names.append("/".join(parts))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    names, leaves, _ = _flatten_with_names(tree)
+
+    def to_numpy(leaf):
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind not in "fiub":  # bf16 (void kind) etc: store as f32
+            arr = arr.astype(np.float32)
+        return arr
+
+    arrays = {f"a{i}": to_numpy(leaf) for i, leaf in enumerate(leaves)}
+    meta = {
+        "step": step,
+        "names": names,
+        "dtypes": [str(np.asarray(jax.device_get(l)).dtype) for l in leaves],
+    }
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory)
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "tree.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # rotation
+    steps = sorted(latest_steps(directory))
+    for old in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{old:08d}"), ignore_errors=True)
+    return final
+
+
+def latest_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_"):
+            try:
+                out.append(int(name[5:]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def latest_step(directory: str):
+    steps = latest_steps(directory)
+    return steps[-1] if steps else None
+
+
+def load_checkpoint(directory: str, step: int):
+    """Returns (names, arrays) — raw contents."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "tree.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    arrays = [data[f"a{i}"] for i in range(len(meta["names"]))]
+    return meta, arrays
+
+
+def restore(directory: str, step: int, template):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    meta, arrays = load_checkpoint(directory, step)
+    names, leaves, treedef = _flatten_with_names(template)
+    by_name = dict(zip(meta["names"], arrays))
+    new_leaves = []
+    for name, leaf in zip(names, leaves):
+        if name not in by_name:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        arr = by_name[name]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {name}: {arr.shape} vs {leaf.shape}")
+        new_leaves.append(jnp.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -1,0 +1,11 @@
+from repro.configs.base import (
+    AttentionConfig, EncoderConfig, FrontendConfig, HybridConfig, INPUT_SHAPES,
+    InputShape, MLAConfig, MoEConfig, ModelConfig, SSMConfig, reduced,
+)
+from repro.configs.registry import ARCH_IDS, all_configs, get_config
+
+__all__ = [
+    "AttentionConfig", "EncoderConfig", "FrontendConfig", "HybridConfig",
+    "INPUT_SHAPES", "InputShape", "MLAConfig", "MoEConfig", "ModelConfig",
+    "SSMConfig", "reduced", "ARCH_IDS", "all_configs", "get_config",
+]

@@ -1,0 +1,35 @@
+"""arctic-480b — dense-MoE hybrid: 128-expert top-2 MoE + parallel dense
+residual MLP.
+
+[hf:Snowflake/snowflake-arctic-base] 35 layers, d_model=7168, 56 heads (GQA
+kv=8, head_dim 128), d_ff=4864, vocab=32000; MoE 128e top-2 with a dense
+residual MLP in parallel on every layer.
+"""
+from repro.configs.base import AttentionConfig, MoEConfig, ModelConfig, reduced
+
+ARCH_ID = "arctic-480b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="moe",
+        num_layers=35,
+        d_model=7168,
+        d_ff=4864,
+        vocab_size=32000,
+        attention=AttentionConfig(num_heads=56, num_kv_heads=8, head_dim=128),
+        moe=MoEConfig(
+            num_experts=128,
+            top_k=2,
+            d_expert=4864,
+            dense_residual_d_ff=4864,
+            capacity_factor=1.25,
+        ),
+        tie_embeddings=False,
+        source="hf:Snowflake/snowflake-arctic-base",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return reduced(config())

@@ -1,0 +1,224 @@
+"""Model/config schema for the architecture zoo.
+
+One ``ModelConfig`` describes any of the 10 assigned architectures; layers are
+grouped into structurally-homogeneous *segments* that the model code scans
+over (compile-time stays O(1) in depth). Per-layer differences that are
+metadata-only (sliding-window vs global attention, rope theta) ride along the
+scan as stacked per-layer arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    rope_theta_local: float = 10_000.0  # gemma3 uses a different theta for local layers
+    sliding_window: int = 0  # 0 => always global
+    local_global_period: int = 0  # gemma3: 6 => 5 local + 1 global per period
+    softmax_scale: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (DeepSeek-V3 / MiniCPM3)."""
+
+    num_heads: int
+    q_lora_rank: int
+    kv_lora_rank: int
+    nope_head_dim: int
+    rope_head_dim: int
+    v_head_dim: int
+    rope_theta: float = 10_000.0
+    absorb_decode: bool = False  # matmul-absorbed decode (perf variant, §Perf)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int
+    num_shared_experts: int = 0  # deepseek: 1 shared expert
+    dense_residual_d_ff: int = 0  # arctic: parallel dense MLP
+    first_dense_layers: int = 0  # deepseek: first 3 layers are dense
+    capacity_factor: float = 1.0
+    aux_loss_weight: float = 0.001
+    router_dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD."""
+
+    state_dim: int  # N
+    head_dim: int = 64  # P
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 64
+    num_groups: int = 1  # B/C groups
+
+    def num_heads(self, d_model: int) -> int:
+        return self.expand * d_model // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2: Mamba2 backbone with a single SHARED attention block applied
+    every ``period`` layers (weights reused at every application)."""
+
+    period: int = 6
+    shared_attn: Optional[AttentionConfig] = None
+    shared_d_ff: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Seamless-style encoder for enc-dec models (consumes frontend embeds)."""
+
+    num_layers: int
+    attention: AttentionConfig = None
+    d_ff: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    """Modality frontend STUB: input_specs provide precomputed embeddings of
+    shape [B, seq, dim] (per the assignment's carve-out for audio/vision)."""
+
+    kind: str  # "audio" | "vision"
+    seq: int
+    dim: int
+    prefix_bidirectional: bool = False  # paligemma prefix-LM mask over image tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    attention: Optional[AttentionConfig] = None
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    frontend: Optional[FrontendConfig] = None
+    tie_embeddings: bool = True
+    act: str = "silu"
+    norm_eps: float = 1e-6
+    dense_d_ff: int = 0  # d_ff of the first_dense_layers (deepseek)
+    mtp: bool = False  # deepseek multi-token-prediction head
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    max_seq_len: int = 131_072
+    subquadratic: bool = False  # eligible for long_500k decode
+    source: str = ""  # citation
+
+    # ------------------------------------------------------------------
+    def block_kinds(self) -> Tuple[Tuple[str, int], ...]:
+        """Consecutive (kind, count) segments of structurally-identical layers."""
+        if self.arch_type in ("ssm",):
+            return (("mamba", self.num_layers),)
+        if self.arch_type == "hybrid":
+            return (("mamba_hybrid", self.num_layers),)
+        if self.moe is not None and self.moe.first_dense_layers > 0:
+            return (
+                ("attn_dense", self.moe.first_dense_layers),
+                ("attn_moe", self.num_layers - self.moe.first_dense_layers),
+            )
+        if self.moe is not None:
+            return (("attn_moe", self.num_layers),)
+        return (("attn_dense", self.num_layers),)
+
+    def param_dtype(self):
+        import jax.numpy as jnp
+
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+
+# ---------------------------------------------------------------------------
+# Input shapes assigned to this paper
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A smoke-test variant of the same family: ≤2 layers, d_model ≤ 512,
+    ≤4 experts, small vocab — runs a forward/train step on CPU."""
+    small = dict(
+        num_layers=2,
+        d_model=min(cfg.d_model, 128),
+        d_ff=min(cfg.d_ff, 256),
+        vocab_size=min(cfg.vocab_size, 512),
+        dtype="float32",
+        remat=False,
+        max_seq_len=512,
+    )
+    if cfg.attention is not None:
+        small["attention"] = dataclasses.replace(
+            cfg.attention,
+            num_heads=min(cfg.attention.num_heads, 4),
+            num_kv_heads=min(cfg.attention.num_kv_heads, min(cfg.attention.num_heads, 4)),
+            head_dim=min(cfg.attention.head_dim, 32),
+            sliding_window=min(cfg.attention.sliding_window, 64) if cfg.attention.sliding_window else 0,
+            local_global_period=min(cfg.attention.local_global_period, 2) if cfg.attention.local_global_period else 0,
+        )
+    if cfg.mla is not None:
+        small["mla"] = dataclasses.replace(
+            cfg.mla, num_heads=4, q_lora_rank=32, kv_lora_rank=32,
+            nope_head_dim=16, rope_head_dim=8, v_head_dim=16,
+        )
+    if cfg.moe is not None:
+        small["moe"] = dataclasses.replace(
+            cfg.moe,
+            num_experts=min(cfg.moe.num_experts, 4),
+            top_k=min(cfg.moe.top_k, 2),
+            d_expert=min(cfg.moe.d_expert, 128),
+            first_dense_layers=min(cfg.moe.first_dense_layers, 1),
+            dense_residual_d_ff=min(cfg.moe.dense_residual_d_ff, 128) if cfg.moe.dense_residual_d_ff else 0,
+        )
+    if cfg.ssm is not None:
+        small["ssm"] = dataclasses.replace(cfg.ssm, state_dim=min(cfg.ssm.state_dim, 16), head_dim=32, chunk=16)
+    if cfg.hybrid is not None:
+        sa = cfg.hybrid.shared_attn
+        small["hybrid"] = dataclasses.replace(
+            cfg.hybrid, period=2,
+            shared_attn=dataclasses.replace(sa, num_heads=4, num_kv_heads=4, head_dim=32) if sa else None,
+            shared_d_ff=min(cfg.hybrid.shared_d_ff, 128) if cfg.hybrid.shared_d_ff else 0,
+        )
+    if cfg.encoder is not None:
+        small["encoder"] = dataclasses.replace(
+            cfg.encoder, num_layers=2,
+            attention=dataclasses.replace(
+                cfg.encoder.attention, num_heads=4, num_kv_heads=4, head_dim=32
+            ),
+            d_ff=min(cfg.encoder.d_ff, 256),
+        )
+    if cfg.frontend is not None:
+        small["frontend"] = dataclasses.replace(cfg.frontend, seq=min(cfg.frontend.seq, 16), dim=64)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

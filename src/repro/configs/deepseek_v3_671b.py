@@ -1,0 +1,46 @@
+"""deepseek-v3-671b — MoE with multi-head latent attention (MLA) and MTP.
+
+[arXiv:2412.19437] 61 layers, d_model=7168, 128 heads (MLA), per-expert
+d_ff=2048, vocab=129280; MoE = 1 shared + 256 routed experts, top-8; the first
+3 layers are dense (d_ff=18432 per the model card); multi-token-prediction
+(MTP) head. MLA dims per the model card: q_lora=1536, kv_lora=512,
+nope_head=128, rope_head=64, v_head=128.
+"""
+from repro.configs.base import MLAConfig, MoEConfig, ModelConfig, reduced
+
+ARCH_ID = "deepseek-v3-671b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="moe",
+        num_layers=61,
+        d_model=7168,
+        d_ff=2048,  # per-expert FF dim (assignment spec)
+        dense_d_ff=18432,  # the 3 dense layers (model card)
+        vocab_size=129280,
+        mla=MLAConfig(
+            num_heads=128,
+            q_lora_rank=1536,
+            kv_lora_rank=512,
+            nope_head_dim=128,
+            rope_head_dim=64,
+            v_head_dim=128,
+        ),
+        moe=MoEConfig(
+            num_experts=256,
+            top_k=8,
+            d_expert=2048,
+            num_shared_experts=1,
+            first_dense_layers=3,
+            capacity_factor=1.0,
+        ),
+        mtp=True,
+        tie_embeddings=False,
+        source="arXiv:2412.19437",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return reduced(config())

@@ -1,0 +1,39 @@
+"""gemma3-4b — dense LM with 5:1 local(sliding-window):global attention, 128k.
+
+[hf:google/gemma-3-1b-pt family] 34 layers, d_model=2560, 8 heads (GQA kv=4,
+head_dim 256), d_ff=10240, vocab=262144. Every 6th layer is global
+(rope theta 1M); local layers use a 1024-token sliding window (theta 10k).
+QK-norm per the Gemma-3 card. The sliding-window variant makes this dense
+arch eligible for the long_500k decode shape.
+"""
+from repro.configs.base import AttentionConfig, ModelConfig, reduced
+
+ARCH_ID = "gemma3-4b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="dense",
+        num_layers=34,
+        d_model=2560,
+        d_ff=10240,
+        vocab_size=262144,
+        attention=AttentionConfig(
+            num_heads=8,
+            num_kv_heads=4,
+            head_dim=256,
+            qk_norm=True,
+            sliding_window=1024,
+            local_global_period=6,  # 5 local : 1 global
+            rope_theta=1_000_000.0,
+            rope_theta_local=10_000.0,
+        ),
+        act="gelu",
+        subquadratic=True,  # sliding-window local layers (global layers decode O(S) reads)
+        source="hf:google/gemma-3-1b-pt",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return reduced(config())

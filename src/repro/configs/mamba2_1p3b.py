@@ -1,0 +1,26 @@
+"""mamba2-1.3b — pure SSM (attention-free), SSD state-space duality.
+
+[arXiv:2405.21060] 48 layers, d_model=2048, no attention (d_ff=0 — Mamba2
+blocks contain their own gated expansion), vocab=50280, ssm_state=128.
+"""
+from repro.configs.base import ModelConfig, SSMConfig, reduced
+
+ARCH_ID = "mamba2-1.3b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="ssm",
+        num_layers=48,
+        d_model=2048,
+        d_ff=0,
+        vocab_size=50280,
+        ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, chunk=128),
+        subquadratic=True,
+        source="arXiv:2405.21060",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return reduced(config())

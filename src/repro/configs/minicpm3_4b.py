@@ -1,0 +1,33 @@
+"""minicpm3-4b — dense LM with multi-head latent attention (MLA).
+
+[hf:openbmb/MiniCPM3-4B] 62 layers, d_model=2560, 40 heads (MLA), d_ff=6400,
+vocab=73448. MLA dims per the model card: q_lora=768, kv_lora=256,
+nope_head=64, rope_head=32, v_head=64.
+"""
+from repro.configs.base import MLAConfig, ModelConfig, reduced
+
+ARCH_ID = "minicpm3-4b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="dense",
+        num_layers=62,
+        d_model=2560,
+        d_ff=6400,
+        vocab_size=73448,
+        mla=MLAConfig(
+            num_heads=40,
+            q_lora_rank=768,
+            kv_lora_rank=256,
+            nope_head_dim=64,
+            rope_head_dim=32,
+            v_head_dim=64,
+        ),
+        source="hf:openbmb/MiniCPM3-4B",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return reduced(config())

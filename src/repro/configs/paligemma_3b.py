@@ -1,0 +1,30 @@
+"""paligemma-3b — VLM: SigLIP vision encoder (STUB) + Gemma-2B language model.
+
+[arXiv:2407.07726] LM backbone: 18 layers, d_model=2048, 8 heads (MQA,
+kv=1, head_dim 256), d_ff=16384 (GeGLU), vocab=257216. The SigLIP encoder +
+projector is a STUB per the assignment: ``input_specs`` provides precomputed
+patch embeddings [B, 256, 1152]; the image prefix attends bidirectionally
+(prefix-LM mask), text is causal.
+"""
+from repro.configs.base import AttentionConfig, FrontendConfig, ModelConfig, reduced
+
+ARCH_ID = "paligemma-3b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="vlm",
+        num_layers=18,
+        d_model=2048,
+        d_ff=16384,
+        vocab_size=257216,
+        attention=AttentionConfig(num_heads=8, num_kv_heads=1, head_dim=256),
+        frontend=FrontendConfig(kind="vision", seq=256, dim=1152, prefix_bidirectional=True),
+        act="gelu",
+        source="arXiv:2407.07726",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return reduced(config())

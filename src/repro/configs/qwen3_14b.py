@@ -1,0 +1,29 @@
+"""qwen3-14b — dense GQA with QK-norm.
+
+[hf:Qwen/Qwen3-8B family] 40 layers, d_model=5120, 40 heads (GQA kv=8,
+head_dim 128), d_ff=17408, vocab=151936, qk_norm.
+"""
+from repro.configs.base import AttentionConfig, ModelConfig, reduced
+
+ARCH_ID = "qwen3-14b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="dense",
+        num_layers=40,
+        d_model=5120,
+        d_ff=17408,
+        vocab_size=151936,
+        attention=AttentionConfig(
+            num_heads=40, num_kv_heads=8, head_dim=128, qk_norm=True,
+            rope_theta=1_000_000.0,
+        ),
+        tie_embeddings=False,
+        source="hf:Qwen/Qwen3-8B",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return reduced(config())

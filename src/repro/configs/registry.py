@@ -1,0 +1,30 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/tests."""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "zamba2-1.2b": "repro.configs.zamba2_1p2b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "mamba2-1.3b": "repro.configs.mamba2_1p3b",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "yi-34b": "repro.configs.yi_34b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str, *, smoke: bool = False):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[arch_id])
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def all_configs(*, smoke: bool = False):
+    return {a: get_config(a, smoke=smoke) for a in ARCH_IDS}

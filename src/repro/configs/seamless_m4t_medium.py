@@ -1,0 +1,33 @@
+"""seamless-m4t-medium — audio encoder-decoder transformer backbone.
+
+[arXiv:2308.11596] 12 layers (encoder + decoder), d_model=1024, 16H (GQA
+kv=16, head_dim 64), d_ff=4096, vocab=256206. The mel-spectrogram + conformer
+feature frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings [B, frames, 1024].
+"""
+from repro.configs.base import (
+    AttentionConfig, EncoderConfig, FrontendConfig, ModelConfig, reduced,
+)
+
+ARCH_ID = "seamless-m4t-medium"
+
+
+def config() -> ModelConfig:
+    attn = AttentionConfig(num_heads=16, num_kv_heads=16, head_dim=64)
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="audio",
+        num_layers=12,  # decoder layers (self + cross attention)
+        d_model=1024,
+        d_ff=4096,
+        vocab_size=256206,
+        attention=attn,
+        encoder=EncoderConfig(num_layers=12, attention=attn, d_ff=4096),
+        frontend=FrontendConfig(kind="audio", seq=1024, dim=1024),
+        tie_embeddings=True,
+        source="arXiv:2308.11596",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return reduced(config())

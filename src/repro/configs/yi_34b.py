@@ -1,0 +1,26 @@
+"""yi-34b — llama-architecture dense GQA.
+
+[arXiv:2403.04652] 60 layers, d_model=7168, 56 heads (GQA kv=8, head_dim 128),
+d_ff=20480, vocab=64000.
+"""
+from repro.configs.base import AttentionConfig, ModelConfig, reduced
+
+ARCH_ID = "yi-34b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="dense",
+        num_layers=60,
+        d_model=7168,
+        d_ff=20480,
+        vocab_size=64000,
+        attention=AttentionConfig(num_heads=56, num_kv_heads=8, head_dim=128),
+        tie_embeddings=False,
+        source="arXiv:2403.04652",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return reduced(config())

@@ -1,0 +1,35 @@
+"""zamba2-1.2b — hybrid Mamba2 backbone + shared attention blocks.
+
+[arXiv:2411.15242] 38 layers, d_model=2048, shared attn 32H (GQA kv=32,
+head_dim 64) + d_ff=8192 MLP, vocab=32000, ssm_state=64. The single shared
+transformer block is re-applied every ``period`` Mamba2 layers with the SAME
+weights (Zamba's parameter-sharing trick).
+"""
+from repro.configs.base import (
+    AttentionConfig, HybridConfig, ModelConfig, SSMConfig, reduced,
+)
+
+ARCH_ID = "zamba2-1.2b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        arch_type="hybrid",
+        num_layers=38,
+        d_model=2048,
+        d_ff=8192,
+        vocab_size=32000,
+        ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, chunk=128),
+        hybrid=HybridConfig(
+            period=6,
+            shared_attn=AttentionConfig(num_heads=32, num_kv_heads=32, head_dim=64),
+            shared_d_ff=8192,
+        ),
+        subquadratic=True,  # SSM backbone; shared-attn decode is O(1)/token compute
+        source="arXiv:2411.15242",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return reduced(config())

@@ -1,0 +1,8 @@
+"""FedChain core: the paper's contribution as a composable JAX module."""
+from repro.core import algorithms, chain, heterogeneity, lower_bound, runner, selection, theory, tree_math
+from repro.core.chain import Chain, fedchain
+
+__all__ = [
+    "algorithms", "chain", "heterogeneity", "lower_bound", "runner",
+    "selection", "theory", "tree_math", "Chain", "fedchain",
+]

@@ -1,0 +1,14 @@
+"""Federated optimization algorithms (the paper's Algos 2–7)."""
+from repro.core.algorithms.base import FederatedAlgorithm, grad_k, sample_clients, value_k
+from repro.core.algorithms.sgd import SGD
+from repro.core.algorithms.asg import ACSA, NesterovSGD, multistage_acsa_schedule
+from repro.core.algorithms.fedavg import FedAvg
+from repro.core.algorithms.scaffold import FedProx, Scaffold
+from repro.core.algorithms.saga import SAGA
+from repro.core.algorithms.ssnm import SSNM
+
+__all__ = [
+    "FederatedAlgorithm", "grad_k", "sample_clients", "value_k",
+    "SGD", "ACSA", "NesterovSGD", "multistage_acsa_schedule",
+    "FedAvg", "Scaffold", "FedProx", "SAGA", "SSNM",
+]

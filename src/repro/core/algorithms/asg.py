@@ -1,0 +1,150 @@
+"""Accelerated SGD — the paper's Algorithm 3 (AC-SA, Ghadimi & Lan) plus the
+practical Nesterov variant the paper actually runs in experiments (App. I.1,
+"the more easily implementable version in Aybat et al. (2019)").
+
+AC-SA round r (1-indexed), with α_r = 2/(r+1), γ_r = 4φ/(r(r+1)):
+
+  x_md = [(1−α)(μ+γ)·x_ag + α((1−α)μ+γ)·x] / (γ + (1−α²)μ)
+  g    = mean_i Grad(x_md)
+  x    = [αμ·x_md + ((1−α)μ+γ)·x_prev − α·g] / (μ + γ)
+  x_ag = α·x + (1−α)·x_ag
+
+The closed-form x-update solves Algo 3's argmin exactly.
+
+``MultistageACSA`` implements the Thm. D.3 stage schedule (R_s doubling,
+φ_s shrinking) used for the theory-facing experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_math as tm
+from repro.core.algorithms import base
+
+
+class ACSAState(NamedTuple):
+    x: object
+    x_ag: object
+    eta: jnp.ndarray  # unused by AC-SA updates; kept for wrapper compat
+    phi: jnp.ndarray
+    r: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class ACSA(base.FederatedAlgorithm):
+    """Single-stage AC-SA (Algo 3)."""
+
+    mu: float = 0.0
+    beta: float = 1.0
+    phi: float = 0.0  # 0 => use 2*beta (Thm. D.3 low-variance regime)
+    name: str = "acsa"
+
+    def init(self, problem, x0):
+        phi = self.phi if self.phi > 0 else 2.0 * self.beta
+        return ACSAState(
+            x=x0, x_ag=x0, eta=jnp.asarray(self.eta),
+            phi=jnp.asarray(phi), r=jnp.asarray(1),
+        )
+
+    def round(self, problem, state, key):
+        k_sample, k_grad = jax.random.split(key)
+        s = self.participation(problem)
+        cids = base.sample_clients(k_sample, problem.num_clients, s)
+
+        r = state.r.astype(jnp.float32)
+        alpha = 2.0 / (r + 1.0)
+        gamma = 4.0 * state.phi / (r * (r + 1.0))
+        mu = self.mu
+
+        denom_md = gamma + (1.0 - alpha**2) * mu
+        ca = (1.0 - alpha) * (mu + gamma) / denom_md
+        cb = alpha * ((1.0 - alpha) * mu + gamma) / denom_md
+        x_md = jax.tree.map(lambda a, b: ca * a + cb * b, state.x_ag, state.x)
+
+        g = tm.tree_mean_leading(base.grad_k(problem, x_md, cids, k_grad, self.k))
+
+        denom_x = mu + gamma
+        x = jax.tree.map(
+            lambda xm, xp, gg: (alpha * mu * xm + ((1 - alpha) * mu + gamma) * xp - alpha * gg) / denom_x,
+            x_md, state.x, g,
+        )
+        x_ag = tm.tree_lerp(alpha, state.x_ag, x)
+        return ACSAState(x=x, x_ag=x_ag, eta=state.eta, phi=state.phi, r=state.r + 1)
+
+    def output(self, state):
+        return state.x_ag
+
+
+class NesterovState(NamedTuple):
+    x: object
+    v: object  # momentum buffer
+    eta: jnp.ndarray
+    r: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class NesterovSGD(base.FederatedAlgorithm):
+    """Practical accelerated SGD: Nesterov momentum on the global gradient.
+
+    This is what the paper's experiments use for "ASG"; momentum defaults to
+    the strongly-convex optimal (√κ−1)/(√κ+1) when μ>0.
+    """
+
+    mu: float = 0.0
+    beta: float = 1.0
+    momentum: float = -1.0  # <0 => derive from kappa
+    name: str = "asg"
+
+    def _momentum(self):
+        if self.momentum >= 0:
+            return self.momentum
+        if self.mu > 0:
+            sk = (self.beta / self.mu) ** 0.5
+            return (sk - 1.0) / (sk + 1.0)
+        return 0.9
+
+    def init(self, problem, x0):
+        return NesterovState(
+            x=x0, v=tm.tree_zeros_like(x0), eta=jnp.asarray(self.eta), r=jnp.asarray(0),
+        )
+
+    def round(self, problem, state, key):
+        k_sample, k_grad = jax.random.split(key)
+        s = self.participation(problem)
+        cids = base.sample_clients(k_sample, problem.num_clients, s)
+        m = self._momentum()
+        # lookahead point
+        x_look = tm.tree_axpy(m, state.v, state.x)
+        g = tm.tree_mean_leading(base.grad_k(problem, x_look, cids, k_grad, self.k))
+        v = jax.tree.map(lambda vv, gg: m * vv - state.eta * gg, state.v, g)
+        x = tm.tree_add(state.x, v)
+        return NesterovState(x=x, v=v, eta=state.eta, r=state.r + 1)
+
+    def output(self, state):
+        return state.x
+
+
+def multistage_acsa_schedule(*, mu, beta, delta, c_var, total_rounds):
+    """Thm. D.3 stage schedule: returns a list of (num_rounds, phi) stages.
+
+    R_s = max{4√(4β/μ), 128 c /(3 μ Δ 2^{−(s+1)})},
+    φ_s = max{2β, √( μ c / (3 Δ 2^{−(s−1)} R_s (R_s+1)(R_s+2)) )}.
+    Stages are emitted until the round budget is spent.
+    """
+    stages = []
+    used = 0
+    s = 1
+    while used < total_rounds and s < 64:
+        r_s = int(max(4 * (4 * beta / max(mu, 1e-12)) ** 0.5,
+                      128.0 * c_var / max(3 * mu * delta * 2.0 ** (-(s + 1)), 1e-12)))
+        r_s = max(1, min(r_s, total_rounds - used))
+        denom = 3 * delta * 2.0 ** (-(s - 1)) * r_s * (r_s + 1) * (r_s + 2)
+        phi_s = max(2 * beta, (mu * c_var / max(denom, 1e-12)) ** 0.5)
+        stages.append((r_s, phi_s))
+        used += r_s
+        s += 1
+    return stages

@@ -1,0 +1,101 @@
+"""Common machinery for federated algorithms (Algos 2–7 of the paper).
+
+Conventions
+-----------
+* An algorithm is a small frozen dataclass of hyperparameters with
+
+    init(problem, x0)            -> state   (a NamedTuple of pytrees)
+    round(problem, state, key)   -> state   (ONE communication round, jittable)
+    output(state)                -> params  (the returned iterate x̂)
+
+* ``state.x`` is always the current server iterate and ``state.eta`` the
+  current stepsize (kept in state so stepsize-decay wrappers can anneal it).
+* Client sampling is uniform without replacement (paper §2).
+* ``Grad`` (Algo 7): each sampled client averages K stochastic gradient
+  queries at the server iterate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_math as tm
+
+
+def sample_clients(key, num_clients: int, s: int):
+    """S of N uniformly without replacement (paper §2)."""
+    return jax.random.choice(key, num_clients, (s,), replace=False)
+
+
+def grad_k(problem, x, client_ids, key, k: int):
+    """Algo 7 ``Grad``: per-client average of K stochastic gradients at x.
+
+    Returns a pytree whose leaves have a leading [S] axis.
+    """
+    s = client_ids.shape[0]
+    keys = jax.random.split(key, s * k).reshape(s, k, -1)
+
+    def per_client(cid, ks):
+        gs = jax.vmap(lambda kk: problem.grad_oracle(x, cid, kk))(ks)
+        return tm.tree_mean_leading(gs)
+
+    return jax.vmap(per_client)(client_ids, keys)
+
+
+def value_k(problem, x, client_ids, key, k: int):
+    """Average of K stochastic function-value queries per client, then mean."""
+    s = client_ids.shape[0]
+    keys = jax.random.split(key, s * k).reshape(s, k, -1)
+
+    def per_client(cid, ks):
+        vs = jax.vmap(lambda kk: problem.value_oracle(x, cid, kk))(ks)
+        return jnp.mean(vs)
+
+    return jnp.mean(jax.vmap(per_client)(client_ids, keys))
+
+
+class AvgTracker(NamedTuple):
+    """Numerically-stable tracker for x̂ = (1/W_R)·Σ w_r x_r, w_r=(1−ημ)^{−r}.
+
+    Normalized recurrence: W'_r = 1 + (1−ημ)·W'_{r−1};
+    avg_r = avg_{r−1} + (x_r − avg_{r−1}) / W'_r.
+    """
+
+    avg: object
+    wprime: jnp.ndarray
+
+    @staticmethod
+    def init(x):
+        return AvgTracker(avg=x, wprime=jnp.asarray(1.0))
+
+    def update(self, x, decay: jnp.ndarray):
+        """decay = (1 − ημ) ∈ (0, 1]; decay=1 gives the uniform average."""
+        wprime = 1.0 + decay * self.wprime
+        avg = jax.tree.map(lambda a, b: a + (b - a) / wprime, self.avg, x)
+        return AvgTracker(avg=avg, wprime=wprime)
+
+
+@dataclasses.dataclass(frozen=True)
+class FederatedAlgorithm:
+    """Base class; concrete algorithms override init/round/output."""
+
+    eta: float = 0.1
+    k: int = 16  # oracle queries per client per round (paper's K)
+    s: int = 0  # sampled clients per round; 0 => full participation (S=N)
+    name: str = "base"
+
+    def participation(self, problem):
+        return self.s if self.s and self.s > 0 else problem.num_clients
+
+    # --- to be overridden -------------------------------------------------
+    def init(self, problem, x0):
+        raise NotImplementedError
+
+    def round(self, problem, state, key):
+        raise NotImplementedError
+
+    def output(self, state):
+        return state.x

@@ -1,0 +1,73 @@
+"""FedAvg — the paper's Algorithm 4 (local-update method).
+
+The paper's parametrization splits the per-round oracle budget K into √K
+outer local steps, each using a √K-sample-averaged stochastic gradient. We
+expose (local_steps, inner_batch) directly and provide ``from_k`` for the
+paper's √K×√K convention.
+
+Server update: x^{r+1} = x^r − server_lr · mean_i Σ_k η·g_{i,k}
+             = (1 − server_lr)·x^r + server_lr · mean_i x_{i,final}
+(the paper uses server_lr = 1, i.e. plain iterate averaging).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_math as tm
+from repro.core.algorithms import base
+
+
+class FedAvgState(NamedTuple):
+    x: object
+    eta: jnp.ndarray
+    r: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvg(base.FederatedAlgorithm):
+    local_steps: int = 4  # √K in the paper
+    inner_batch: int = 4  # gradient samples averaged per local step (√K)
+    server_lr: float = 1.0
+    name: str = "fedavg"
+
+    @classmethod
+    def from_k(cls, k: int, **kw):
+        root = max(1, int(round(math.sqrt(k))))
+        return cls(k=k, local_steps=root, inner_batch=root, **kw)
+
+    def _local(self, problem, x0, cid, key, eta):
+        """Local SGD steps on client ``cid``; returns the final local iterate."""
+
+        def step(carry, k_step):
+            y = carry
+            ks = jax.random.split(k_step, self.inner_batch)
+            gs = jax.vmap(lambda kk: problem.grad_oracle(y, cid, kk))(ks)
+            g = tm.tree_mean_leading(gs)
+            return tm.tree_axpy(-eta, g, y), None
+
+        keys = jax.random.split(key, self.local_steps)
+        y, _ = jax.lax.scan(step, x0, keys)
+        return y
+
+    def round(self, problem, state, key):
+        k_sample, k_local = jax.random.split(key)
+        s = self.participation(problem)
+        cids = base.sample_clients(k_sample, problem.num_clients, s)
+        keys = jax.random.split(k_local, s)
+        y_final = jax.vmap(
+            lambda cid, kk: self._local(problem, state.x, cid, kk, state.eta)
+        )(cids, keys)
+        y_mean = tm.tree_mean_leading(y_final)
+        x = tm.tree_lerp(self.server_lr, state.x, y_mean)
+        return FedAvgState(x=x, eta=state.eta, r=state.r + 1)
+
+    def init(self, problem, x0):
+        return FedAvgState(x=x0, eta=jnp.asarray(self.eta), r=jnp.asarray(0))
+
+    def output(self, state):
+        return state.x

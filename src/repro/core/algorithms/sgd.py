@@ -1,0 +1,59 @@
+"""SGD — the paper's Algorithm 2 (global-update method).
+
+Each round: sample S clients, every sampled client returns the average of K
+stochastic gradients at the server iterate (Algo 7), the server averages and
+takes one step. The returned iterate follows Thm. D.1:
+
+  * strongly convex: weighted average with w_r = (1 − ημ)^{−(r+1)}
+  * general convex:  uniform average
+  * PL:              last iterate
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import tree_math as tm
+from repro.core.algorithms import base
+
+
+class SGDState(NamedTuple):
+    x: object
+    tracker: base.AvgTracker
+    eta: jnp.ndarray
+    r: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD(base.FederatedAlgorithm):
+    mu_avg: float = 0.0  # μ used for the Thm. D.1 averaging weights
+    output_mode: str = "weighted_avg"  # weighted_avg | uniform_avg | last
+    name: str = "sgd"
+
+    def init(self, problem, x0):
+        return SGDState(
+            x=x0,
+            tracker=base.AvgTracker.init(x0),
+            eta=jnp.asarray(self.eta),
+            r=jnp.asarray(0),
+        )
+
+    def round(self, problem, state, key):
+        import jax
+
+        k_sample, k_grad = jax.random.split(key)
+        s = self.participation(problem)
+        cids = base.sample_clients(k_sample, problem.num_clients, s)
+        g_per = base.grad_k(problem, state.x, cids, k_grad, self.k)
+        g = tm.tree_mean_leading(g_per)
+        x = tm.tree_axpy(-state.eta, g, state.x)
+        decay = jnp.asarray(1.0 - state.eta * self.mu_avg)
+        tracker = state.tracker.update(x, jnp.clip(decay, 0.0, 1.0))
+        return SGDState(x=x, tracker=tracker, eta=state.eta, r=state.r + 1)
+
+    def output(self, state):
+        if self.output_mode == "last":
+            return state.x
+        return state.tracker.avg

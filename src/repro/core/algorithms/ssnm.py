@@ -1,0 +1,123 @@
+"""SSNM (Zhou et al. 2019) — the paper's Algorithm 6: Nesterov-accelerated
+SAGA via sampled negative momentum.
+
+The client losses are viewed as F_i(x) = F̃_i(x) + h(x), with h(x) = μ_h/2·||x||²
+the strongly-convex part (paper App. D.4: the usual strong-convexity assumption
+converts to this form). The oracle returns ∇F_i, so ∇F̃_i(y) = ∇F_i(y) − μ_h·y.
+
+Round r (with per-client snapshots φ_i and control variates c_i = ∇F̃_i(φ_i)):
+  sample S:        y_i = τ·x + (1−τ)·φ_i,  i ∈ S
+  g = mean_i(∇F̃_i(y_i) − c_i) + c̄
+  x⁺ = argmin_x h(x) + ⟨g, x⟩ + 1/(2η)||x − x_r||²  =  (x_r − η·g)/(1 + η·μ_h)
+  fresh sample S′: φ_I ← τ·x⁺ + (1−τ)·φ_I,  c_I ← ∇F̃_I(φ_I⁺)
+
+Parameter choices follow Thm. D.5's two cases on (N/S)/κ.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_math as tm
+from repro.core.algorithms import base
+
+
+class SSNMState(NamedTuple):
+    x: object
+    phi_table: object  # [N, ...] snapshots
+    c_table: object  # [N, ...] ∇F̃_i(φ_i)
+    c_mean: object
+    eta: jnp.ndarray
+    r: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class SSNM(base.FederatedAlgorithm):
+    mu_h: float = 0.1  # strong convexity of h
+    beta: float = 1.0
+    tau: float = -1.0  # <0 => derive via Thm. D.5
+    name: str = "ssnm"
+
+    def hyper(self, problem):
+        """Thm. D.5 stepsize/momentum: two cases on (N/S)/κ."""
+        n = problem.num_clients
+        s = self.participation(problem)
+        kappa = self.beta / self.mu_h
+        ratio = (n / s) / kappa
+        if ratio > 0.75:
+            eta = 1.0 / (2.0 * self.mu_h * (n / s))
+        else:
+            eta = (1.0 / (3.0 * self.mu_h * (n / s) * self.beta)) ** 0.5
+        tau = self.tau if self.tau >= 0 else ((n / s) * eta * self.mu_h) / (1.0 + eta * self.mu_h)
+        return eta, tau
+
+    def _tilde_grad_k(self, problem, y, cid, key):
+        ks = jax.random.split(key, self.k)
+        gs = jax.vmap(lambda kk: problem.grad_oracle(y, cid, kk))(ks)
+        g = tm.tree_mean_leading(gs)
+        return jax.tree.map(lambda gg, yy: gg - self.mu_h * yy, g, y)
+
+    def init(self, problem, x0):
+        n = problem.num_clients
+        eta, _ = self.hyper(problem)
+        phi = tm.tree_broadcast_leading(x0, n)
+
+        def c0(i):
+            g = jax.grad(problem.client_loss)(x0, i)
+            return jax.tree.map(lambda gg, yy: gg - self.mu_h * yy, g, x0)
+
+        c_table = jax.vmap(c0)(jnp.arange(n))
+        return SSNMState(
+            x=x0, phi_table=phi, c_table=c_table,
+            c_mean=tm.tree_mean_leading(c_table),
+            eta=jnp.asarray(eta), r=jnp.asarray(0),
+        )
+
+    def round(self, problem, state, key):
+        k_s1, k_g1, k_s2, k_g2 = jax.random.split(key, 4)
+        s = self.participation(problem)
+        n = problem.num_clients
+        eta, tau = self.hyper(problem)
+        eta = state.eta  # annealable
+
+        cids = base.sample_clients(k_s1, n, s)
+        phi_i = jax.tree.map(lambda t: t[cids], state.phi_table)
+        c_i = jax.tree.map(lambda t: t[cids], state.c_table)
+        y_i = jax.tree.map(lambda p, xx: tau * xx[None] + (1 - tau) * p, phi_i,
+                           jax.tree.map(lambda l: l, state.x))
+        keys = jax.random.split(k_g1, s)
+        g_per = jax.vmap(lambda cid, y, kk: self._tilde_grad_k(problem, y, cid, kk))(
+            cids, y_i, keys
+        )
+        g = jax.tree.map(
+            lambda gp, ci, cm: jnp.mean(gp - ci, axis=0) + cm, g_per, c_i, state.c_mean
+        )
+        x_new = jax.tree.map(
+            lambda xx, gg: (xx - eta * gg) / (1.0 + eta * self.mu_h), state.x, g
+        )
+
+        # fresh sample S' for snapshot/control updates
+        cids2 = base.sample_clients(k_s2, n, s)
+        phi_old2 = jax.tree.map(lambda t: t[cids2], state.phi_table)
+        phi_new2 = jax.tree.map(lambda p, xx: tau * xx[None] + (1 - tau) * p, phi_old2,
+                                jax.tree.map(lambda l: l, x_new))
+        keys2 = jax.random.split(k_g2, s)
+        c_new2 = jax.vmap(lambda cid, p, kk: self._tilde_grad_k(problem, p, cid, kk))(
+            cids2, phi_new2, keys2
+        )
+        c_old2 = jax.tree.map(lambda t: t[cids2], state.c_table)
+        phi_table = tm.tree_scatter_set(state.phi_table, cids2, phi_new2)
+        c_table = tm.tree_scatter_set(state.c_table, cids2, c_new2)
+        delta = tm.tree_mean_leading(jax.tree.map(jnp.subtract, c_new2, c_old2))
+        c_mean = tm.tree_axpy(s / n, delta, state.c_mean)
+
+        return SSNMState(
+            x=x_new, phi_table=phi_table, c_table=c_table, c_mean=c_mean,
+            eta=state.eta, r=state.r + 1,
+        )
+
+    def output(self, state):
+        return state.x

@@ -1,0 +1,99 @@
+"""FedChain — the paper's Algorithm 1, plus multi-stage generalizations.
+
+  x̂_1/2 ← A_local(x̂_0)                      (local_fraction · R rounds)
+  x̂_1   ← better of {x̂_0, x̂_1/2}            (Lemma H.2 selection, S clients × K samples)
+  x̂_2   ← A_global(x̂_1)                     (remaining rounds)
+
+``Chain`` also supports >2 stages (e.g. FedAvg→SCAFFOLD→SGD) and optional
+per-stage stepsize decay — the "multistage algorithms" of Fig. 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import runner as runner_lib
+from repro.core import selection
+
+
+@dataclasses.dataclass
+class ChainResult:
+    x_hat: object
+    history: jnp.ndarray  # concatenated per-round suboptimality
+    switch_rounds: list  # round indices where a stage switch happened
+    selected_initial: list  # per switch: True if selection kept the pre-stage point
+
+
+@dataclasses.dataclass(frozen=True)
+class Chain:
+    """A FedChain instantiation: an ordered list of algorithms + fractions."""
+
+    stages: Sequence[object]  # algorithm instances
+    fractions: Sequence[float]  # round fractions per stage (sums to <= 1)
+    selection_s: int = 0  # 0 => full participation
+    selection_k: int = 16
+    select_between_stages: bool = True
+    selection_costs_round: bool = True
+    name: str = "chain"
+
+    def run(self, problem, x0, rounds: int, key, *, decay: Optional[dict] = None):
+        """Execute the chain for a total budget of ``rounds`` communication rounds."""
+        assert len(self.stages) == len(self.fractions)
+        budgets = [max(1, int(round(f * rounds))) for f in self.fractions]
+        # spend any rounding surplus/deficit on the last stage
+        budgets[-1] += rounds - sum(budgets) - (
+            (len(self.stages) - 1) if (self.select_between_stages and self.selection_costs_round) else 0
+        )
+        budgets[-1] = max(1, budgets[-1])
+
+        f_star = problem.f_star if problem.f_star is not None else 0.0
+        x = x0
+        hist = []
+        switch_rounds = []
+        selected_initial = []
+        total = 0
+        sel_s = self.selection_s if self.selection_s > 0 else problem.num_clients
+        keys = jax.random.split(key, 2 * len(self.stages))
+
+        for i, (algo, budget) in enumerate(zip(self.stages, budgets)):
+            k_run, k_sel = keys[2 * i], keys[2 * i + 1]
+            if decay is not None:
+                res = runner_lib.run_with_decay(algo, problem, x, budget, k_run, **decay)
+            else:
+                res = runner_lib.run(algo, problem, x, budget, k_run)
+            hist.append(res.history)
+            total += budget
+            x_candidate = res.x_hat
+            if i + 1 < len(self.stages) and self.select_between_stages:
+                best, idx, _ = selection.select_better(
+                    problem, [x, x_candidate], k_sel, s=sel_s, k=self.selection_k
+                )
+                selected_initial.append(bool(idx == 0))
+                x = best
+                if self.selection_costs_round:
+                    hist.append(jnp.asarray([problem.global_loss(x) - f_star]))
+                    total += 1
+            else:
+                x = x_candidate
+            switch_rounds.append(total)
+
+        return ChainResult(
+            x_hat=x,
+            history=jnp.concatenate(hist),
+            switch_rounds=switch_rounds[:-1],
+            selected_initial=selected_initial,
+        )
+
+
+def fedchain(a_local, a_global, *, local_fraction: float = 0.5, **kw) -> Chain:
+    """The canonical two-stage FedChain (Algo 1)."""
+    name = kw.pop("name", f"{a_local.name}->{a_global.name}")
+    return Chain(
+        stages=[a_local, a_global],
+        fractions=[local_fraction, 1.0 - local_fraction],
+        name=name,
+        **kw,
+    )

@@ -1,0 +1,51 @@
+"""Estimators for the paper's problem constants.
+
+ζ² (Assumption B.5) is a sup over x — we estimate it by maximizing over a set
+of probe points (trajectory iterates and/or random points in a ball), which
+lower-bounds the true ζ and is exact for the constructions in
+``repro.data.problems`` whose gradient differences are constant in x.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_math as tm
+
+
+def zeta_at(problem, x):
+    """max_i ||∇F_i(x) − ∇F(x)|| at a single point x."""
+    g_bar = jax.grad(problem.global_loss)(x)
+
+    def one(i):
+        g_i = jax.grad(problem.client_loss)(x, i)
+        return tm.tree_sq_norm(tm.tree_sub(g_i, g_bar))
+
+    sq = jax.vmap(one)(jnp.arange(problem.num_clients))
+    return jnp.sqrt(jnp.max(sq))
+
+
+def estimate_zeta(problem, probes):
+    """max over probe points of zeta_at — a lower bound on the true ζ."""
+    vals = jnp.stack([zeta_at(problem, x) for x in probes])
+    return jnp.max(vals)
+
+
+def zeta_f_at(problem, x):
+    """max_i |F_i(x) − F(x)| at a point (Assumption B.8 analogue)."""
+    f_bar = problem.global_loss(x)
+
+    def one(i):
+        return jnp.abs(problem.client_loss(x, i) - f_bar)
+
+    return jnp.max(jax.vmap(one)(jnp.arange(problem.num_clients)))
+
+
+def estimate_sigma(problem, x, key, *, client_id=0, samples: int = 256):
+    """Monte-Carlo estimate of the gradient-oracle std at x (Assumption B.6)."""
+    keys = jax.random.split(key, samples)
+    gs = jax.vmap(lambda k: problem.grad_oracle(x, client_id, k))(keys)
+    mean = tm.tree_mean_leading(gs)
+    sq = jax.vmap(lambda i: tm.tree_sq_norm(
+        tm.tree_sub(jax.tree.map(lambda t: t[i], gs), mean)))(jnp.arange(samples))
+    return jnp.sqrt(jnp.mean(sq))

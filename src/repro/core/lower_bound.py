@@ -1,0 +1,160 @@
+"""The App. G lower-bound construction (Thm. 5.4) as an executable problem.
+
+Two quadratic clients on R^d (d even):
+
+  F₁(x) = −ℓ₂·ζ̂·x₁ + (C·ℓ₂/2)·x_d² + (ℓ₂/2)·Σ_{i=1}^{d/2−1}(x_{2i+1} − x_{2i})²
+          + (μ/2)·||x||²
+  F₂(x) = (ℓ₂/2)·Σ_{i=1}^{d/2}(x_{2i} − x_{2i−1})² + (μ/2)·||x||²
+  F = (F₁ + F₂)/2
+
+with α = √(1 + 2ℓ₂/μ), q = (α−1)/(α+1), C = 1 − q. Key properties (App. G):
+
+  * F, F₁, F₂ are μ-strongly convex and β-smooth for ℓ₂ ≤ (β−μ)/4;
+  * the zero-chain property (Eqs. 276–277): from span{e₁..e_{2i}} only ∇F₁
+    unlocks coordinate 2i+1, and from span{e₁..e_{2i−1}} only ∇F₂ unlocks 2i
+    ⇒ any distributed zero-respecting algorithm gains ≤ 1 coordinate per
+    communication round (Lemma G.4);
+  * x*_j = (ζ̂/(1−q))·q^j  and  F(x̂) − F* ≥ (μ ζ̂² q²/(16(1−q)²(1−q²)))·q^{2R}.
+
+Indices above are the paper's 1-based maths; code is 0-based.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LowerBoundInstance:
+    dim: int
+    ell2: float
+    mu: float
+    zeta_hat: float
+
+    @property
+    def alpha(self):
+        return (1.0 + 2.0 * self.ell2 / self.mu) ** 0.5
+
+    @property
+    def q(self):
+        a = self.alpha
+        return (a - 1.0) / (a + 1.0)
+
+    @property
+    def c_coef(self):
+        return 1.0 - self.q
+
+    # ---- objectives -------------------------------------------------------
+    def f1(self, x):
+        l2, mu, zh, c = self.ell2, self.mu, self.zeta_hat, self.c_coef
+        d = self.dim
+        # pairs (x_{2i+1} - x_{2i}) for i = 1..d/2-1  -> 0-based (x[2i] - x[2i-1]),
+        # i.e. odd->even couplings: x[2], x[1]; x[4], x[3]; ...
+        odd_even = x[2::2] - x[1:-1:2]  # length d/2 - 1
+        return (
+            -l2 * zh * x[0]
+            + 0.5 * c * l2 * x[d - 1] ** 2
+            + 0.5 * l2 * jnp.sum(odd_even**2)
+            + 0.5 * mu * jnp.sum(x**2)
+        )
+
+    def f2(self, x):
+        l2, mu = self.ell2, self.mu
+        # pairs (x_{2i} - x_{2i-1}) for i = 1..d/2 -> 0-based (x[2i-1] - x[2i-2])
+        even_odd = x[1::2] - x[0::2][: self.dim // 2]
+        return 0.5 * l2 * jnp.sum(even_odd**2) + 0.5 * mu * jnp.sum(x**2)
+
+    def f(self, x):
+        return 0.5 * (self.f1(x) + self.f2(x))
+
+    # ---- known solution ----------------------------------------------------
+    def x_star(self):
+        """x*_j = (ζ̂/(1−q))·q^j (1-based j), from App. G.2 / Woodworth'21."""
+        j = jnp.arange(1, self.dim + 1, dtype=jnp.float32)
+        return (self.zeta_hat / (1.0 - self.q)) * self.q**j
+
+    def f_star(self):
+        # the closed form above is asymptotic in d; evaluate F at a numerically
+        # exact solution instead (solve the quadratic's normal equations).
+        h = jax.hessian(self.f)(jnp.zeros(self.dim))
+        g0 = jax.grad(self.f)(jnp.zeros(self.dim))
+        xs = jnp.linalg.solve(h, -g0)
+        return self.f(xs), xs
+
+    def suboptimality_lb(self, rounds: int):
+        """F(x̂) − F* ≥ (μ ζ̂² q² / (16(1−q)²(1−q²)))·q^{2R}  (App. G.4)."""
+        q = self.q
+        return (self.mu * self.zeta_hat**2 * q**2 / (16 * (1 - q) ** 2 * (1 - q**2))) * q ** (
+            2 * rounds
+        )
+
+    def initial_gap_ub(self):
+        """F(0) − F* ≤ q·ℓ₂·ζ̂²/(4(1−q))  (App. G.3)."""
+        return self.q * self.ell2 * self.zeta_hat**2 / (4 * (1 - self.q))
+
+
+def make_lower_bound_problem(
+    *, dim: int = 64, beta: float = 1.0, mu: float = 0.01, zeta_hat: float = 1.0,
+    num_clients: int = 2, sigma: float = 0.0,
+):
+    """Wrap the two-client instance as a FederatedProblem (noiseless oracles by
+    default — the lower bound assumes deterministic gradients)."""
+    from repro.data.problems import FederatedProblem  # local import: avoids cycle
+
+    assert dim % 2 == 0
+    ell2 = (beta - mu) / 4.0
+    inst = LowerBoundInstance(dim=dim, ell2=ell2, mu=mu, zeta_hat=zeta_hat)
+    f_star, x_star = inst.f_star()
+
+    losses = [inst.f1, inst.f2]
+
+    def client_loss(x, i):
+        return jax.lax.switch(i % 2, losses, x)
+
+    def global_loss(x):
+        return inst.f(x)
+
+    def grad_oracle(x, i, rng):
+        g = jax.grad(client_loss)(x, i)
+        if sigma > 0:
+            g = g + (sigma / jnp.sqrt(dim)) * jax.random.normal(rng, (dim,))
+        return g
+
+    def value_oracle(x, i, rng):
+        del rng
+        return client_loss(x, i)
+
+    def init_params(rng):
+        del rng
+        return jnp.zeros((dim,))
+
+    problem = FederatedProblem(
+        num_clients=num_clients,
+        grad_oracle=grad_oracle,
+        value_oracle=value_oracle,
+        client_loss=client_loss,
+        global_loss=global_loss,
+        init_params=init_params,
+        mu=mu,
+        beta=beta,
+        zeta=0.0,  # the construction's ζ is position-dependent; see Def. 5.3
+        sigma=sigma,
+        f_star=float(f_star),
+        x_star=x_star,
+        name=f"lower_bound(d={dim},beta={beta},mu={mu})",
+    )
+    return problem, inst
+
+
+def support(v, tol: float = 1e-12):
+    """supp(v) as a boolean mask."""
+    return jnp.abs(v) > tol
+
+
+def max_unlocked_coordinate(x, tol: float = 1e-12) -> int:
+    """Highest nonzero coordinate index + 1 (= |E_i| of Lemma G.4)."""
+    mask = support(x, tol)
+    idx = jnp.where(mask, jnp.arange(x.shape[0]) + 1, 0)
+    return int(jnp.max(idx))

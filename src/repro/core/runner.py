@@ -1,0 +1,82 @@
+"""Round-loop runners: jit/scan execution of federated algorithms with
+suboptimality trajectories, plus a stepsize-decay (multistage "M-") wrapper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class RunResult:
+    state: object  # final algorithm state
+    x_hat: object  # algorithm's returned iterate
+    history: jnp.ndarray  # [R] F(x̂_r) − F* after each round (of x̂, not x)
+    grad_norms: Optional[jnp.ndarray] = None
+
+
+def run(algo, problem, x0, rounds: int, key, *, eval_output: bool = True, jit: bool = True):
+    """Run ``rounds`` communication rounds; record suboptimality each round."""
+    f_star = problem.f_star if problem.f_star is not None else 0.0
+
+    def one_round(state, k):
+        state = algo.round(problem, state, k)
+        x_eval = algo.output(state) if eval_output else state.x
+        sub = problem.global_loss(x_eval) - f_star
+        return state, sub
+
+    def scan_all(state0, keys):
+        return jax.lax.scan(one_round, state0, keys)
+
+    state0 = algo.init(problem, x0)
+    keys = jax.random.split(key, rounds)
+    fn = jax.jit(scan_all) if jit else scan_all
+    state, history = fn(state0, keys)
+    return RunResult(state=state, x_hat=algo.output(state), history=history)
+
+
+def run_with_decay(
+    algo, problem, x0, rounds: int, key, *,
+    decay_first: float = 0.3, decay_factor: float = 0.5, jit: bool = True,
+):
+    """The paper's "M-" stepsize-decay variants (App. I.1): halve η at
+    R_decay = decay_first·R and again at every doubling of R_decay."""
+    # decay boundaries: ceil(decay_first*R), 2x, 4x, ... up to R
+    boundaries = []
+    b = max(1, int(round(decay_first * rounds)))
+    while b < rounds:
+        boundaries.append(b)
+        b *= 2
+    segments = []
+    prev = 0
+    for b in boundaries:
+        segments.append(b - prev)
+        prev = b
+    segments.append(rounds - prev)
+
+    state = algo.init(problem, x0)
+    f_star = problem.f_star if problem.f_star is not None else 0.0
+    hist = []
+    keys = jax.random.split(key, len(segments))
+
+    def seg_fn(state0, ks):
+        def one_round(st, k):
+            st = algo.round(problem, st, k)
+            sub = problem.global_loss(algo.output(st)) - f_star
+            return st, sub
+
+        return jax.lax.scan(one_round, state0, ks)
+
+    seg_jit = jax.jit(seg_fn) if jit else seg_fn
+    for i, seg in enumerate(segments):
+        if seg <= 0:
+            continue
+        ks = jax.random.split(keys[i], seg)
+        state, h = seg_jit(state, ks)
+        hist.append(h)
+        state = state._replace(eta=state.eta * decay_factor)
+    history = jnp.concatenate(hist) if hist else jnp.zeros((0,))
+    return RunResult(state=state, x_hat=algo.output(state), history=history)

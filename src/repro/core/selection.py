@@ -1,0 +1,51 @@
+"""Better-point selection (middle step of Algo 1, analyzed in Lemma H.2).
+
+Sample S clients, draw K function-value samples ẑ_{i,k} per client, and keep
+the candidate with the smaller empirical average
+
+    x̂_1 = argmin_{x ∈ candidates} (1/SK) Σ_{i∈S} Σ_k f(x; ẑ_{i,k}).
+
+Lemma H.2 guarantees E[F(x̂_1)] ≤ min_x F(x) + 4σ_F/√(SK) + 4√(1−(S−1)/(N−1))·ζ_F/√S.
+
+All candidates are evaluated on the SAME samples (the algorithm draws ẑ once),
+which we reproduce by reusing the same PRNG keys across candidates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithms import base
+
+
+def empirical_values(problem, candidates, key, *, s: int, k: int):
+    """Empirical (1/SK)ΣΣ f(x; ẑ) for every candidate on shared samples."""
+    k_sample, k_vals = jax.random.split(key)
+    cids = base.sample_clients(k_sample, problem.num_clients, s)
+    keys = jax.random.split(k_vals, s * k).reshape(s, k, -1)
+
+    def value_of(x):
+        def per_client(cid, ks):
+            vs = jax.vmap(lambda kk: problem.value_oracle(x, cid, kk))(ks)
+            return jnp.mean(vs)
+
+        return jnp.mean(jax.vmap(per_client)(cids, keys))
+
+    return jnp.stack([value_of(x) for x in candidates])
+
+
+def select_better(problem, candidates, key, *, s: int, k: int):
+    """Returns (best_candidate, best_index, empirical_values)."""
+    vals = empirical_values(problem, candidates, key, s=s, k=k)
+    idx = jnp.argmin(vals)
+    # candidates share a pytree structure; gather leafwise
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *candidates)
+    best = jax.tree.map(lambda t: t[idx], stacked)
+    return best, idx, vals
+
+
+def selection_error_bound(problem, *, s: int, k: int):
+    """The Lemma H.2 additive error term 4σ_F/√(SK) + 4√(1−(S−1)/(N−1))·ζ_F/√S."""
+    n = problem.num_clients
+    frac = 0.0 if n <= 1 else max(0.0, 1.0 - (s - 1) / (n - 1))
+    return 4.0 * problem.sigma_f / (s * k) ** 0.5 + 4.0 * (frac**0.5) * problem.zeta_f / s**0.5

@@ -1,0 +1,105 @@
+"""Pytree arithmetic helpers.
+
+Every federated algorithm in this package operates on arbitrary parameter
+pytrees (vectors for the theory problems, nested dicts for neural nets), so
+all linear-algebra-on-parameters goes through these helpers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a):
+    return jax.tree.map(lambda x: s * x, a)
+
+
+def tree_axpy(s, a, b):
+    """b + s * a  (elementwise)."""
+    return jax.tree.map(lambda x, y: y + s * x, a, b)
+
+
+def tree_lerp(t, a, b):
+    """(1 - t) * a + t * b."""
+    return jax.tree.map(lambda x, y: (1.0 - t) * x + t * y, a, b)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    return sum(leaves) if leaves else jnp.asarray(0.0)
+
+
+def tree_sq_norm(a):
+    return tree_dot(a, a)
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_mean_leading(a):
+    """Mean over a leading (stacked-clients) axis of every leaf."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), a)
+
+
+def tree_index(a, i):
+    """Select index ``i`` along the leading axis of every leaf."""
+    return jax.tree.map(lambda x: x[i], a)
+
+
+def tree_dynamic_index(a, i):
+    return jax.tree.map(lambda x: jax.lax.dynamic_index_in_dim(x, i, keepdims=False), a)
+
+
+def tree_stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_broadcast_leading(a, n):
+    """Tile a pytree along a new leading axis of size ``n``."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), a)
+
+
+def tree_where(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def tree_scatter_set(table, idx, values):
+    """table.at[idx].set(values) leafwise; idx is a vector of leading indices."""
+    return jax.tree.map(lambda t, v: t.at[idx].set(v), table, values)
+
+
+def tree_random_like(key, a, scale=1.0):
+    """Gaussian noise pytree with the structure/shape of ``a``."""
+    leaves, treedef = jax.tree.flatten(a)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [
+        scale * jax.random.normal(k, x.shape, jnp.result_type(x, jnp.float32))
+        for k, x in zip(keys, leaves)
+    ]
+    return jax.tree.unflatten(treedef, noisy)
+
+
+def tree_size(a):
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def ravel(a):
+    """Flatten a pytree to a single vector (for diagnostics / checkpoints)."""
+    return jnp.concatenate([jnp.ravel(x) for x in jax.tree.leaves(a)]) if jax.tree.leaves(a) else jnp.zeros((0,))

@@ -1,0 +1,4 @@
+"""Federated data substrate: problems, partitioners, synthetic datasets."""
+from repro.data import partition, problems, synthetic_vision, tokens
+
+__all__ = ["partition", "problems", "synthetic_vision", "tokens"]

@@ -1,0 +1,102 @@
+"""Nonconvex federated vision problems (paper §6 Table 3 / Fig. 2 substrate).
+
+Builds a FederatedProblem over a small MLP/logistic classifier on the
+synthetic prototype-image datasets, partitioned with the paper's
+"X% homogeneous" scheme. Parameters are pytrees — the same Algos 2–7 run
+unchanged on these (that is the point of the pytree-based core).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import partition, synthetic_vision
+from repro.data.problems import FederatedProblem
+
+
+def _mlp_init(key, dims):
+    params = {}
+    ks = jax.random.split(key, len(dims) - 1)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"w{i}"] = jax.random.normal(ks[i], (a, b)) * (1.0 / a) ** 0.5
+        params[f"b{i}"] = jnp.zeros((b,))
+    return params
+
+
+def _mlp_apply(params, x):
+    n = len(params) // 2
+    h = x
+    for i in range(n):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def make_vision_problem(
+    key,
+    *,
+    num_clients: int = 5,
+    homogeneous_frac: float = 0.5,
+    num_classes: int = 10,
+    per_class: int = 200,
+    side: int = 14,
+    hidden: int = 64,
+    batch: int = 32,
+    l2: float = 1e-4,
+    seed: int = 0,
+):
+    """Returns (FederatedProblem, accuracy_fn, init_params)."""
+    data = synthetic_vision.make_prototype_images(
+        num_classes=num_classes, per_class=per_class, side=side, seed=seed)
+    cx, cy = partition.shuffled_heterogeneity(
+        data, homogeneous_frac=homogeneous_frac, num_clients=num_clients,
+        seed=seed)
+    features = jnp.asarray(cx)  # [N, n_i, d]
+    labels = jnp.asarray(cy, jnp.int32)
+    n_clients, n_per, d = features.shape
+    dims = (d, hidden, num_classes) if hidden else (d, num_classes)
+
+    def _loss_on(params, X, y):
+        logits = _mlp_apply(params, X)
+        ls = jax.nn.log_softmax(logits)
+        nll = -jnp.mean(jnp.take_along_axis(ls, y[:, None], axis=1))
+        reg = 0.5 * l2 * sum(jnp.sum(p**2) for p in jax.tree.leaves(params))
+        return nll + reg
+
+    def client_loss(params, i):
+        return _loss_on(params, features[i], labels[i])
+
+    def global_loss(params):
+        return jnp.mean(jax.vmap(lambda X, y: _loss_on(params, X, y))(features, labels))
+
+    def grad_oracle(params, i, rng):
+        idx = jax.random.randint(rng, (batch,), 0, n_per)
+        return jax.grad(_loss_on)(params, features[i][idx], labels[i][idx])
+
+    def value_oracle(params, i, rng):
+        idx = jax.random.randint(rng, (batch,), 0, n_per)
+        return _loss_on(params, features[i][idx], labels[i][idx])
+
+    def init_params(rng):
+        return _mlp_init(rng, dims)
+
+    def accuracy(params):
+        logits = _mlp_apply(params, features.reshape(-1, d))
+        pred = jnp.argmax(logits, -1)
+        return jnp.mean((pred == labels.reshape(-1)).astype(jnp.float32))
+
+    problem = FederatedProblem(
+        num_clients=n_clients,
+        grad_oracle=grad_oracle,
+        value_oracle=value_oracle,
+        client_loss=client_loss,
+        global_loss=global_loss,
+        init_params=init_params,
+        mu=l2,
+        beta=10.0,  # rough
+        f_star=None,
+        name=f"vision(hom={homogeneous_frac},hidden={hidden})",
+    )
+    return problem, accuracy, init_params

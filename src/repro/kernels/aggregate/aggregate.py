@@ -1,0 +1,92 @@
+"""Pallas TPU kernel for the fused FedChain server aggregation.
+
+    out = x − lr · ( Σ_i w_i·(g_i − c_i) + c )
+
+One kernel pass fuses the client reduction, control-variate correction and
+the server step — on TPU this keeps the [S, D] client buffers in HBM and
+streams [S, BLOCK_D] tiles through VMEM exactly once (the XLA default would
+materialize the [S, D] difference tensor).
+
+Grid: (D // BLOCK_D,). Per step the BlockSpecs stage
+  g, c_i tiles [S, BLOCK_D]  +  x, c, out tiles [BLOCK_D]
+into VMEM; with S ≤ 64 and BLOCK_D = 2048 the working set is
+~(2·S + 3)·BLOCK_D·4B ≈ 1.1 MB — comfortably inside the ~16 MB VMEM budget,
+and BLOCK_D is a multiple of the 128-lane register width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 2048
+
+
+def _agg_kernel(w_ref, x_ref, g_ref, ci_ref, c_ref, o_ref, *, lr: float):
+    g = g_ref[...].astype(jnp.float32)  # [S, BD]
+    ci = ci_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)  # [S]
+    upd = jnp.einsum("sd,s->d", g - ci, w) + c_ref[...].astype(jnp.float32)
+    o_ref[...] = (x_ref[...].astype(jnp.float32) - lr * upd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "interpret", "block_d"))
+def chain_aggregate(x, g, c_i, c, weights, *, lr: float, interpret: bool = False,
+                    block_d: int = BLOCK_D):
+    """x: [D]; g, c_i: [S, D]; c: [D]; weights: [S]. Returns [D]."""
+    d = x.shape[0]
+    s = g.shape[0]
+    bd = min(block_d, d)
+    # pad D to a block multiple
+    pad = (-d) % bd
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        g = jnp.pad(g, ((0, 0), (0, pad)))
+        c_i = jnp.pad(c_i, ((0, 0), (0, pad)))
+        c = jnp.pad(c, (0, pad))
+    dp = x.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_agg_kernel, lr=lr),
+        grid=(dp // bd,),
+        in_specs=[
+            pl.BlockSpec((s,), lambda j: (0,)),  # weights: whole vector
+            pl.BlockSpec((bd,), lambda j: (j,)),  # x tile
+            pl.BlockSpec((s, bd), lambda j: (0, j)),  # g tile
+            pl.BlockSpec((s, bd), lambda j: (0, j)),  # c_i tile
+            pl.BlockSpec((bd,), lambda j: (j,)),  # c tile
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), x.dtype),
+        interpret=interpret,
+    )(weights, x, g, c_i, c)
+    return out[:d] if pad else out
+
+
+def _mean_kernel(t_ref, o_ref):
+    o_ref[...] = jnp.mean(t_ref[...].astype(jnp.float32), axis=0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_d"))
+def mean_over_clients(t, *, interpret: bool = False, block_d: int = BLOCK_D):
+    """Mean over the leading client axis of a [C, ...] tensor."""
+    c = t.shape[0]
+    flat = t.reshape(c, -1)
+    d = flat.shape[1]
+    bd = min(block_d, d)
+    pad = (-d) % bd
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    dp = flat.shape[1]
+    out = pl.pallas_call(
+        _mean_kernel,
+        grid=(dp // bd,),
+        in_specs=[pl.BlockSpec((c, bd), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((bd,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), t.dtype),
+        interpret=interpret,
+    )(flat)
+    out = out[:d] if pad else out
+    return out.reshape(t.shape[1:])

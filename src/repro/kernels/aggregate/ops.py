@@ -1,0 +1,36 @@
+"""Backend-dispatching wrappers for the aggregate kernel.
+
+TPU: the Pallas kernel. CPU: interpret-mode Pallas when ``force_pallas``
+(tests), else the jnp reference (XLA:CPU can't lower Mosaic).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.aggregate import ref
+from repro.kernels.aggregate.aggregate import chain_aggregate as _kernel
+from repro.kernels.aggregate.aggregate import mean_over_clients as _mean_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def chain_aggregate(x, g, c_i, c, weights=None, *, lr: float, force_pallas: bool = False):
+    import jax.numpy as jnp
+
+    if weights is None:
+        weights = jnp.full((g.shape[0],), 1.0 / g.shape[0], jnp.float32)
+    if _on_tpu():
+        return _kernel(x, g, c_i, c, weights, lr=lr)
+    if force_pallas:
+        return _kernel(x, g, c_i, c, weights, lr=lr, interpret=True)
+    return ref.chain_aggregate_ref(x, g, c_i, c, lr=lr, weights=weights)
+
+
+def mean_over_clients(t, *, force_pallas: bool = False):
+    if _on_tpu():
+        return _mean_kernel(t)
+    if force_pallas:
+        return _mean_kernel(t, interpret=True)
+    return ref.mean_over_clients_ref(t)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the ``chain_aggregate`` kernel.
+
+The fused FedChain server update (DESIGN.md §2):
+
+    out = x − lr · ( (1/S)·Σ_i w_i·(g_i − c_i) + c )
+
+covering FedAvg (g_i = client deltas, c_i = c = 0, lr = server_lr),
+SCAFFOLD/SAGA (control variates), and plain gradient averaging (lr = η).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def chain_aggregate_ref(x, g, c_i, c, *, lr: float, weights=None):
+    """x: [D]; g, c_i: [S, D]; c: [D]; weights: [S] or None (uniform)."""
+    s = g.shape[0]
+    if weights is None:
+        weights = jnp.full((s,), 1.0 / s, jnp.float32)
+    else:
+        weights = weights.astype(jnp.float32)
+    diff = (g.astype(jnp.float32) - c_i.astype(jnp.float32))
+    update = jnp.einsum("s,sd->d", weights, diff) + c.astype(jnp.float32)
+    return (x.astype(jnp.float32) - lr * update).astype(x.dtype)
+
+
+def mean_over_clients_ref(t):
+    """Mean over a leading client axis, any trailing shape."""
+    return jnp.mean(t.astype(jnp.float32), axis=0).astype(t.dtype)

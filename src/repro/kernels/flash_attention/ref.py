@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash_attention kernel: plain masked softmax
+attention (causal / sliding-window / full), GQA via head grouping."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0, scale=None):
+    """q: [B, S, H, D]; k, v: [B, S, KV, D]; window 0 => no window.
+
+    Returns [B, S, H, D] in q.dtype.
+    """
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / d**0.5
+    qg = q.reshape(b, s, kvh, g, d)
+    scores = jnp.einsum("bqkgh,btkh->bkgqt", qg, k).astype(jnp.float32) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= ki <= qi
+    if window and window > 0:
+        ok &= (qi - ki) < window
+    scores = jnp.where(ok[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", probs, v)
+    return out.reshape(b, s, h, d)

@@ -1,0 +1,17 @@
+"""Backend dispatch for the SSD scan kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan as _kernel
+from repro.models.layers.ssm import ssd as _ref
+
+
+def ssd(x, dt, a_coef, b_in, c_in, *, chunk: int = 128, force_pallas: bool = False):
+    """Returns y only (state handled by the recurrent decode path)."""
+    if jax.default_backend() == "tpu":
+        return _kernel(x, dt, a_coef, b_in, c_in, chunk=chunk)
+    if force_pallas:
+        return _kernel(x, dt, a_coef, b_in, c_in, chunk=chunk, interpret=True)
+    y, _ = _ref(x, dt, a_coef, b_in, c_in, chunk=chunk)
+    return y

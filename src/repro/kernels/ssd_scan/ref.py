@@ -1,0 +1,4 @@
+"""Oracle for the ssd_scan kernel: the pure-jnp chunked SSD from the model
+layer (itself validated against a naive sequential recurrence in
+tests/test_layers.py)."""
+from repro.models.layers.ssm import ssd as ssd_reference  # noqa: F401

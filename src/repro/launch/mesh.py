@@ -1,0 +1,43 @@
+"""Production mesh definitions (TPU v5e target).
+
+Functions, not module-level constants, so importing this module never touches
+jax device state (device count is locked at first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 two-pod (512 chips) mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, *, pod: int = 0):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    if pod:
+        return jax.make_mesh(
+            (pod, data, model), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def data_shards(mesh) -> int:
+    """Number of data-parallel shards (= MoE routing groups, FL client slots)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+def hardware_constants():
+    """TPU v5e roofline constants (per chip)."""
+    return {
+        "peak_flops_bf16": 197e12,  # FLOP/s
+        "hbm_bw": 819e9,  # B/s
+        "ici_link_bw": 50e9,  # B/s per link
+    }

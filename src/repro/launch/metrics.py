@@ -1,0 +1,49 @@
+"""Lightweight run-metrics logging: JSONL event stream + rolling aggregates.
+
+Used by the training/serving drivers; offline-friendly (plain files, no
+external services).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import deque
+from typing import Optional
+
+
+class MetricsLogger:
+    def __init__(self, path: Optional[str] = None, *, window: int = 50):
+        self.path = path
+        self._fh = None
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._fh = open(path, "a")
+        self._win = {}
+        self._window = window
+        self._t0 = time.time()
+
+    def log(self, step: int, **values):
+        rec = {"step": step, "t": round(time.time() - self._t0, 3)}
+        for k, v in values.items():
+            v = float(v)
+            rec[k] = v
+            self._win.setdefault(k, deque(maxlen=self._window)).append(v)
+        if self._fh:
+            self._fh.write(json.dumps(rec) + "\n")
+            self._fh.flush()
+        return rec
+
+    def mean(self, key: str) -> float:
+        buf = self._win.get(key)
+        return sum(buf) / len(buf) if buf else float("nan")
+
+    def close(self):
+        if self._fh:
+            self._fh.close()
+            self._fh = None
+
+
+def read_jsonl(path: str):
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]

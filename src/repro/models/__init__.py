@@ -1,0 +1,3 @@
+from repro.models import blocks, model_zoo, transformer
+
+__all__ = ["blocks", "model_zoo", "transformer"]

@@ -1,0 +1,218 @@
+"""Decoder/encoder block assembly and scan-over-layers machinery.
+
+Layers are grouped into structurally-homogeneous segments; each segment's
+parameters are stacked on a leading [L] axis and executed with ``jax.lax.scan``
+(HLO size O(1) in depth — essential for compiling 61-layer models against 512
+host devices). Metadata-only per-layer variation (sliding window size, rope
+theta) rides along the scan as stacked arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import common, mla as mla_lib, moe as moe_lib, ssm as ssm_lib
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-call runtime context threaded through blocks."""
+
+    positions: Any  # [S] (train/prefill) or [B, 1] (decode)
+    mode: str = "train"  # train | prefill | decode
+    cache_pos: Any = None  # scalar int (decode)
+    prefix_len: Any = None  # prefix-LM boundary (paligemma)
+    moe_groups: int = 1
+    causal: bool = True
+
+
+def _meta_theta_window(cfg, num_layers, offset=0):
+    """Per-layer (theta, window) arrays implementing local:global patterns."""
+    a = cfg.attention
+    thetas, windows = [], []
+    for i in range(offset, offset + num_layers):
+        if a is not None and a.local_global_period > 0:
+            is_global = (i + 1) % a.local_global_period == 0
+            thetas.append(a.rope_theta if is_global else a.rope_theta_local)
+            windows.append(0 if is_global else a.sliding_window)
+        elif a is not None:
+            thetas.append(a.rope_theta)
+            windows.append(a.sliding_window)
+        else:
+            thetas.append(10_000.0)
+            windows.append(0)
+    return {
+        "theta": jnp.asarray(thetas, jnp.float32),
+        "window": jnp.asarray(windows, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Block definitions: init(key) -> params; apply(params, x, cache, meta, ctx)
+# ---------------------------------------------------------------------------
+
+def make_block(cfg, kind: str):
+    dtype = cfg.param_dtype()
+    d = cfg.d_model
+
+    def init_attn_part(key):
+        if cfg.mla is not None:
+            return {"mla": mla_lib.init_mla(key, d, cfg.mla, dtype)}
+        return {"attn": attn_lib.init_attention(key, d, cfg.attention, dtype)}
+
+    def apply_attn_part(p, x, cache, meta, ctx):
+        if cfg.mla is not None:
+            return mla_lib.mla_attention(
+                p["mla"], x, mcfg=cfg.mla, positions=ctx.positions,
+                causal=ctx.causal, prefix_len=ctx.prefix_len, cache=cache,
+                cache_pos=ctx.cache_pos, norm_eps=cfg.norm_eps,
+            )
+        window = meta["window"] if meta is not None else None
+        theta = meta["theta"] if meta is not None else cfg.attention.rope_theta
+        return attn_lib.attention(
+            p["attn"], x, acfg=cfg.attention, positions=ctx.positions,
+            theta=theta, window=window, causal=ctx.causal,
+            prefix_len=ctx.prefix_len, cache=cache, cache_pos=ctx.cache_pos,
+            norm_eps=cfg.norm_eps,
+        )
+
+    if kind == "attn_dense":
+        ff = cfg.dense_d_ff or cfg.d_ff
+
+        def init(key):
+            k1, k2 = jax.random.split(key)
+            p = init_attn_part(k1)
+            p.update({
+                "norm1": common.init_rmsnorm(d, dtype),
+                "norm2": common.init_rmsnorm(d, dtype),
+                "mlp": common.init_mlp(k2, d, ff, dtype),
+            })
+            return p
+
+        def apply(p, x, cache, meta, ctx):
+            h, new_cache = apply_attn_part(p, common.rmsnorm(p["norm1"], x, cfg.norm_eps), cache, meta, ctx)
+            x = x + h
+            x = x + common.mlp(p["mlp"], common.rmsnorm(p["norm2"], x, cfg.norm_eps), cfg.act)
+            return x, new_cache, jnp.asarray(0.0, jnp.float32)
+
+        return init, apply
+
+    if kind == "attn_moe":
+        def init(key):
+            k1, k2 = jax.random.split(key)
+            p = init_attn_part(k1)
+            p.update({
+                "norm1": common.init_rmsnorm(d, dtype),
+                "norm2": common.init_rmsnorm(d, dtype),
+                "moe": moe_lib.init_moe(k2, d, cfg.moe, dtype),
+            })
+            return p
+
+        def apply(p, x, cache, meta, ctx):
+            h, new_cache = apply_attn_part(p, common.rmsnorm(p["norm1"], x, cfg.norm_eps), cache, meta, ctx)
+            x = x + h
+            m, aux = moe_lib.moe_apply(
+                p["moe"], common.rmsnorm(p["norm2"], x, cfg.norm_eps),
+                mcfg=cfg.moe, act=cfg.act, routing_groups=ctx.moe_groups,
+            )
+            return x + m, new_cache, aux.astype(jnp.float32)
+
+        return init, apply
+
+    if kind == "mamba":
+        def init(key):
+            return {
+                "norm": common.init_rmsnorm(d, dtype),
+                "mamba": ssm_lib.init_mamba(key, d, cfg.ssm, dtype),
+            }
+
+        def apply(p, x, cache, meta, ctx):
+            h, new_cache = ssm_lib.mamba_apply(
+                p["mamba"], common.rmsnorm(p["norm"], x, cfg.norm_eps),
+                scfg=cfg.ssm, d_model=d, cache=cache, decode=(ctx.mode == "decode"),
+            )
+            return x + h, new_cache, jnp.asarray(0.0, jnp.float32)
+
+        return init, apply
+
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def make_shared_attn_block(cfg):
+    """Zamba2's single shared transformer block (attention + MLP), re-applied
+    with the same weights every ``cfg.hybrid.period`` Mamba layers."""
+    dtype = cfg.param_dtype()
+    d = cfg.d_model
+    acfg = cfg.hybrid.shared_attn
+    ff = cfg.hybrid.shared_d_ff or cfg.d_ff
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "norm1": common.init_rmsnorm(d, dtype),
+            "attn": attn_lib.init_attention(k1, d, acfg, dtype),
+            "norm2": common.init_rmsnorm(d, dtype),
+            "mlp": common.init_mlp(k2, d, ff, dtype),
+        }
+
+    def apply(p, x, cache, ctx):
+        h, new_cache = attn_lib.attention(
+            p["attn"], common.rmsnorm(p["norm1"], x, cfg.norm_eps), acfg=acfg,
+            positions=ctx.positions, theta=acfg.rope_theta, window=None,
+            causal=ctx.causal, cache=cache, cache_pos=ctx.cache_pos,
+            norm_eps=cfg.norm_eps,
+        )
+        x = x + h
+        x = x + common.mlp(p["mlp"], common.rmsnorm(p["norm2"], x, cfg.norm_eps), cfg.act)
+        return x, new_cache
+
+    return init, apply
+
+
+# ---------------------------------------------------------------------------
+# Scanned segment execution
+# ---------------------------------------------------------------------------
+
+def init_stack(key, init_fn, num_layers: int):
+    keys = jax.random.split(key, num_layers)
+    return jax.vmap(init_fn)(keys)
+
+
+def apply_stack(stacked_params, x, ctx, apply_fn, *, caches=None, meta=None,
+                remat=False, unroll: bool = False):
+    """Scan a homogeneous block stack. caches/meta are [L, ...] stacked (or None).
+
+    Returns (x, new_caches, aux_sum).
+    """
+    num_layers = jax.tree.leaves(stacked_params)[0].shape[0]
+    has_cache = caches is not None
+    has_meta = meta is not None
+
+    def body(carry, xs):
+        p, c, m = xs
+        y, new_c, aux = apply_fn(p, carry, c if has_cache else None, m if has_meta else None, ctx)
+        return y, (new_c if has_cache else 0, aux)
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    xs = (
+        stacked_params,
+        caches if has_cache else jnp.zeros((num_layers,)),
+        meta if has_meta else jnp.zeros((num_layers,)),
+    )
+    if unroll:
+        new_caches, auxs = [], []
+        for i in range(num_layers):
+            sl = jax.tree.map(lambda t: t[i], xs)
+            x, (nc, aux) = body(x, sl)
+            new_caches.append(nc)
+            auxs.append(aux)
+        new_c = jax.tree.map(lambda *ts: jnp.stack(ts), *new_caches) if has_cache else None
+        return x, new_c, jnp.sum(jnp.stack(auxs))
+    x, (new_caches, auxs) = jax.lax.scan(body, x, xs)
+    return x, (new_caches if has_cache else None), jnp.sum(auxs)

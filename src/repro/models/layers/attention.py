@@ -1,0 +1,202 @@
+"""Grouped-query attention with RoPE, QK-norm, causal / sliding-window /
+prefix-LM masks, KV caches for decode, and cross-attention (enc-dec).
+
+Long sequences use *query-block-chunked* attention (lax.scan over query
+blocks) so the [Q, T] score tensor never materializes — the XLA analogue of
+the Pallas flash kernel in ``repro.kernels.flash_attention`` (which is the
+TPU-targeted implementation of this same computation).
+
+Masks are position-arithmetic so a scanned layer stack can vary
+window/theta per layer via scanned metadata (gemma3's 5:1 local:global).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import common
+from repro.sharding import logical
+
+Q_BLOCK = 256  # query-chunk size for blocked attention
+CHUNK_THRESHOLD = 1024  # use blocked attention above this query length
+
+
+def init_attention(key, d_model, acfg, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    h, kvh, hd = acfg.num_heads, acfg.num_kv_heads, acfg.head_dim
+    return {
+        "wq": common.dense_init(kq, (d_model, h, hd), dtype),
+        "wk": common.dense_init(kk, (d_model, kvh, hd), dtype),
+        "wv": common.dense_init(kv, (d_model, kvh, hd), dtype),
+        "wo": common.dense_init(ko, (h, hd, d_model), dtype, fan_in=h * hd),
+    }
+
+
+def mask_bias(q_pos, k_pos, *, causal: bool, window=None, prefix_len=None, k_valid=None):
+    """Additive mask bias [Q, K] (or [B, Q, K]) from query/key positions."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), dtype=bool)
+    if causal:
+        allowed = k <= q
+        if prefix_len is not None:
+            both_prefix = (q < prefix_len) & (k < prefix_len)
+            allowed = allowed | both_prefix
+        ok &= allowed
+    if window is not None:
+        in_window = (q - k) < window
+        ok = ok & jnp.where(window > 0, in_window, True)
+    if k_valid is not None:
+        ok &= k_valid[..., None, :]
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def attend(q, k, v, bias, *, scale):
+    """q: [B,Q,H,hd], k/v: [B,T,KV,hd], bias broadcastable to [B,Q,T]."""
+    b, qlen, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, qlen, kvh, g, hd)
+    scores = jnp.einsum("bqkgh,btkh->bkgqt", qg, k).astype(jnp.float32) * scale
+    bias = jnp.broadcast_to(bias, (b,) + bias.shape[-2:])
+    scores = scores + bias[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", probs, v)
+    return out.reshape(b, qlen, h, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def attend_chunked(q, k, v, *, scale, bias_fn, q_block=Q_BLOCK):
+    """Blocked attention: lax.scan over query chunks; bias_fn(block_start)
+    returns the [q_block, T] bias for that chunk. Keeps peak memory at
+    O(q_block · T) instead of O(Q · T)."""
+    b, qlen, h, hd = q.shape
+    assert qlen % q_block == 0 and qlen > q_block, "caller guards chunking"
+    nb = qlen // q_block
+    qb = q.reshape(b, nb, q_block, h, hd).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(nb) * q_block
+
+    def one(_, xs):
+        start, qblk = xs
+        bias = bias_fn(start)  # [q_block, T]
+        out = attend(qblk, k, v, bias[None], scale=scale)
+        return None, out
+
+    _, outs = jax.lax.scan(one, None, (starts, qb))
+    # note: output head dim follows v (may differ from q's for MLA)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, qlen, h, outs.shape[-1])
+
+
+def attention(
+    params,
+    x,
+    *,
+    acfg,
+    positions,
+    theta,
+    window=None,
+    causal=True,
+    prefix_len=None,
+    cache=None,
+    cache_pos=None,
+    norm_eps=1e-6,
+):
+    """Self-attention. Modes:
+      * train:    cache=None                       -> (out, None)
+      * prefill:  cache=empty, cache_pos=None      -> (out, filled cache)
+      * decode:   cache=filled, cache_pos=pos      -> (out, updated cache), x is [B,1,d]
+
+    ``positions`` is [S] (train/prefill, shared across batch) or [B,1] (decode).
+    """
+    hd = acfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = logical(q, ("batch", "seq", "heads", "head_dim"))
+    k = logical(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = logical(v, ("batch", "seq", "kv_heads", "head_dim"))
+
+    if acfg.qk_norm:
+        q = common.head_rmsnorm(q, norm_eps)
+        k = common.head_rmsnorm(k, norm_eps)
+    rp = positions if positions.ndim > 1 else positions[None, :]
+    q = common.rope(q, jnp.broadcast_to(rp, (q.shape[0], q.shape[1])), theta)
+    k = common.rope(k, jnp.broadcast_to(rp, (k.shape[0], k.shape[1])), theta)
+    scale = acfg.softmax_scale or (1.0 / hd**0.5)
+
+    new_cache = None
+    if cache is not None and cache_pos is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+        ck = logical(ck, ("batch", "cache_seq", "kv_heads", "head_dim"))
+        cv = logical(cv, ("batch", "cache_seq", "kv_heads", "head_dim"))
+        new_cache = {"k": ck, "v": cv}
+        t = ck.shape[1]
+        k_pos = jnp.arange(t)[None, :]
+        k_valid = jnp.arange(t)[None, :] <= cache_pos
+        bias = mask_bias(positions, k_pos, causal=causal, window=window, k_valid=k_valid)
+        out = attend(q, ck, cv, bias, scale=scale)
+    else:
+        if cache is not None:  # prefill into an empty cache
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+            ck = logical(ck, ("batch", "cache_seq", "kv_heads", "head_dim"))
+            cv = logical(cv, ("batch", "cache_seq", "kv_heads", "head_dim"))
+            new_cache = {"k": ck, "v": cv}
+        pos1d = positions if positions.ndim == 1 else positions[0]
+        qlen = q.shape[1]
+        if qlen > CHUNK_THRESHOLD and qlen % Q_BLOCK == 0:
+            def bias_fn(start):
+                qp = jax.lax.dynamic_slice_in_dim(pos1d, start, Q_BLOCK)
+                return mask_bias(qp, pos1d, causal=causal, window=window,
+                                 prefix_len=prefix_len)
+
+            out = attend_chunked(q, k, v, scale=scale, bias_fn=bias_fn)
+        else:
+            bias = mask_bias(pos1d, pos1d, causal=causal, window=window,
+                             prefix_len=prefix_len)
+            out = attend(q, k, v, bias[None], scale=scale)
+
+    out = logical(out, ("batch", "seq", "heads", "head_dim"))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return logical(y, ("batch", "seq", "embed")), new_cache
+
+
+def cross_attention(params, x, kv_cache, *, acfg, norm_eps=1e-6):
+    """Cross-attention against precomputed encoder K/V (full, unmasked)."""
+    hd = acfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if acfg.qk_norm:
+        q = common.head_rmsnorm(q, norm_eps)
+    scale = acfg.softmax_scale or (1.0 / hd**0.5)
+    t = kv_cache["k"].shape[1]
+    bias = jnp.zeros((1, x.shape[1], t), jnp.float32)
+    out = attend(q, kv_cache["k"], kv_cache["v"], bias, scale=scale)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return logical(y, ("batch", "seq", "embed"))
+
+
+def encoder_kv(params, enc_out, *, acfg):
+    """Precompute cross-attention K/V from encoder output (no RoPE)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"])
+    return {"k": k, "v": v}
+
+
+def init_cache(batch, max_len, acfg, dtype):
+    kvh, hd = acfg.num_kv_heads, acfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, kvh, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kvh, hd), dtype),
+    }
+
+
+def cache_spec(batch, max_len, acfg, dtype):
+    kvh, hd = acfg.num_kv_heads, acfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, max_len, kvh, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, max_len, kvh, hd), dtype),
+    }

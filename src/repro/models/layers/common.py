@@ -1,0 +1,117 @@
+"""Shared layer primitives: initializers, RMSNorm, RoPE, embeddings, MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import logical
+
+
+def dense_init(key, shape, dtype, *, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = (1.0 / max(1, fan_in)) ** 0.5
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (0.02 * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def head_rmsnorm(x, eps=1e-6):
+    """Per-head QK-norm (no learned scale; qwen3/gemma3 style simplification)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta):
+    """Rotary embedding. x: [..., seq, heads, head_dim], positions: [..., seq]."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freq  # [..., seq, half]
+    cos = jnp.cos(angles)[..., :, None, :]  # [..., seq, 1, half]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x32_1, x32_2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x32_1 * cos - x32_2 * sin, x32_2 * cos + x32_1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab, d, dtype):
+    return {"embedding": embed_init(key, (vocab, d), dtype)}
+
+
+def embed(params, tokens):
+    out = jnp.take(params["embedding"], tokens, axis=0)
+    return logical(out, ("batch", "seq", "embed"))
+
+
+def unembed(params, x, *, lm_head=None):
+    """Logits from hidden states; tied (embedding.T) or separate lm_head."""
+    if lm_head is not None:
+        logits = jnp.einsum("bsd,dv->bsv", x, lm_head)
+    else:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embedding"])
+    return logical(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, d_ff), dtype),
+        "w_in": dense_init(k2, (d, d_ff), dtype),
+        "w_out": dense_init(k3, (d_ff, d), dtype, fan_in=d_ff),
+    }
+
+
+def _act(name):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def mlp(params, x, act="silu"):
+    """Gated MLP (SwiGLU/GeGLU)."""
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    h = logical(_act(act)(g) * h, ("batch", "seq", "ff"))
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_out"])
+    return logical(out, ("batch", "seq", "embed"))
+
+
+def cross_entropy(logits, targets, *, ignore_id: int = -1):
+    """Mean token cross-entropy, vocab-shard friendly (no host-side gather).
+
+    logits: [B, S, V] (possibly vocab-sharded), targets: [B, S] int32.
+    """
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    tgt = jnp.take_along_axis(
+        logits32, jnp.maximum(targets, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = lse - tgt
+    mask = (targets != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

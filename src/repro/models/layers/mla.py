@@ -1,0 +1,150 @@
+"""Multi-head latent attention (DeepSeek-V3 / MiniCPM3).
+
+Queries and keys/values are low-rank-compressed; only the compressed latent
+c_kv (+ the shared rope key) is cached, which is MLA's serving advantage:
+cache is [B, S, kv_lora + rope_dim] instead of [B, S, KV·hd·2].
+
+Two decode paths:
+  * naive  — reconstruct per-head K/V from the cached latents every step
+             (faithful to the algebra; expensive: O(S·lora·H·hd)/token);
+  * absorb — fold W_UK/W_UV into the query/output projections so attention
+             runs directly in the latent space (O(S·lora)/token). This is the
+             §Perf "matmul absorption" optimization (cfg.mla.absorb_decode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import common
+from repro.models.layers.attention import attend, attend_chunked, mask_bias, Q_BLOCK, CHUNK_THRESHOLD
+from repro.sharding import logical
+
+
+def init_mla(key, d_model, mcfg, dtype):
+    ks = jax.random.split(key, 8)
+    h = mcfg.num_heads
+    qd = mcfg.nope_head_dim + mcfg.rope_head_dim
+    return {
+        "wq_a": common.dense_init(ks[0], (d_model, mcfg.q_lora_rank), dtype),
+        "q_norm": common.init_rmsnorm(mcfg.q_lora_rank, dtype),
+        "wq_b": common.dense_init(ks[1], (mcfg.q_lora_rank, h, qd), dtype),
+        "wkv_a": common.dense_init(ks[2], (d_model, mcfg.kv_lora_rank + mcfg.rope_head_dim), dtype),
+        "kv_norm": common.init_rmsnorm(mcfg.kv_lora_rank, dtype),
+        "wk_b": common.dense_init(ks[3], (mcfg.kv_lora_rank, h, mcfg.nope_head_dim), dtype),
+        "wv_b": common.dense_init(ks[4], (mcfg.kv_lora_rank, h, mcfg.v_head_dim), dtype),
+        "wo_mla": common.dense_init(
+            ks[5], (h, mcfg.v_head_dim, d_model), dtype, fan_in=h * mcfg.v_head_dim
+        ),
+    }
+
+
+def _project_q(params, x, mcfg, positions, norm_eps):
+    cq = jnp.einsum("bsd,dr->bsr", x, params["wq_a"])
+    cq = common.rmsnorm(params["q_norm"], cq, norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wq_b"])
+    q_nope = q[..., : mcfg.nope_head_dim]
+    q_rope = q[..., mcfg.nope_head_dim:]
+    rp = jnp.broadcast_to(positions if positions.ndim > 1 else positions[None, :],
+                          (x.shape[0], x.shape[1]))
+    q_rope = common.rope(q_rope, rp, mcfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(params, x, mcfg, positions, norm_eps):
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_kv = common.rmsnorm(params["kv_norm"], ckv_full[..., : mcfg.kv_lora_rank], norm_eps)
+    k_rope = ckv_full[..., mcfg.kv_lora_rank:][:, :, None, :]  # [B,S,1,rope]
+    rp = jnp.broadcast_to(positions if positions.ndim > 1 else positions[None, :],
+                          (x.shape[0], x.shape[1]))
+    k_rope = common.rope(k_rope, rp, mcfg.rope_theta)[:, :, 0, :]
+    c_kv = logical(c_kv, ("batch", "seq", "kv_lora"))
+    return c_kv, k_rope
+
+
+def mla_attention(params, x, *, mcfg, positions, causal=True, prefix_len=None,
+                  cache=None, cache_pos=None, norm_eps=1e-6):
+    """Returns (out, new_cache). Cache = {'c_kv': [B,S,lora], 'k_rope': [B,S,rope]}."""
+    h = mcfg.num_heads
+    scale = 1.0 / (mcfg.nope_head_dim + mcfg.rope_head_dim) ** 0.5
+    q_nope, q_rope = _project_q(params, x, mcfg, positions, norm_eps)
+    c_kv, k_rope = _project_kv_latent(params, x, mcfg, positions, norm_eps)
+
+    if cache is not None and cache_pos is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), cache_pos, axis=1)
+        cr = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), cache_pos, axis=1)
+        ck = logical(ck, ("batch", "cache_seq", "kv_lora"))
+        new_cache = {"c_kv": ck, "k_rope": cr}
+        t = ck.shape[1]
+        k_valid = jnp.arange(t)[None, :] <= cache_pos
+        bias = mask_bias(positions, jnp.arange(t)[None, :], causal=causal, k_valid=k_valid)
+
+        if mcfg.absorb_decode:
+            # fold W_UK into q, W_UV into the output: attention in latent space
+            q_eff = jnp.einsum("bshn,rhn->bshr", q_nope, params["wk_b"])
+            s_nope = jnp.einsum("bshr,btr->bhst", q_eff, ck).astype(jnp.float32)
+            s_rope = jnp.einsum("bshr,btr->bhst", q_rope, cr).astype(jnp.float32)
+            scores = (s_nope + s_rope) * scale + bias[:, None, :, :]
+            probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+            o_lat = jnp.einsum("bhst,btr->bshr", probs, ck)
+            out = jnp.einsum("bshr,rhv->bshv", o_lat, params["wv_b"])
+        else:
+            # naive: reconstruct per-head K/V from the latent cache
+            k_nope = jnp.einsum("btr,rhn->bthn", ck, params["wk_b"])
+            v = jnp.einsum("btr,rhv->bthv", ck, params["wv_b"])
+            s_nope = jnp.einsum("bshn,bthn->bhst", q_nope, k_nope).astype(jnp.float32)
+            s_rope = jnp.einsum("bshr,btr->bhst", q_rope, cr).astype(jnp.float32)
+            scores = (s_nope + s_rope) * scale + bias[:, None, :, :]
+            probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+            out = jnp.einsum("bhst,bthv->bshv", probs, v)
+        y = jnp.einsum("bshv,hvd->bsd", out, params["wo_mla"])
+        return logical(y, ("batch", "seq", "embed")), new_cache
+
+    # train / prefill: expand K/V per head, chunked over query blocks
+    new_cache = None
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, axis=1)
+        cr = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), 0, axis=1)
+        ck = logical(ck, ("batch", "cache_seq", "kv_lora"))
+        new_cache = {"c_kv": ck, "k_rope": cr}
+
+    k_nope = jnp.einsum("btr,rhn->bthn", c_kv, params["wk_b"])
+    v = jnp.einsum("btr,rhv->bthv", c_kv, params["wv_b"])
+    k_nope = logical(k_nope, ("batch", "seq", "heads", "head_dim"))
+    v = logical(v, ("batch", "seq", "heads", "head_dim"))
+    # pack the shared rope key alongside per-head nope keys by concatenation
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                k_rope.shape[:2] + (h, mcfg.rope_head_dim))
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    pos1d = positions if positions.ndim == 1 else positions[0]
+    qlen = q_full.shape[1]
+    if qlen > CHUNK_THRESHOLD and qlen % Q_BLOCK == 0:
+        def bias_fn(start):
+            qp = jax.lax.dynamic_slice_in_dim(pos1d, start, Q_BLOCK)
+            return mask_bias(qp, pos1d, causal=causal, prefix_len=prefix_len)
+
+        out = attend_chunked(q_full, k_full, v, scale=scale, bias_fn=bias_fn)
+    else:
+        bias = mask_bias(pos1d, pos1d, causal=causal, prefix_len=prefix_len)
+        out = attend(q_full, k_full, v, bias[None], scale=scale)
+    y = jnp.einsum("bshv,hvd->bsd", out, params["wo_mla"])
+    return logical(y, ("batch", "seq", "embed")), new_cache
+
+
+def init_mla_cache(batch, max_len, mcfg, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, mcfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, mcfg.rope_head_dim), dtype),
+    }
+
+
+def mla_cache_spec(batch, max_len, mcfg, dtype):
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, max_len, mcfg.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, max_len, mcfg.rope_head_dim), dtype),
+    }

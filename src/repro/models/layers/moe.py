@@ -1,0 +1,113 @@
+"""Token-choice top-k mixture-of-experts with static per-expert capacity and
+group-local routing.
+
+Routing: every token picks its top-k experts by router probability; every
+expert keeps its top-C tokens per *routing group* (C = T_g·top_k/E·cf) ranked
+by router weight — the standard shardable capacity formulation (tokens beyond
+capacity are dropped and flow through the residual connection).
+
+``routing_groups`` is set by the launcher to the number of data shards so a
+group never crosses a data-parallel boundary: the token→expert gather then
+runs shard-locally (activations are replicated over the model axis) and the
+expert→token combine is a partial-sum that GSPMD turns into one all-reduce
+over the model axis — the expert-parallel collective that §Roofline measures.
+
+Also provides DeepSeek's shared expert(s) and Arctic's parallel dense
+residual MLP, plus the switch-style load-balancing auxiliary loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import common
+from repro.sharding import logical
+
+
+def init_moe(key, d_model, mcfg, dtype):
+    ks = jax.random.split(key, 8)
+    e, f = mcfg.num_experts, mcfg.d_expert
+    params = {
+        "router": common.dense_init(ks[0], (d_model, e), dtype),
+        "we_gate": common.dense_init(ks[1], (e, d_model, f), dtype, fan_in=d_model),
+        "we_in": common.dense_init(ks[2], (e, d_model, f), dtype, fan_in=d_model),
+        "we_out": common.dense_init(ks[3], (e, f, d_model), dtype, fan_in=f),
+    }
+    if mcfg.num_shared_experts > 0:
+        params["shared"] = common.init_mlp(
+            ks[4], d_model, f * mcfg.num_shared_experts, dtype
+        )
+    if mcfg.dense_residual_d_ff > 0:
+        params["dense_residual"] = common.init_mlp(
+            ks[5], d_model, mcfg.dense_residual_d_ff, dtype
+        )
+    return params
+
+
+def _capacity(tokens_per_group: int, mcfg) -> int:
+    cap = int(tokens_per_group * mcfg.top_k * mcfg.capacity_factor / mcfg.num_experts)
+    return max(1, min(cap, tokens_per_group))
+
+
+def moe_apply(params, x, *, mcfg, act="silu", routing_groups: int = 1):
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    e = mcfg.num_experts
+    g = routing_groups if t % routing_groups == 0 else 1
+    tg = t // g
+    xf = x.reshape(g, tg, d)
+    xf = logical(xf, ("batch", None, "embed"))
+
+    # ---- routing (fp32) ----------------------------------------------------
+    logits = jnp.einsum("gtd,de->gte", xf, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, mcfg.top_k)  # [G, Tg, k]
+    top_vals = top_vals / jnp.sum(top_vals, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch-style): E·Σ_e f_e·p_e
+    assign_onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)  # [G,Tg,k,E]
+    frac_tokens = jnp.mean(jnp.sum(assign_onehot, axis=2), axis=(0, 1))  # [E]
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs) * mcfg.aux_loss_weight
+
+    # per-(token, expert) gate within each group
+    gates_te = jnp.einsum("gtk,gtke->gte", top_vals, assign_onehot)  # [G,Tg,E]
+
+    # ---- per-expert top-C token selection (capacity), group-local ----------
+    c = _capacity(tg, mcfg)
+    gates_et = jnp.swapaxes(gates_te, 1, 2)  # [G, E, Tg]
+    sel_gate, sel_idx = jax.lax.top_k(gates_et, c)  # [G, E, C]
+    keep = sel_gate > 0.0
+
+    xe = jnp.take_along_axis(
+        xf[:, None, :, :],  # [G, 1, Tg, d]
+        sel_idx[..., None],  # [G, E, C, 1]
+        axis=2,
+    )  # [G, E, C, d]
+    xe = logical(xe, ("batch", "experts", "capacity", "embed"))
+
+    # ---- expert computation (grouped SwiGLU) --------------------------------
+    gate = jnp.einsum("gecd,edf->gecf", xe, params["we_gate"])
+    h = jnp.einsum("gecd,edf->gecf", xe, params["we_in"])
+    h = logical(common._act(act)(gate) * h, ("batch", "experts", "capacity", "ff"))
+    ye = jnp.einsum("gecf,efd->gecd", h, params["we_out"])
+    ye = ye * (sel_gate * keep).astype(ye.dtype)[..., None]
+    ye = logical(ye, ("batch", "experts", "capacity", "embed"))
+
+    # ---- combine back to token space (scatter-add per group) ---------------
+    def combine_group(y_g, idx_g):
+        return jnp.zeros((tg, d), y_g.dtype).at[idx_g.reshape(-1)].add(
+            y_g.reshape(e * c, d), mode="drop"
+        )
+
+    out = jax.vmap(combine_group)(ye, sel_idx)  # [G, Tg, d]
+    out = out.reshape(b, s, d)
+    out = logical(out, ("batch", "seq", "embed"))
+
+    # ---- shared expert / dense residual (always-on paths) ------------------
+    if "shared" in params:
+        out = out + common.mlp(params["shared"], x, act)
+    if "dense_residual" in params:
+        out = out + common.mlp(params["dense_residual"], x, act)
+    return out, aux

@@ -1,0 +1,226 @@
+"""Mamba2 block — SSD (state-space duality) with chunked parallel scan.
+
+Train/prefill uses the chunked SSD algorithm (quadratic attention-like within
+chunks + associative state recurrence across chunks); decode is the O(1)
+recurrent update on the [B, H, P, N] state (the reason the SSM archs run the
+long_500k shape). A Pallas TPU kernel for the intra-chunk compute lives in
+``repro.kernels.ssd_scan`` with this file's ``ssd_reference`` as its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import common
+from repro.sharding import logical
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def _segsum(la):
+    """Lower-triangular pairwise decay sums. la: [..., cl] -> [..., cl, cl]
+    with out[..., i, j] = Σ_{j < t <= i} la_t  (−inf above diagonal)."""
+    cl = la.shape[-1]
+    cs = jnp.cumsum(la, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # Σ_{j<t<=i}
+    mask = jnp.tril(jnp.ones((cl, cl), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd(x, dt, a_coef, b_in, c_in, *, chunk: int, initial_state=None):
+    """Chunked SSD.
+
+    x:  [B, L, H, P]   inputs (already multiplied by nothing; dt applied here)
+    dt: [B, L, H]      positive step sizes
+    a_coef: [H]        negative decay coefficients (A)
+    b_in, c_in: [B, L, G, N]  input/output projections (G groups, H % G == 0)
+    Returns (y [B,L,H,P], final_state [B,H,P,N]).
+    """
+    bsz, l, h, p = x.shape
+    g, n = b_in.shape[2], b_in.shape[3]
+    assert l % chunk == 0, f"seq {l} % chunk {chunk} != 0"
+    nc = l // chunk
+    rep = h // g
+
+    # broadcast groups to heads
+    bh = jnp.repeat(b_in, rep, axis=2)  # [B, L, H, N]
+    ch = jnp.repeat(c_in, rep, axis=2)
+
+    la = dt * a_coef[None, None, :]  # [B, L, H] (negative)
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    lac = la.reshape(bsz, nc, chunk, h)
+    bc = bh.reshape(bsz, nc, chunk, h, n)
+    cc = ch.reshape(bsz, nc, chunk, h, n)
+
+    # ---- intra-chunk (quadratic within chunk) -----------------------------
+    lseg = _segsum(jnp.moveaxis(lac, -1, -2))  # [B, nc, H, cl, cl]
+    decay = jnp.exp(lseg)
+    scores = jnp.einsum("bzihn,bzjhn->bzhij", cc, bc)  # C_i · B_j
+    y_diag = jnp.einsum(
+        "bzhij,bzjh,bzjhp->bzihp", (scores * decay).astype(x.dtype), dtc, xc
+    )
+
+    # ---- chunk states ------------------------------------------------------
+    cs = jnp.cumsum(lac, axis=2)  # [B, nc, cl, H]
+    total = cs[:, :, -1, :]  # [B, nc, H]
+    decay_to_end = jnp.exp(total[:, :, None, :] - cs)  # [B, nc, cl, H]
+    states = jnp.einsum(
+        "bzjh,bzjhn,bzjhp->bzhpn", (decay_to_end * dtc).astype(x.dtype), bc, xc
+    )
+
+    # ---- inter-chunk recurrence -------------------------------------------
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, p, n), x.dtype)
+
+    def step(s_prev, inputs):
+        st, tot = inputs  # [B,H,P,N], [B,H]
+        s_new = s_prev * jnp.exp(tot)[:, :, None, None].astype(x.dtype) + st
+        return s_new, s_prev
+
+    states_t = jnp.moveaxis(states, 1, 0)  # [nc, B, H, P, N]
+    total_t = jnp.moveaxis(total, 1, 0)  # [nc, B, H]
+    final_state, prev_states = jax.lax.scan(step, initial_state, (states_t, total_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [B, nc, H, P, N]
+
+    # ---- inter-chunk output contribution ----------------------------------
+    in_decay = jnp.exp(cs)  # decay from chunk start to position i
+    y_off = jnp.einsum(
+        "bzihn,bzih,bzhpn->bzihp", cc, in_decay.astype(x.dtype), prev_states
+    )
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y, final_state
+
+
+def ssd_decode_step(state, x_t, dt_t, a_coef, b_t, c_t):
+    """One recurrent step. state: [B,H,P,N]; x_t: [B,H,P]; dt_t: [B,H];
+    b_t, c_t: [B,G,N]. Returns (y_t [B,H,P], new_state)."""
+    h = x_t.shape[1]
+    g = b_t.shape[1]
+    rep = h // g
+    bh = jnp.repeat(b_t, rep, axis=1)  # [B,H,N]
+    ch = jnp.repeat(c_t, rep, axis=1)
+    da = jnp.exp(dt_t * a_coef[None, :])  # [B,H]
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt_t, bh, x_t)
+    new_state = state * da[:, :, None, None].astype(state.dtype) + upd.astype(state.dtype)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ch.astype(state.dtype))
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def _dims(d_model, scfg):
+    d_inner = scfg.expand * d_model
+    h = d_inner // scfg.head_dim
+    conv_ch = d_inner + 2 * scfg.num_groups * scfg.state_dim
+    return d_inner, h, conv_ch
+
+
+def init_mamba(key, d_model, scfg, dtype):
+    ks = jax.random.split(key, 6)
+    d_inner, h, conv_ch = _dims(d_model, scfg)
+    n, g = scfg.state_dim, scfg.num_groups
+    proj_out = 2 * d_inner + 2 * g * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": common.dense_init(ks[0], (d_model, proj_out), dtype),
+        "conv_w": common.dense_init(ks[1], (scfg.conv_width, conv_ch), dtype, fan_in=scfg.conv_width),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((h,), dtype),  # A = -exp(a_log) = -1 at init
+        "ssm_d": jnp.ones((h,), dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "out_proj": common.dense_init(ks[2], (d_inner, d_model), dtype, fan_in=d_inner),
+    }
+
+
+def _split_proj(proj, d_inner, g, n, h):
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner: 2 * d_inner + 2 * g * n]
+    dt = proj[..., 2 * d_inner + 2 * g * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, *, state=None):
+    """Depthwise causal conv over time. xbc: [B, L, C]; state: [B, w-1, C]."""
+    w = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # [B, L+w-1, C]
+    out = sum(
+        xp[:, i: i + xbc.shape[1], :] * conv_w[i][None, None, :] for i in range(w)
+    ) + conv_b[None, None, :]
+    new_state = xp[:, -(w - 1):, :] if w > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def mamba_apply(params, x, *, scfg, d_model, cache=None, decode=False):
+    """x: [B, L, d]. cache = {'ssm': [B,H,P,N], 'conv': [B,w-1,C]} for decode.
+    Returns (out, new_cache)."""
+    d_inner, h, conv_ch = _dims(d_model, scfg)
+    n, g, p = scfg.state_dim, scfg.num_groups, scfg.head_dim
+
+    proj = jnp.einsum("bld,dk->blk", x, params["in_proj"])
+    proj = logical(proj, ("batch", "seq", "ssm_inner"))
+    z, xbc, dt = _split_proj(proj, d_inner, g, n, h)
+    a_coef = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+
+    if decode:
+        xbc_c, new_conv = _causal_conv(
+            xbc, params["conv_w"], params["conv_b"], state=cache["conv"]
+        )
+        xs = xbc_c[..., :d_inner]
+        b_in = xbc_c[..., d_inner: d_inner + g * n]
+        c_in = xbc_c[..., d_inner + g * n:]
+        x_t = xs[:, 0].reshape(-1, h, p)
+        b_t = b_in[:, 0].reshape(-1, g, n)
+        c_t = c_in[:, 0].reshape(-1, g, n)
+        y_t, new_ssm = ssd_decode_step(
+            cache["ssm"], x_t, dt[:, 0], a_coef, b_t, c_t
+        )
+        y = y_t[:, None].reshape(x.shape[0], 1, d_inner)
+        y = y + xs * params["ssm_d"].repeat(p)[None, None, :].astype(y.dtype)
+        new_cache = {"ssm": new_ssm, "conv": new_conv}
+    else:
+        xbc_c, last_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        xs = xbc_c[..., :d_inner]
+        b_in = xbc_c[..., d_inner: d_inner + g * n]
+        c_in = xbc_c[..., d_inner + g * n:]
+        bsz, l = x.shape[0], x.shape[1]
+        xh = xs.reshape(bsz, l, h, p)
+        y, final_state = ssd(
+            xh, dt, a_coef, b_in.reshape(bsz, l, g, n), c_in.reshape(bsz, l, g, n),
+            chunk=min(scfg.chunk, l),
+        )
+        y = y.reshape(bsz, l, d_inner)
+        y = y + xs * params["ssm_d"].repeat(p)[None, None, :].astype(y.dtype)
+        new_cache = None
+        if cache is not None:  # prefill: hand the state to the decoder
+            new_cache = {"ssm": final_state, "conv": last_conv}
+
+    y = (y * jax.nn.silu(z)).astype(x.dtype)
+    y = logical(y, ("batch", "seq", "ssm_inner"))
+    out = jnp.einsum("blk,kd->bld", y, params["out_proj"]).astype(x.dtype)
+    return logical(out, ("batch", "seq", "embed")), new_cache
+
+
+def init_ssm_cache(batch, d_model, scfg, dtype):
+    d_inner, h, conv_ch = _dims(d_model, scfg)
+    return {
+        "ssm": jnp.zeros((batch, h, scfg.head_dim, scfg.state_dim), dtype),
+        "conv": jnp.zeros((batch, scfg.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def ssm_cache_spec(batch, d_model, scfg, dtype):
+    d_inner, h, conv_ch = _dims(d_model, scfg)
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, h, scfg.head_dim, scfg.state_dim), dtype),
+        "conv": jax.ShapeDtypeStruct((batch, scfg.conv_width - 1, conv_ch), dtype),
+    }

@@ -1,0 +1,170 @@
+"""Step builders + abstract input specs for every (arch × input shape).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) — the dry-run lowers against these.
+
+Step functions (all functional, jit-friendly):
+  train_step(params, opt_state, batch)            -> (params, opt_state, metrics)
+  prefill_step(params, batch, caches)             -> (last_logits, caches)
+  serve_step(params, caches, tokens, pos [,cross])-> (logits, caches)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer
+from repro.optim import Optimizer
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """VLM shapes budget the image patches inside seq_len."""
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        return max(16, seq_len - cfg.frontend.seq)
+    return seq_len
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape):
+    """Training / prefill batch ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((b, _text_len(cfg, s)), jnp.int32)}
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend.seq, cfg.frontend.dim), jnp.bfloat16
+            if cfg.dtype == "bfloat16" else jnp.float32)
+    if cfg.encoder is not None:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend.seq, cfg.frontend.dim), jnp.bfloat16
+            if cfg.dtype == "bfloat16" else jnp.float32)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape):
+    """(tokens, caches, pos[, cross_kv]) specs for a serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "caches": transformer.cache_specs(cfg, b, s),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.encoder is not None:
+        specs["cross_kv"] = transformer.cross_kv_specs(cfg, b)
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    if shape.kind in ("train", "prefill"):
+        base = batch_specs(cfg, shape)
+        if shape.kind == "prefill":
+            return {"batch": base, "caches": transformer.cache_specs(
+                cfg, shape.global_batch, shape.seq_len)}
+        return {"batch": base}
+    return decode_specs(cfg, shape)
+
+
+def concrete_batch(cfg: ModelConfig, shape: InputShape, key):
+    """Real arrays matching batch_specs (for smoke tests / examples)."""
+    specs = batch_specs(cfg, shape)
+    ks = jax.random.split(key, len(specs))
+    out = {}
+    for k, (name, spec) in zip(ks, specs.items()):
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, spec.shape, 0, cfg.vocab_size, spec.dtype)
+        else:
+            out[name] = jax.random.normal(k, spec.shape, spec.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *, moe_groups: int = 1):
+    def loss_fn(params, batch):
+        return transformer.lm_loss(params, cfg, batch, moe_groups=moe_groups)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_loss(cfg: ModelConfig, *, moe_groups: int = 1):
+    def eval_loss(params, batch):
+        loss, _ = transformer.lm_loss(params, cfg, batch, moe_groups=moe_groups)
+        return loss
+
+    return eval_loss
+
+
+def make_prefill_step(cfg: ModelConfig, *, moe_groups: int = 1):
+    def prefill_step(params, batch, caches):
+        return transformer.prefill(params, cfg, batch, caches, moe_groups=moe_groups)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, moe_groups: int = 1):
+    if cfg.encoder is not None:
+        def serve_step(params, caches, tokens, pos, cross_kv):
+            return transformer.decode_step(
+                params, cfg, tokens, caches, pos, cross_kv=cross_kv,
+                moe_groups=moe_groups)
+    else:
+        def serve_step(params, caches, tokens, pos):
+            return transformer.decode_step(
+                params, cfg, tokens, caches, pos, moe_groups=moe_groups)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter / FLOP accounting (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+
+    params = jax.eval_shape(lambda k: transformer.init_model(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(params))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Activated parameters per token (MoE: only top-k + shared experts)."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    moe_layers = cfg.num_layers - m.first_dense_layers
+    per_expert = 3 * cfg.d_model * m.d_expert
+    routed_total = moe_layers * m.num_experts * per_expert
+    routed_active = moe_layers * m.top_k * per_expert
+    return total - routed_total + routed_active
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE); D = tokens processed.
+
+    For decode shapes, D = global_batch (one token per sequence); training
+    counts fwd+bwd (6·N·D), inference counts 2·N·D.
+    """
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    d = shape.global_batch  # decode: one new token per sequence
+    return 2.0 * n * d

@@ -1,0 +1,411 @@
+"""The model zoo's unified network: dense / MoE / MLA / SSM / hybrid decoder
+LMs, enc-dec (audio), and VLM (prefix-LM), built from scanned block stacks.
+
+Public surface:
+  init_model(cfg, key)                     -> params
+  forward(params, cfg, batch, *, ctx)      -> (logits, aux_loss)
+  lm_loss(params, cfg, batch)              -> (loss, metrics)
+  prefill(params, cfg, batch, caches)      -> (last_logits, caches)
+  decode_step(params, cfg, tokens, caches, pos [, cross])
+  init_caches / cache_specs(cfg, batch, max_len)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import common, mla as mla_lib, ssm as ssm_lib
+from repro.sharding import logical
+
+MTP_WEIGHT = 0.3  # deepseek-v3 MTP loss weight
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_model(cfg, key):
+    dtype = cfg.param_dtype()
+    keys = jax.random.split(key, 16)
+    params = {"embed": common.init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dtype)}
+
+    if cfg.arch_type == "hybrid":
+        init_fn, _ = blocks.make_block(cfg, "mamba")
+        params["seg0"] = blocks.init_stack(keys[1], init_fn, cfg.num_layers)
+        sh_init, _ = blocks.make_shared_attn_block(cfg)
+        params["shared_block"] = sh_init(keys[2])
+    else:
+        for i, (kind, count) in enumerate(cfg.block_kinds()):
+            init_fn, _ = blocks.make_block(cfg, kind)
+            params[f"seg{i}"] = blocks.init_stack(keys[1 + i], init_fn, count)
+
+    if cfg.encoder is not None:
+        enc_cfg = _encoder_block_cfg(cfg)
+        enc_init, _ = blocks.make_block(enc_cfg, "attn_dense")
+        params["encoder"] = {
+            "segments": blocks.init_stack(keys[5], enc_init, cfg.encoder.num_layers),
+            "final_norm": common.init_rmsnorm(cfg.d_model, dtype),
+        }
+        # decoder cross-attention stack (one per decoder layer)
+        cross_init = functools.partial(
+            attn_lib.init_attention, d_model=cfg.d_model, acfg=cfg.attention, dtype=dtype
+        )
+        params["cross"] = blocks.init_stack(
+            keys[6], lambda k: {"attn": cross_init(k), "norm": common.init_rmsnorm(cfg.d_model, dtype)},
+            cfg.num_layers,
+        )
+
+    if cfg.frontend is not None:
+        params["frontend_proj"] = {
+            "proj": common.dense_init(keys[7], (cfg.frontend.dim, cfg.d_model), dtype)
+        }
+
+    params["final_norm"] = common.init_rmsnorm(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "lm_head": common.dense_init(keys[8], (cfg.d_model, cfg.vocab_size), dtype)
+        }
+    if cfg.mtp:
+        mtp_block_init, _ = blocks.make_block(cfg, "attn_dense")
+        params["mtp"] = {
+            "proj": common.dense_init(keys[9], (2 * cfg.d_model, cfg.d_model), dtype),
+            "block": mtp_block_init(keys[10]),
+            "norm": common.init_rmsnorm(cfg.d_model, dtype),
+        }
+    return params
+
+
+def _encoder_block_cfg(cfg):
+    import dataclasses
+
+    return dataclasses.replace(
+        cfg, attention=cfg.encoder.attention, d_ff=cfg.encoder.d_ff, mla=None,
+        moe=None, dense_d_ff=0,
+    )
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# segment execution
+# ---------------------------------------------------------------------------
+
+def _run_segments(params, cfg, x, ctx, caches=None, *, collect_caches=False):
+    """Run all decoder segments. caches: dict seg name -> stacked cache (or None).
+
+    Returns (x, new_caches, aux)."""
+    aux_total = jnp.asarray(0.0, jnp.float32)
+    new_caches = {}
+    if cfg.arch_type == "hybrid":
+        x, nc, aux = _run_hybrid(params, cfg, x, ctx, caches)
+        new_caches = nc
+        aux_total += aux
+    else:
+        offset = 0
+        for i, (kind, count) in enumerate(cfg.block_kinds()):
+            _, apply_fn = blocks.make_block(cfg, kind)
+            meta = None
+            if cfg.attention is not None and cfg.mla is None:
+                meta = blocks._meta_theta_window(cfg, count, offset)
+            seg_params = params[f"seg{i}"]
+            if cfg.encoder is not None:
+                meta = {**(meta or {}), "cross": ctx_cross_kv(ctx)}
+                apply_fn = _wrap_encdec(cfg, apply_fn)
+                seg_params = {**seg_params, "xattn": params["cross"]}
+            seg_cache = caches.get(f"seg{i}") if caches else None
+            x, nc, aux = blocks.apply_stack(
+                seg_params, x, ctx, apply_fn, caches=seg_cache, meta=meta,
+                remat=cfg.remat and ctx.mode == "train",
+                unroll=not cfg.scan_layers,
+            )
+            if collect_caches or seg_cache is not None:
+                new_caches[f"seg{i}"] = nc
+            aux_total += aux
+            offset += count
+    return x, new_caches, aux_total
+
+
+def ctx_cross_kv(ctx):
+    return getattr(ctx, "cross_kv", None)
+
+
+def _wrap_encdec(cfg, base_apply):
+    """Adds cross-attention (meta['cross']) after self-attention in each block."""
+
+    def apply(p, x, cache, meta, ctx):
+        self_meta = {k: v for k, v in meta.items() if k != "cross"} or None
+        self_cache = cache["self"] if cache is not None else None
+        x, new_self, aux = base_apply(
+            {k: v for k, v in p.items() if k != "xattn"}, x, self_cache, self_meta, ctx
+        )
+        cross = meta["cross"]
+        if cross is not None:
+            h = attn_lib.cross_attention(
+                p["xattn"]["attn"],
+                common.rmsnorm(p["xattn"]["norm"], x, cfg.norm_eps),
+                cross, acfg=cfg.attention, norm_eps=cfg.norm_eps,
+            )
+            x = x + h
+        new_cache = {"self": new_self} if cache is not None else None
+        return x, new_cache, aux
+
+    return apply
+
+
+def _run_hybrid(params, cfg, x, ctx, caches=None):
+    """Zamba2: scan groups of ``period`` Mamba layers + one shared-attn block."""
+    period = cfg.hybrid.period
+    total = cfg.num_layers
+    n_groups = total // period
+    head_n = n_groups * period
+    _, mamba_apply = blocks.make_block(cfg, "mamba")
+    _, shared_apply = blocks.make_shared_attn_block(cfg)
+    shared_p = params["shared_block"]
+
+    mp = params["seg0"]
+    head_p = jax.tree.map(lambda t: t[:head_n].reshape((n_groups, period) + t.shape[1:]), mp)
+    tail_p = jax.tree.map(lambda t: t[head_n:], mp)
+
+    m_caches = caches.get("mamba") if caches else None
+    s_caches = caches.get("shared") if caches else None
+    head_c = tail_c = None
+    if m_caches is not None:
+        head_c = jax.tree.map(
+            lambda t: t[:head_n].reshape((n_groups, period) + t.shape[1:]), m_caches)
+        tail_c = jax.tree.map(lambda t: t[head_n:], m_caches)
+
+    def group_body(carry, xs):
+        gp, gc_m, gc_s = xs
+        y, new_m, aux = blocks.apply_stack(
+            gp, carry, ctx, mamba_apply,
+            caches=gc_m if m_caches is not None else None,
+            unroll=not cfg.scan_layers,
+        )
+        y, new_s = shared_apply(shared_p, y, gc_s if s_caches is not None else None, ctx)
+        return y, (new_m if m_caches is not None else 0,
+                   new_s if s_caches is not None else 0, aux)
+
+    body = group_body
+    if cfg.remat and ctx.mode == "train":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    xs = (head_p,
+          head_c if m_caches is not None else jnp.zeros((n_groups,)),
+          s_caches if s_caches is not None else jnp.zeros((n_groups,)))
+    if cfg.scan_layers:
+        x, (new_head_c, new_s_c, auxs) = jax.lax.scan(body, x, xs)
+    else:
+        outs = []
+        for gi in range(n_groups):
+            sl = jax.tree.map(lambda t: t[gi], xs)
+            x, out = body(x, sl)
+            outs.append(out)
+        new_head_c, new_s_c, auxs = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+
+    new_caches = {}
+    if total > head_n:
+        x, new_tail_c, aux_t = blocks.apply_stack(
+            tail_p, x, ctx, mamba_apply,
+            caches=tail_c if m_caches is not None else None,
+            unroll=not cfg.scan_layers,
+        )
+    else:
+        new_tail_c, aux_t = None, 0.0
+    if m_caches is not None:
+        flat_head = jax.tree.map(
+            lambda t: t.reshape((head_n,) + t.shape[2:]), new_head_c)
+        if new_tail_c is not None:
+            new_caches["mamba"] = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), flat_head, new_tail_c)
+        else:
+            new_caches["mamba"] = flat_head
+    if s_caches is not None:
+        new_caches["shared"] = new_s_c
+    return x, new_caches, jnp.sum(auxs) + aux_t
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _encode(params, cfg, frames):
+    """Audio/enc-dec encoder over frontend embeddings [B, T, front_dim]."""
+    x = jnp.einsum("btf,fd->btd", frames, params["frontend_proj"]["proj"])
+    x = logical(x, ("batch", "seq", "embed"))
+    enc_cfg = _encoder_block_cfg(cfg)
+    _, enc_apply = blocks.make_block(enc_cfg, "attn_dense")
+    ctx = blocks.Ctx(positions=jnp.arange(frames.shape[1], dtype=jnp.int32),
+                     mode="train", causal=False)
+    meta = blocks._meta_theta_window(enc_cfg, cfg.encoder.num_layers)
+    x, _, _ = blocks.apply_stack(
+        params["encoder"]["segments"], x, ctx, enc_apply, meta=meta,
+        remat=cfg.remat, unroll=not cfg.scan_layers,
+    )
+    return common.rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def _cross_kv_from_encoder(params, cfg, enc_out):
+    """Per-decoder-layer cross K/V, stacked on the layer axis."""
+
+    def one(p):
+        return attn_lib.encoder_kv(p["attn"], enc_out, acfg=cfg.attention)
+
+    return jax.vmap(one, in_axes=0)(params["cross"])
+
+
+def _embed_inputs(params, cfg, batch):
+    """Token (+frontend) embedding. Returns (x, prefix_len)."""
+    x = common.embed(params["embed"], batch["tokens"])
+    prefix_len = None
+    if cfg.frontend is not None and cfg.frontend.kind == "vision" \
+            and "image_embeds" in batch:  # decode steps run past the prefix
+        img = jnp.einsum("bpf,fd->bpd", batch["image_embeds"].astype(x.dtype),
+                         params["frontend_proj"]["proj"])
+        x = jnp.concatenate([img, x], axis=1)
+        if cfg.frontend.prefix_bidirectional:
+            prefix_len = cfg.frontend.seq
+    return logical(x, ("batch", "seq", "embed")), prefix_len
+
+
+def forward(params, cfg, batch, *, mode="train", caches=None, cache_pos=None,
+            moe_groups=1):
+    """Full forward. Returns (logits, new_caches, aux_loss)."""
+    x, prefix_len = _embed_inputs(params, cfg, batch)
+    seq = x.shape[1]
+    if cache_pos is None:
+        positions = jnp.arange(seq, dtype=jnp.int32)
+    else:
+        positions = jnp.full((x.shape[0], seq), cache_pos, jnp.int32)
+
+    ctx = blocks.Ctx(positions=positions, mode=mode, cache_pos=cache_pos,
+                     prefix_len=prefix_len, moe_groups=moe_groups)
+    if cfg.encoder is not None:
+        if "cross_kv" in (batch or {}):
+            ctx.cross_kv = batch["cross_kv"]
+        else:
+            enc_out = _encode(params, cfg, batch["frames"].astype(x.dtype))
+            ctx.cross_kv = _cross_kv_from_encoder(params, cfg, enc_out)
+
+    x, new_caches, aux = _run_segments(params, cfg, x, ctx, caches)
+    h = common.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = common.unembed(
+        params["embed"], h,
+        lm_head=params["lm_head"]["lm_head"] if not cfg.tie_embeddings else None,
+    )
+    return logits, new_caches, aux, h
+
+
+def _mtp_loss(params, cfg, h, tokens):
+    """DeepSeek multi-token prediction: predict t+2 from (h_t, emb(t+1))."""
+    emb_next = common.embed(params["embed"], tokens[:, 1:])  # [B, S-1, d]
+    h_in = jnp.concatenate([h[:, :-1], emb_next], axis=-1)
+    x = jnp.einsum("bsd,dk->bsk", h_in, params["mtp"]["proj"])
+    _, apply_fn = blocks.make_block(cfg, "attn_dense")
+    ctx = blocks.Ctx(positions=jnp.arange(x.shape[1], dtype=jnp.int32), mode="train")
+    x, _, _ = apply_fn(params["mtp"]["block"], x, None, None, ctx)
+    x = common.rmsnorm(params["mtp"]["norm"], x, cfg.norm_eps)
+    logits = common.unembed(
+        params["embed"], x,
+        lm_head=params["lm_head"]["lm_head"] if not cfg.tie_embeddings else None,
+    )
+    # position j predicts token j+2
+    return common.cross_entropy(logits[:, :-1], tokens[:, 2:])
+
+
+def lm_loss(params, cfg, batch, *, moe_groups=1):
+    """Next-token LM loss (+aux +MTP). Returns (loss, metrics)."""
+    logits, _, aux, h = forward(params, cfg, batch, mode="train", moe_groups=moe_groups)
+    tokens = batch["tokens"]
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        text_logits = logits[:, cfg.frontend.seq:, :]
+    else:
+        text_logits = logits
+    xent = common.cross_entropy(text_logits[:, :-1], tokens[:, 1:])
+    loss = xent + aux
+    metrics = {"xent": xent, "aux": aux}
+    if cfg.mtp:
+        mtp = _mtp_loss(params, cfg, h, tokens)
+        loss = loss + MTP_WEIGHT * mtp
+        metrics["mtp"] = mtp
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# caches / serving
+# ---------------------------------------------------------------------------
+
+def _stack_specs(make_one, num_layers):
+    one = make_one()
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((num_layers,) + s.shape, s.dtype), one)
+
+
+def cache_specs(cfg, batch: int, max_len: int):
+    """ShapeDtypeStructs for the decode caches of this architecture."""
+    dtype = cfg.param_dtype()
+    specs = {}
+    if cfg.arch_type == "hybrid":
+        specs["mamba"] = _stack_specs(
+            lambda: ssm_lib.ssm_cache_spec(batch, cfg.d_model, cfg.ssm, dtype),
+            cfg.num_layers)
+        n_groups = cfg.num_layers // cfg.hybrid.period
+        specs["shared"] = _stack_specs(
+            lambda: attn_lib.cache_spec(batch, max_len, cfg.hybrid.shared_attn, dtype),
+            n_groups)
+        return specs
+    for i, (kind, count) in enumerate(cfg.block_kinds()):
+        if kind == "mamba":
+            spec = _stack_specs(
+                lambda: ssm_lib.ssm_cache_spec(batch, cfg.d_model, cfg.ssm, dtype), count)
+        elif cfg.mla is not None:
+            spec = _stack_specs(
+                lambda: mla_lib.mla_cache_spec(batch, max_len, cfg.mla, dtype), count)
+        else:
+            spec = _stack_specs(
+                lambda: attn_lib.cache_spec(batch, max_len, cfg.attention, dtype), count)
+        if cfg.encoder is not None:
+            spec = {"self": spec}
+        specs[f"seg{i}"] = spec
+    return specs
+
+
+def init_caches(cfg, batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, max_len))
+
+
+def cross_kv_specs(cfg, batch: int):
+    """Specs for precomputed encoder cross K/V (enc-dec decode input)."""
+    a = cfg.attention
+    t = cfg.frontend.seq
+    dtype = cfg.param_dtype()
+    return {
+        "k": jax.ShapeDtypeStruct((cfg.num_layers, batch, t, a.num_kv_heads, a.head_dim), dtype),
+        "v": jax.ShapeDtypeStruct((cfg.num_layers, batch, t, a.num_kv_heads, a.head_dim), dtype),
+    }
+
+
+def prefill(params, cfg, batch, caches, *, moe_groups=1):
+    logits, new_caches, _, _ = forward(
+        params, cfg, batch, mode="prefill", caches=caches, moe_groups=moe_groups)
+    return logits[:, -1:, :], new_caches
+
+
+def decode_step(params, cfg, tokens, caches, pos, *, cross_kv=None, moe_groups=1):
+    """One decode step: tokens [B, 1] + caches at position ``pos``.
+
+    Returns (logits [B, 1, V], new_caches)."""
+    batch = {"tokens": tokens}
+    if cross_kv is not None:
+        batch["cross_kv"] = cross_kv
+    logits, new_caches, _, _ = forward(
+        params, cfg, batch, mode="decode", caches=caches, cache_pos=pos,
+        moe_groups=moe_groups)
+    return logits, new_caches

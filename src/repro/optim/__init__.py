@@ -1,0 +1,3 @@
+from repro.optim.optimizers import Optimizer, Schedule, adamw, get_optimizer, momentum, sgd
+
+__all__ = ["Optimizer", "Schedule", "adamw", "get_optimizer", "momentum", "sgd"]

@@ -1,0 +1,49 @@
+"""Gradient accumulation (microbatching) — the memory lever identified in
+EXPERIMENTS.md §Perf(a): splits a step's batch into N microbatches, averaging
+gradients in fp32, so activation residency shrinks ~N× at the cost of N
+sequential forward/backward passes (FLOPs unchanged, collective per-step
+unchanged: one gradient sync after accumulation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer
+
+
+def make_accumulating_train_step(loss_fn, optimizer: Optimizer, *,
+                                 microbatches: int):
+    """loss_fn: (params, batch) -> (loss, metrics_dict).
+
+    Returns step(params, opt_state, batch) with batch leaves [B, ...] where
+    B % microbatches == 0; microbatch axis is processed with lax.scan.
+    """
+
+    def grad_of(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb)
+        return loss, metrics, grads
+
+    def step(params, opt_state, batch):
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            loss_sum, grad_acc = acc
+            loss, _, grads = grad_of(params, mb)
+            grad_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                grad_acc, grads)
+            return (loss_sum + loss / microbatches, grad_acc), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zero), mbs)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+
+    return step

@@ -1,0 +1,110 @@
+"""Minimal optimizer library (optax-like API, no external deps).
+
+FedChain's algorithms are SGD-based, so the distributed training path defaults
+to SGD(+momentum); AdamW is provided for the nonconvex baseline experiments.
+Giant-arch dry-runs use plain SGD to stay inside HBM (see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable  # params -> state
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def _tree_update(params, grads, fn):
+    return jax.tree.map(fn, params, grads)
+
+
+def sgd(lr: float, *, weight_decay: float = 0.0):
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        def upd(p, g):
+            g = g + weight_decay * p if weight_decay else g
+            return (p - lr * g.astype(p.dtype)).astype(p.dtype)
+
+        return _tree_update(params, grads, upd), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, *, beta: float = 0.9, nesterov: bool = False,
+             weight_decay: float = 0.0, momentum_dtype=jnp.float32):
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, momentum_dtype), params)}
+
+    def update(grads, state, params):
+        def upd_m(m, g):
+            return beta * m + g.astype(momentum_dtype)
+
+        m = jax.tree.map(upd_m, state["m"], grads)
+
+        def upd_p(p, g, mm):
+            g32 = g.astype(momentum_dtype) + weight_decay * p.astype(momentum_dtype)
+            step = beta * mm + g32 if nesterov else mm
+            return (p.astype(momentum_dtype) - lr * step).astype(p.dtype)
+
+        new_params = jax.tree.map(upd_p, params, grads, m)
+        return new_params, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, *, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0):
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adamw": adamw}[name](lr, **kw)
+
+
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Stepwise-decay LR schedule (the paper's M- variants) + warmup."""
+
+    base_lr: float
+    warmup_steps: int = 0
+    decay_every: Optional[int] = None
+    decay_factor: float = 0.5
+
+    def __call__(self, step):
+        lr = jnp.asarray(self.base_lr, jnp.float32)
+        if self.warmup_steps > 0:
+            lr = lr * jnp.minimum(1.0, (step + 1) / self.warmup_steps)
+        if self.decay_every:
+            lr = lr * self.decay_factor ** (step // self.decay_every)
+        return lr

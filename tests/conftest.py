@@ -1,0 +1,17 @@
+import os
+
+# Tests and benches must see ONE device (the dry-run sets 512 only inside
+# repro.launch.dryrun, never globally). Keep CPU determinism.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

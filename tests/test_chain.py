@@ -1,0 +1,103 @@
+"""FedChain (Algo 1) behaviour: selection, chaining gains, multistage."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms as A, chain, runner, selection
+from repro.data import problems
+
+
+@pytest.fixture(scope="module")
+def het_problem():
+    # moderate heterogeneity + gradient noise: the regime where chaining wins
+    return problems.quadratic_problem(
+        jax.random.PRNGKey(0), num_clients=8, dim=16, mu=0.05, beta=1.0,
+        zeta=2.0, sigma=0.5, sigma_f=0.0)
+
+
+def test_selection_noiseless_exact(het_problem):
+    p = het_problem
+    good = p.x_star
+    bad = p.x_star + 5.0
+    best, idx, vals = selection.select_better(
+        p, [bad, good], jax.random.PRNGKey(1), s=8, k=4)
+    assert int(idx) == 1
+    np.testing.assert_allclose(best, good)
+    assert float(vals[1]) < float(vals[0])
+
+
+def test_selection_uses_shared_samples(het_problem):
+    """Identical candidates must tie exactly (same ẑ samples for both)."""
+    p = problems.quadratic_problem(
+        jax.random.PRNGKey(0), dim=8, sigma_f=1.0)
+    x = p.init_params(jax.random.PRNGKey(0))
+    vals = selection.empirical_values(p, [x, x], jax.random.PRNGKey(2), s=4, k=4)
+    assert float(jnp.abs(vals[0] - vals[1])) == 0.0
+
+
+def test_fedchain_caps_error_at_min(het_problem):
+    """With huge ζ, A_local diverges from x*; selection must keep x̂_0's
+    quality: chain final ≤ FedAvg-only final."""
+    p = problems.quadratic_problem(
+        jax.random.PRNGKey(1), num_clients=8, dim=12, mu=0.1, beta=1.0,
+        zeta=20.0, sigma=0.0)
+    x0 = p.init_params(jax.random.PRNGKey(0))
+    fa = A.FedAvg(eta=0.5, local_steps=8, inner_batch=2)
+    sgd = A.SGD(eta=0.5, k=4, mu_avg=0.1)
+    ch = chain.fedchain(fa, sgd, selection_k=8)
+    cres = ch.run(p, x0, 40, jax.random.PRNGKey(2))
+    fres = runner.run(fa, p, x0, 40, jax.random.PRNGKey(3))
+    tol = 1e-4 * float(p.delta(x0))  # f32 noise floor near the optimum
+    assert float(p.suboptimality(cres.x_hat)) <= float(fres.history[-1]) + tol
+
+
+def test_fedchain_beats_both_moderate_heterogeneity(het_problem):
+    """Fig. 2's qualitative claim: chain ≤ both phases alone (same R)."""
+    p = het_problem
+    x0 = p.init_params(jax.random.PRNGKey(0))
+    rounds = 60
+    fa = A.FedAvg(eta=0.3, local_steps=8, inner_batch=4)
+    sgd = A.SGD(eta=0.3, k=16, mu_avg=p.mu)
+    ch = chain.fedchain(fa, sgd, selection_k=16)
+
+    def med(run_fn, n=5):
+        return float(np.median([run_fn(s) for s in range(n)]))
+
+    sub_chain = med(lambda s: float(p.suboptimality(
+        ch.run(p, x0, rounds, jax.random.PRNGKey(10 + s)).x_hat)))
+    sub_fa = med(lambda s: float(runner.run(
+        fa, p, x0, rounds, jax.random.PRNGKey(20 + s)).history[-1]))
+    sub_sgd = med(lambda s: float(runner.run(
+        sgd, p, x0, rounds, jax.random.PRNGKey(30 + s)).history[-1]))
+    assert sub_chain <= 1.5 * min(sub_fa, sub_sgd)
+    assert sub_chain < max(sub_fa, sub_sgd)
+
+
+def test_chain_history_length(het_problem):
+    p = het_problem
+    x0 = p.init_params(jax.random.PRNGKey(0))
+    ch = chain.fedchain(
+        A.FedAvg(eta=0.3), A.SGD(eta=0.3, k=4), selection_k=4)
+    res = ch.run(p, x0, 30, jax.random.PRNGKey(1))
+    assert res.history.shape == (30,)  # selection costs one round
+    assert len(res.switch_rounds) == 1
+
+
+def test_three_stage_chain(het_problem):
+    p = het_problem
+    x0 = p.init_params(jax.random.PRNGKey(0))
+    ch = chain.Chain(
+        stages=[A.FedAvg(eta=0.3), A.Scaffold(eta=0.3), A.SGD(eta=0.3, k=8, mu_avg=p.mu)],
+        fractions=[0.3, 0.3, 0.4], selection_k=8)
+    res = ch.run(p, x0, 40, jax.random.PRNGKey(1))
+    assert jnp.isfinite(res.history).all()
+    assert float(p.suboptimality(res.x_hat)) < float(res.history[0])
+
+
+def test_selection_error_bound_formula():
+    p = problems.quadratic_problem(jax.random.PRNGKey(0), num_clients=10,
+                                   dim=4, zeta=1.0, sigma_f=0.5)
+    full = selection.selection_error_bound(p, s=10, k=16)
+    partial = selection.selection_error_bound(p, s=2, k=16)
+    assert full < partial  # full participation kills the ζ_F term

@@ -1,0 +1,125 @@
+"""Tests for the beyond-baseline subsystems: gradient accumulation, metrics
+logging, the FSDP/fallback sharding options, and the decay-schedule runner
+variants."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import INPUT_SHAPES, registry
+from repro.models import model_zoo, transformer
+from repro.optim import sgd
+from repro.optim.accumulate import make_accumulating_train_step
+
+SHAPE = dataclasses.replace(INPUT_SHAPES["train_4k"], seq_len=64, global_batch=4)
+
+
+def test_grad_accumulation_matches_full_batch():
+    """N microbatches with mean-accumulated grads == one full-batch step."""
+    cfg = registry.get_config("qwen3-14b", smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_model(cfg, key)
+    batch = model_zoo.concrete_batch(cfg, SHAPE, key)
+    opt = sgd(0.1)
+
+    def loss_fn(p, b):
+        return transformer.lm_loss(p, cfg, b)
+
+    full = jax.jit(model_zoo.make_train_step(cfg, opt))
+    acc = jax.jit(make_accumulating_train_step(loss_fn, opt, microbatches=4))
+    p1, _, m1 = full(params, opt.init(params), batch)
+    p2, _, m2 = acc(params, opt.init(params), batch)
+    # losses are mean-per-token over different partitions — close, not equal
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 0.05
+    diffs = [float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+             for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2))]
+    assert max(diffs) < 5e-3
+
+
+def test_metrics_logger_roundtrip(tmp_path):
+    from repro.launch.metrics import MetricsLogger, read_jsonl
+
+    path = str(tmp_path / "m.jsonl")
+    lg = MetricsLogger(path, window=3)
+    for i in range(5):
+        lg.log(i, loss=float(i))
+    lg.close()
+    recs = read_jsonl(path)
+    assert len(recs) == 5 and recs[3]["loss"] == 3.0
+    assert lg.mean("loss") == pytest.approx((2 + 3 + 4) / 3)
+
+
+def test_fsdp_spec_shards_big_weights():
+    from repro.sharding import RuleSet, param_specs
+
+    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    rs = RuleSet(mesh, fsdp=True)
+    shapes = {
+        "seg0": {"mlp": {"w_in": jax.ShapeDtypeStruct((2, 1024, 1024), jnp.float32)}},
+        "tiny": {"bias": jax.ShapeDtypeStruct((8,), jnp.float32)},
+    }
+    specs = param_specs(shapes, rs)
+    w_spec = specs["seg0"]["mlp"]["w_in"]
+    assert "data" in [s for s in w_spec if s is not None]  # big leaf sharded
+    assert all(s is None for s in specs["tiny"]["bias"])  # small leaf untouched
+
+
+def test_attn_fallback_spec():
+    from repro.sharding import RuleSet, param_specs
+
+    mesh = jax.sharding.AbstractMesh((1, 4), ("data", "model"))
+    shapes = {"attn": {"wq": jax.ShapeDtypeStruct((64, 6, 16), jnp.float32)}}
+    # 6 heads % 4 != 0: default replicates, fallback shards embed(64)
+    plain = param_specs(shapes, RuleSet(mesh))["attn"]["wq"]
+    assert all(s is None for s in plain)
+    fb = param_specs(shapes, RuleSet(mesh, attn_embed_fallback=True))["attn"]["wq"]
+    assert fb[0] == "model"
+
+
+def test_train_driver_with_microbatches():
+    from repro.launch import train as train_lib
+
+    res = train_lib.main([
+        "--arch", "mamba2-1.3b", "--smoke", "--steps", "6", "--batch", "4",
+        "--seq", "64", "--lr", "0.3", "--microbatches", "2",
+        "--log-every", "100"])
+    assert res["final_loss"] < res["first_loss"] * 1.2  # trains, no blow-up
+
+
+def test_train_driver_writes_metrics(tmp_path):
+    from repro.launch import train as train_lib
+    from repro.launch.metrics import read_jsonl
+
+    path = str(tmp_path / "run.jsonl")
+    train_lib.main([
+        "--arch", "gemma3-4b", "--smoke", "--steps", "4", "--batch", "2",
+        "--seq", "32", "--metrics-path", path, "--log-every", "100"])
+    recs = read_jsonl(path)
+    assert len(recs) == 4 and "loss" in recs[0]
+
+
+def test_checkpointed_training_resume(tmp_path):
+    """Save at step k, restore, continue: states match a straight run."""
+    from repro.checkpoint import restore, save_checkpoint
+
+    cfg = registry.get_config("qwen3-14b", smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_model(cfg, key)
+    batch = model_zoo.concrete_batch(cfg, SHAPE, key)
+    opt = sgd(0.1)
+    step = jax.jit(model_zoo.make_train_step(cfg, opt))
+
+    p, s = params, opt.init(params)
+    for _ in range(3):
+        p, s, _ = step(p, s, batch)
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 3, p)
+    p_restored = restore(d, 3, p)
+    p1, _, _ = step(p, s, batch)
+    p2, _, _ = step(p_restored, s, batch)
+    diffs = [float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+             for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2))]
+    assert max(diffs) < 1e-5

@@ -1,0 +1,142 @@
+"""Per-kernel sweeps: Pallas (interpret mode) vs pure-jnp oracles across
+shapes and dtypes (the required kernel validation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.aggregate import ops as agg_ops
+from repro.kernels.aggregate.aggregate import chain_aggregate, mean_over_clients
+from repro.kernels.aggregate.ref import chain_aggregate_ref, mean_over_clients_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+# --------------------------- aggregate --------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,d", [(1, 128), (4, 1000), (8, 4096), (16, 257)])
+def test_chain_aggregate_sweep(s, d, dtype):
+    key = jax.random.PRNGKey(s * 1000 + d)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (d,), dtype)
+    g = jax.random.normal(ks[1], (s, d), dtype)
+    ci = jax.random.normal(ks[2], (s, d), dtype)
+    c = jax.random.normal(ks[3], (d,), dtype)
+    w = jax.nn.softmax(jax.random.normal(ks[4], (s,)))
+    out = chain_aggregate(x, g, ci, c, w, lr=0.37, interpret=True, block_d=256)
+    ref = chain_aggregate_ref(x, g, ci, c, lr=0.37, weights=w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+@given(
+    c=st.integers(1, 6),
+    dims=st.lists(st.integers(1, 9), min_size=1, max_size=3),
+    bf16=st.booleans(),
+)
+@settings(max_examples=25, deadline=None)
+def test_mean_over_clients_property(c, dims, bf16):
+    dtype = jnp.bfloat16 if bf16 else jnp.float32
+    t = jax.random.normal(jax.random.PRNGKey(c), (c, *dims), dtype)
+    out = mean_over_clients(t, interpret=True, block_d=64)
+    ref = mean_over_clients_ref(t)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2 if bf16 else 1e-6, atol=1e-6)
+
+
+def test_aggregate_ops_dispatch():
+    """CPU default path (ref) == forced-pallas path."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (300,))
+    g = jax.random.normal(key, (4, 300))
+    ci = jnp.zeros((4, 300))
+    c = jnp.zeros((300,))
+    a = agg_ops.chain_aggregate(x, g, ci, c, lr=0.1)
+    b = agg_ops.chain_aggregate(x, g, ci, c, lr=0.1, force_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+def test_aggregate_is_fedavg_server_step():
+    """lr=server_lr, g=client deltas, c_i=c=0 reproduces FedAvg's x update."""
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (64,))
+    y = jax.random.normal(jax.random.PRNGKey(2), (5, 64))  # client finals
+    deltas = x[None] - y
+    out = chain_aggregate(x, deltas, jnp.zeros_like(deltas), jnp.zeros_like(x),
+                          jnp.full((5,), 0.2), lr=1.0, interpret=True, block_d=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(jnp.mean(y, 0)),
+                               rtol=1e-5, atol=1e-6)
+
+
+# --------------------------- flash attention --------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+@pytest.mark.parametrize("s,h,kv,d", [(256, 4, 2, 64), (128, 2, 2, 32),
+                                      (256, 8, 1, 64)])
+def test_flash_attention_sweep(s, h, kv, d, causal, window, dtype):
+    key = jax.random.PRNGKey(s + h)
+    q = jax.random.normal(key, (2, s, h, d), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, s, kv, d), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, s, kv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True, block_q=64, block_kv=64)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_block_shape_independence():
+    """Different BlockSpec tilings give identical results."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 256, 2, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 2, 32))
+    o1 = flash_attention(q, k, v, interpret=True, block_q=64, block_kv=64)
+    o2 = flash_attention(q, k, v, interpret=True, block_q=128, block_kv=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_flash_matches_model_attend():
+    """The Pallas kernel is the TPU version of models.layers attend()."""
+    from repro.models.layers import attention as attn_lib
+
+    s = 256
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, s, 4, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, s, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, s, 2, 32))
+    pos = jnp.arange(s)
+    bias = attn_lib.mask_bias(pos, pos, causal=True)
+    model_out = attn_lib.attend(q, k, v, bias[None], scale=1 / 32**0.5)
+    kern_out = flash_attention(q, k, v, causal=True, interpret=True,
+                               block_q=64, block_kv=64)
+    np.testing.assert_allclose(np.asarray(model_out), np.asarray(kern_out),
+                               rtol=2e-4, atol=2e-5)
+
+
+# --------------------------- SSD scan ---------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("l,h,p,g,n,chunk", [(64, 2, 8, 1, 8, 16),
+                                             (128, 4, 16, 2, 16, 32)])
+def test_ssd_scan_kernel_sweep(l, h, p, g, n, chunk, dtype):
+    from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+    from repro.models.layers.ssm import ssd as ssd_ref
+
+    key = jax.random.PRNGKey(l + h)
+    b = 2
+    x = jax.random.normal(key, (b, l, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (b, l, h))).astype(jnp.float32)
+    a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (h,)) * 0.3)
+    bi = (jax.random.normal(jax.random.PRNGKey(3), (b, l, g, n)) * 0.5).astype(dtype)
+    ci = (jax.random.normal(jax.random.PRNGKey(4), (b, l, g, n)) * 0.5).astype(dtype)
+    got = ssd_scan(x, dt, a, bi, ci, chunk=chunk, interpret=True)
+    want, _ = ssd_ref(x, dt, a, bi, ci, chunk=chunk)
+    tol = 2e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)

@@ -1,0 +1,226 @@
+"""Layer-level unit tests: masks, RoPE, MoE routing invariants, SSD vs naive
+recurrence, chunked attention equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttentionConfig, MoEConfig, SSMConfig
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import common, moe as moe_lib, ssm as ssm_lib
+
+
+# --------------------------- attention -------------------------------------
+
+def test_causal_mask_brute_force():
+    qp = jnp.arange(6)
+    bias = attn_lib.mask_bias(qp, qp, causal=True)
+    for i in range(6):
+        for j in range(6):
+            assert (bias[i, j] == 0) == (j <= i)
+
+
+def test_sliding_window_mask():
+    qp = jnp.arange(8)
+    bias = attn_lib.mask_bias(qp, qp, causal=True, window=jnp.asarray(3))
+    for i in range(8):
+        for j in range(8):
+            ok = (j <= i) and (i - j < 3)
+            assert (bias[i, j] == 0) == ok
+
+
+def test_prefix_lm_mask():
+    qp = jnp.arange(6)
+    bias = attn_lib.mask_bias(qp, qp, causal=True, prefix_len=3)
+    # prefix is bidirectional
+    assert bias[0, 2] == 0 and bias[2, 0] == 0
+    # text stays causal
+    assert bias[3, 4] < 0 and bias[4, 3] == 0
+
+
+def test_chunked_attention_equals_full():
+    key = jax.random.PRNGKey(0)
+    b, s, h, kv, d = 2, 512, 4, 2, 16
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv, d))
+    pos = jnp.arange(s)
+    bias = attn_lib.mask_bias(pos, pos, causal=True)
+    full = attn_lib.attend(q, k, v, bias[None], scale=0.25)
+
+    def bias_fn(start):
+        qp = jax.lax.dynamic_slice_in_dim(pos, start, 128)
+        return attn_lib.mask_bias(qp, pos, causal=True)
+
+    chunked = attn_lib.attend_chunked(q, k, v, scale=0.25, bias_fn=bias_fn,
+                                      q_block=128)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_rope_relative_property():
+    """RoPE: ⟨rope(q,m), rope(k,n)⟩ depends only on m − n."""
+    d = 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+
+    def score(m, n):
+        qm = common.rope(q, jnp.asarray([[m]]), 10_000.0)
+        kn = common.rope(k, jnp.asarray([[n]]), 10_000.0)
+        return float(jnp.vdot(qm, kn))
+
+    assert score(3, 1) == pytest.approx(score(10, 8), rel=1e-4)
+    assert score(5, 5) == pytest.approx(score(0, 0), rel=1e-4)
+
+
+def test_gqa_head_grouping():
+    """GQA with kv replicated == MHA where kv heads are tiled."""
+    b, s, h, d = 1, 8, 4, 8
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, d))
+    k2 = jax.random.normal(jax.random.PRNGKey(1), (b, s, 2, d))
+    v2 = jax.random.normal(jax.random.PRNGKey(2), (b, s, 2, d))
+    pos = jnp.arange(s)
+    bias = attn_lib.mask_bias(pos, pos, causal=True)[None]
+    out_gqa = attn_lib.attend(q, k2, v2, bias, scale=1.0)
+    k4 = jnp.repeat(k2, 2, axis=2)
+    v4 = jnp.repeat(v2, 2, axis=2)
+    out_mha = attn_lib.attend(q, k4, v4, bias, scale=1.0)
+    np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha), rtol=1e-5)
+
+
+# --------------------------- MoE --------------------------------------------
+
+MCFG = MoEConfig(num_experts=4, top_k=2, d_expert=16, capacity_factor=2.0)
+
+
+def _moe_setup(t=32, d=8):
+    params = moe_lib.init_moe(jax.random.PRNGKey(0), d, MCFG, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, t // 2, d))
+    return params, x
+
+
+def test_moe_output_shape_and_aux():
+    params, x = _moe_setup()
+    out, aux = moe_lib.moe_apply(params, x, mcfg=MCFG)
+    assert out.shape == x.shape
+    assert float(aux) >= 0.0
+
+
+def test_moe_aux_loss_balanced_floor():
+    """Switch aux: E·Σ f_e p_e ≥ 1 (×weight), == 1 at perfect balance."""
+    params, x = _moe_setup(t=256)
+    _, aux = moe_lib.moe_apply(params, x, mcfg=MCFG)
+    # f sums to top_k (each token lands on top_k experts)
+    assert float(aux) >= MCFG.aux_loss_weight * MCFG.top_k * 0.98
+
+
+def test_moe_capacity_drop():
+    """cf→tiny forces drops ⇒ output norm shrinks but stays finite."""
+    params, x = _moe_setup(t=64)
+    small = dataclasses.replace(MCFG, capacity_factor=0.25)
+    out_small, _ = moe_lib.moe_apply(params, x, mcfg=small)
+    out_big, _ = moe_lib.moe_apply(params, x, mcfg=MCFG)
+    assert bool(jnp.isfinite(out_small).all())
+    assert float(jnp.linalg.norm(out_small)) <= float(jnp.linalg.norm(out_big)) + 1e-3
+
+
+def test_moe_group_locality():
+    """routing_groups=2 == independently routing each half of the batch."""
+    params, x = _moe_setup(t=64)
+    out2, _ = moe_lib.moe_apply(params, x, mcfg=MCFG, routing_groups=2)
+    # groups = flattened halves of [B*S]; with B=2 the halves are the batch rows
+    oa, _ = moe_lib.moe_apply(params, x[:1], mcfg=MCFG)
+    ob, _ = moe_lib.moe_apply(params, x[1:], mcfg=MCFG)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(jnp.concatenate([oa, ob])),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_moe_shared_expert_and_dense_residual():
+    d = 8
+    cfg = dataclasses.replace(MCFG, num_shared_experts=1, dense_residual_d_ff=16)
+    params = moe_lib.init_moe(jax.random.PRNGKey(0), d, cfg, jnp.float32)
+    assert "shared" in params and "dense_residual" in params
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, d))
+    out, _ = moe_lib.moe_apply(params, x, mcfg=cfg)
+    assert bool(jnp.isfinite(out).all())
+
+
+# --------------------------- SSD / Mamba2 -----------------------------------
+
+def _naive_ssm(x, dt, a_coef, b_in, c_in):
+    """Reference: plain sequential recurrence h_t = e^{dtA}h + dt·B⊗x."""
+    bsz, l, h, p = x.shape
+    n = b_in.shape[-1]
+    rep = h // b_in.shape[2]
+    bh = jnp.repeat(b_in, rep, axis=2)
+    ch = jnp.repeat(c_in, rep, axis=2)
+    state = jnp.zeros((bsz, h, p, n))
+    ys = []
+    for t in range(l):
+        da = jnp.exp(dt[:, t] * a_coef[None])  # [B,H]
+        upd = jnp.einsum("bh,bhn,bhp->bhpn", dt[:, t], bh[:, t], x[:, t])
+        state = state * da[:, :, None, None] + upd
+        ys.append(jnp.einsum("bhpn,bhn->bhp", state, ch[:, t]))
+    return jnp.stack(ys, axis=1), state
+
+
+def test_ssd_matches_naive_recurrence():
+    bsz, l, h, p, g, n = 2, 32, 4, 8, 1, 8
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (bsz, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (bsz, l, h)))
+    a_coef = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (h,)) * 0.3)
+    b_in = jax.random.normal(jax.random.PRNGKey(3), (bsz, l, g, n)) * 0.5
+    c_in = jax.random.normal(jax.random.PRNGKey(4), (bsz, l, g, n)) * 0.5
+    y_ssd, st_ssd = ssm_lib.ssd(x, dt, a_coef, b_in, c_in, chunk=8)
+    y_ref, st_ref = _naive_ssm(x, dt, a_coef, b_in, c_in)
+    np.testing.assert_allclose(np.asarray(y_ssd), np.asarray(y_ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st_ssd), np.asarray(st_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_decode_step_continues_prefill():
+    bsz, l, h, p, g, n = 1, 16, 2, 4, 1, 4
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (bsz, l + 1, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(6), (bsz, l + 1, h)))
+    a_coef = -jnp.exp(jnp.zeros((h,)))
+    b_in = jax.random.normal(jax.random.PRNGKey(7), (bsz, l + 1, g, n)) * 0.5
+    c_in = jax.random.normal(jax.random.PRNGKey(8), (bsz, l + 1, g, n)) * 0.5
+    y_full, _ = ssm_lib.ssd(x[:, :l + 1][:, :16], dt[:, :16], a_coef,
+                            b_in[:, :16], c_in[:, :16], chunk=8)
+    # prefill l tokens then decode token l... use l=16 path for full; compare
+    y_pre, st = ssm_lib.ssd(x[:, :l], dt[:, :l], a_coef, b_in[:, :l],
+                            c_in[:, :l], chunk=8)
+    y_t, _ = ssm_lib.ssd_decode_step(
+        st, x[:, l].reshape(bsz, h, p), dt[:, l], a_coef,
+        b_in[:, l], c_in[:, l])
+    # decode at t=16 should equal running ssd over 17 with last step... use naive
+    y_ref, _ = _naive_ssm(x, dt, a_coef, b_in, c_in)
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_ref[:, l]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_causal_conv_state_consistency():
+    """Streaming conv with carried state == full conv."""
+    b, l, c = 1, 12, 6
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, l, c))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, c)) * 0.5
+    bias = jnp.zeros((c,))
+    full, _ = ssm_lib._causal_conv(x, w, bias)
+    part1, st = ssm_lib._causal_conv(x[:, :8], w, bias)
+    part2, _ = ssm_lib._causal_conv(x[:, 8:], w, bias, state=st)
+    np.testing.assert_allclose(np.asarray(full[:, 8:]), np.asarray(part2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_cross_entropy_matches_naive():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 11))
+    targets = jax.random.randint(jax.random.PRNGKey(1), (2, 5), 0, 11)
+    got = common.cross_entropy(logits, targets)
+    probs = jax.nn.log_softmax(logits, -1)
+    want = -jnp.mean(jnp.take_along_axis(probs, targets[..., None], -1))
+    assert float(jnp.abs(got - want)) < 1e-5

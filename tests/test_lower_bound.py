@@ -1,0 +1,81 @@
+"""App. G lower-bound construction: zero-chain property, curvature bounds,
+gap formulas, and the empirical floor for zero-respecting algorithms."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import algorithms as A, lower_bound as lb, runner
+
+
+@pytest.fixture(scope="module")
+def inst():
+    problem, instance = lb.make_lower_bound_problem(
+        dim=32, beta=1.0, mu=0.01, zeta_hat=1.0)
+    return problem, instance
+
+
+def test_curvature_bounds(inst):
+    """F1, F2 are μ-strongly convex and β-smooth (App. G.1, ℓ₂ ≤ (β−μ)/4)."""
+    problem, instance = inst
+    for f in (instance.f1, instance.f2, instance.f):
+        h = jax.hessian(f)(jnp.zeros(instance.dim))
+        eigs = jnp.linalg.eigvalsh(h)
+        assert float(eigs.min()) >= instance.mu - 1e-6
+        assert float(eigs.max()) <= 1.0 + 1e-6  # beta
+
+
+def test_zero_chain_property(inst):
+    """Eqs. 276–277: from even support only ∇F1 unlocks the next coordinate;
+    from odd support only ∇F2 does."""
+    _, it = inst
+    d = it.dim
+    for i in range(0, 6, 2):  # even number of unlocked coords
+        x = jnp.zeros(d).at[:i].set(1.0)
+        g1 = jax.grad(it.f1)(x)
+        g2 = jax.grad(it.f2)(x)
+        assert lb.max_unlocked_coordinate(g1) <= i + 1
+        assert lb.max_unlocked_coordinate(g2) <= i
+    for i in range(1, 7, 2):  # odd number unlocked
+        x = jnp.zeros(d).at[:i].set(1.0)
+        g1 = jax.grad(it.f1)(x)
+        g2 = jax.grad(it.f2)(x)
+        assert lb.max_unlocked_coordinate(g1) <= i
+        assert lb.max_unlocked_coordinate(g2) <= i + 1
+
+
+def test_initial_gap_formula(inst):
+    problem, it = inst
+    gap = problem.delta(jnp.zeros(it.dim))
+    assert gap <= float(it.initial_gap_ub()) * 1.01
+    assert gap >= 0.5 * float(it.initial_gap_ub())  # the bound is tight-ish
+
+
+def test_x_star_geometric(inst):
+    problem, it = inst
+    xs = problem.x_star
+    # known geometric form (x*_j ∝ q^j) away from the boundary
+    ratio = xs[2:10] / xs[1:9]
+    assert float(jnp.std(ratio)) < 0.05
+    assert float(jnp.mean(ratio)) == pytest.approx(it.q, rel=0.1)
+
+
+def test_algorithms_hit_the_floor(inst):
+    """Any distributed zero-respecting algorithm unlocks ≤ R coordinates in R
+    rounds (Lemma G.4) ⇒ suboptimality ≥ the analytic floor."""
+    problem, it = inst
+    x0 = jnp.zeros(it.dim)
+    rounds = 8
+    for algo in [A.SGD(eta=1.5, k=1, output_mode="last"),
+                 A.FedAvg(eta=1.0, local_steps=4, inner_batch=1)]:
+        res = runner.run(algo, problem, x0, rounds, jax.random.PRNGKey(0))
+        # support grew at most 1 per round (+1 slack for averaging boundary)
+        unlocked = lb.max_unlocked_coordinate(res.state.x, tol=1e-9)
+        assert unlocked <= rounds + 1
+        floor = it.suboptimality_lb(rounds)
+        assert float(problem.suboptimality(res.state.x)) >= 0.5 * float(floor)
+
+
+def test_floor_decays_like_q2R(inst):
+    _, it = inst
+    l4, l8 = it.suboptimality_lb(4), it.suboptimality_lb(8)
+    assert l8 == pytest.approx(l4 * it.q ** 8, rel=1e-6)

@@ -1,0 +1,89 @@
+"""Serving-path correctness: prefill + single-token decode must reproduce the
+full-forward logits for EVERY architecture (KV caches, MLA latents, SSM
+states, hybrid shared-block caches, enc-dec cross attention)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import INPUT_SHAPES, registry
+from repro.models import model_zoo, transformer
+
+SHAPE = dataclasses.replace(INPUT_SHAPES["train_4k"], seq_len=32, global_batch=2)
+
+
+def _decode_setup(arch):
+    cfg = registry.get_config(arch, smoke=True)
+    if cfg.moe is not None:  # avoid capacity-drop divergence between modes
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_model(cfg, key)
+    batch = model_zoo.concrete_batch(cfg, SHAPE, key)
+    return cfg, params, batch
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_prefill_decode_matches_forward(arch):
+    cfg, params, batch = _decode_setup(arch)
+    tlen = batch["tokens"].shape[1]
+    s_pre = tlen // 2
+    off = cfg.frontend.seq if (cfg.frontend is not None and
+                               cfg.frontend.kind == "vision") else 0
+    logits_full, _, _, _ = transformer.forward(params, cfg, batch, mode="train")
+
+    cross = None
+    if cfg.encoder is not None:
+        enc = transformer._encode(params, cfg, batch["frames"].astype(jnp.float32))
+        cross = transformer._cross_kv_from_encoder(params, cfg, enc)
+
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :s_pre]
+    caches = transformer.init_caches(cfg, 2, tlen + off + 8)
+    last, caches = transformer.prefill(params, cfg, pre, caches)
+    # prefill's last logits match the full forward at position s_pre-1
+    ref_last = logits_full[:, off + s_pre - 1, :]
+    assert float(jnp.max(jnp.abs(last[:, 0] - ref_last))) < 2e-3
+
+    tok = batch["tokens"][:, s_pre: s_pre + 1]
+    if cfg.encoder is not None:
+        dl, _ = transformer.decode_step(params, cfg, tok, caches, s_pre + off,
+                                        cross_kv=cross)
+    else:
+        dl, _ = transformer.decode_step(params, cfg, tok, caches, s_pre + off)
+    ref = logits_full[:, off + s_pre, :]
+    assert float(jnp.max(jnp.abs(dl[:, 0] - ref))) < 2e-3
+
+
+def test_mla_absorb_decode_equivalence():
+    """§Perf optimization: absorbed MLA decode == naive MLA decode."""
+    cfg, params, batch = _decode_setup("minicpm3-4b")
+    cfg_abs = dataclasses.replace(
+        cfg, mla=dataclasses.replace(cfg.mla, absorb_decode=True))
+    tlen = batch["tokens"].shape[1]
+    s_pre = tlen // 2
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :s_pre]
+    caches = transformer.init_caches(cfg, 2, tlen + 8)
+    _, caches = transformer.prefill(params, cfg, pre, caches)
+    tok = batch["tokens"][:, s_pre: s_pre + 1]
+    d_naive, _ = transformer.decode_step(params, cfg, tok, caches, s_pre)
+    d_abs, _ = transformer.decode_step(params, cfg_abs, tok, caches, s_pre)
+    assert float(jnp.max(jnp.abs(d_naive - d_abs))) < 2e-3
+
+
+def test_multi_token_decode_chain():
+    """Decode 8 tokens sequentially == slices of one long forward (mamba2)."""
+    cfg, params, batch = _decode_setup("mamba2-1.3b")
+    tlen = batch["tokens"].shape[1]
+    s_pre = 16
+    logits_full, _, _, _ = transformer.forward(params, cfg, batch, mode="train")
+    pre = {"tokens": batch["tokens"][:, :s_pre]}
+    caches = transformer.init_caches(cfg, 2, tlen + 8)
+    _, caches = transformer.prefill(params, cfg, pre, caches)
+    for j in range(8):
+        tok = batch["tokens"][:, s_pre + j: s_pre + j + 1]
+        dl, caches = transformer.decode_step(params, cfg, tok, caches, s_pre + j)
+        ref = logits_full[:, s_pre + j, :]
+        assert float(jnp.max(jnp.abs(dl[:, 0] - ref))) < 2e-3, f"token {j}"

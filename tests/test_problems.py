@@ -1,0 +1,106 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import heterogeneity
+from repro.data import problems
+
+
+def test_quadratic_zeta_exact(rng):
+    """ζ is exact by construction: ∇F_i − ∇F = ζ·u_i, max ||u_i|| = 1."""
+    for zeta in (0.0, 0.5, 3.0):
+        p = problems.quadratic_problem(rng, num_clients=6, dim=10, zeta=zeta)
+        x = jax.random.normal(jax.random.PRNGKey(3), (10,))
+        measured = float(heterogeneity.zeta_at(p, x))
+        assert abs(measured - zeta) < 1e-4
+
+
+def test_quadratic_fstar_is_min(rng):
+    p = problems.quadratic_problem(rng, dim=8, mu=0.2, beta=2.0, zeta=1.0)
+    g = jax.grad(p.global_loss)(p.x_star)
+    assert float(jnp.linalg.norm(g)) < 1e-4
+    assert float(p.global_loss(p.x_star)) == pytest.approx(p.f_star, abs=1e-4)
+
+
+def test_gradient_oracle_unbiased_and_bounded_variance(rng):
+    p = problems.quadratic_problem(rng, dim=6, sigma=0.7)
+    x = p.init_params(rng)
+    keys = jax.random.split(jax.random.PRNGKey(9), 4096)
+    gs = jax.vmap(lambda k: p.grad_oracle(x, 0, k))(keys)
+    exact = jax.grad(p.client_loss)(x, 0)
+    err = jnp.linalg.norm(jnp.mean(gs, 0) - exact)
+    assert float(err) < 0.1
+    var = float(jnp.mean(jnp.sum((gs - exact) ** 2, -1)))
+    assert var == pytest.approx(0.7**2, rel=0.2)
+
+
+def test_perturbed_global_equals_base(rng):
+    p = problems.general_convex_problem(rng, num_clients=5, zeta=2.0)
+    x = jax.random.normal(rng, (16,))
+    # global loss must equal the base (Σ u_i = 0)
+    mean_client = jnp.mean(jnp.stack(
+        [p.client_loss(x, i) for i in range(5)]))
+    assert float(jnp.abs(mean_client - p.global_loss(x))) < 1e-4
+
+
+def test_pl_problem_satisfies_pl(rng):
+    """2μ(F−F*) ≤ ||∇F||² at random points for the PL base."""
+    p = problems.pl_problem(rng, num_clients=4, zeta=1.0)
+    xs = jax.random.normal(rng, (64, 8)) * 3
+    for x in xs[:16]:
+        lhs = 2 * p.mu * (p.global_loss(x) - p.f_star)
+        rhs = float(jnp.sum(jax.grad(p.global_loss)(x) ** 2))
+        assert float(lhs) <= rhs + 1e-5
+
+
+def test_logreg_problem(rng):
+    feats = np.random.default_rng(0).normal(size=(4, 50, 8)).astype(np.float32)
+    labels = (np.random.default_rng(1).random((4, 50)) > 0.5).astype(np.float32)
+    p = problems.logreg_problem(rng, features=jnp.asarray(feats),
+                                labels=jnp.asarray(labels), l2=0.1)
+    w = p.init_params(rng)
+    assert w.shape == (8,)
+    loss = float(p.global_loss(w))
+    assert loss == pytest.approx(np.log(2), rel=0.01)  # w=0 => ln 2
+    g = p.grad_oracle(w, 0, jax.random.PRNGKey(5))
+    assert g.shape == (8,)
+
+
+@given(zeta=st.floats(0.0, 5.0), seed=st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_zeta_constant_in_x(zeta, seed):
+    """Heterogeneity of the shared-curvature quadratic is position-free."""
+    p = problems.quadratic_problem(jax.random.PRNGKey(seed), dim=6, zeta=zeta)
+    x1 = jax.random.normal(jax.random.PRNGKey(seed + 1), (6,))
+    x2 = 10 * jax.random.normal(jax.random.PRNGKey(seed + 2), (6,))
+    z1 = float(heterogeneity.zeta_at(p, x1))
+    z2 = float(heterogeneity.zeta_at(p, x2))
+    assert abs(z1 - z2) < 1e-3
+
+
+def test_curvature_spread_biases_fedavg(rng):
+    """With heterogeneous curvature FedAvg's fixed point moves off x*
+    (the drift no longer cancels by symmetry) — the regime motivating the
+    selection step; with spread=0 the drift cancels exactly."""
+    from repro.core import algorithms as A, runner
+
+    for spread, expect_bias in ((0.0, False), (1.5, True)):
+        p = problems.quadratic_problem(
+            jax.random.PRNGKey(2), num_clients=8, dim=12, mu=0.1, beta=1.0,
+            zeta=5.0, sigma=0.0, curvature_spread=spread)
+        fa = A.FedAvg(eta=0.5, local_steps=8, inner_batch=1)
+        res = runner.run(fa, p, p.x_star, 30, jax.random.PRNGKey(3))
+        sub = float(res.history[-1])  # starting AT x*: any growth is drift bias
+        if expect_bias:
+            assert sub > 1e-4, sub
+        else:
+            assert sub < 1e-4, sub
+
+
+def test_curvature_spread_reports_ball_zeta(rng):
+    p0 = problems.quadratic_problem(jax.random.PRNGKey(0), zeta=1.0)
+    p1 = problems.quadratic_problem(jax.random.PRNGKey(0), zeta=1.0,
+                                    curvature_spread=1.0)
+    assert p1.zeta > p0.zeta  # position-dependent part included

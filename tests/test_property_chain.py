@@ -1,0 +1,74 @@
+"""Hypothesis property tests on FedChain-level invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import algorithms as A, chain, selection
+from repro.data import problems
+
+
+@given(zeta=st.floats(0.0, 10.0), seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_selection_never_worse_than_both_noiseless(zeta, seed):
+    """With noiseless value oracles, the selected point's TRUE loss equals
+    min of the candidates' true losses (Lemma H.2, σ_F = ζ_F sampling = 0
+    because all clients are evaluated)."""
+    p = problems.quadratic_problem(
+        jax.random.PRNGKey(seed), num_clients=4, dim=8, zeta=zeta, sigma_f=0.0)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 1))
+    xa = jax.random.normal(k1, (8,)) * 3
+    xb = jax.random.normal(k2, (8,)) * 3
+    best, idx, _ = selection.select_better(p, [xa, xb], jax.random.PRNGKey(2),
+                                           s=4, k=2)
+    fa, fb = float(p.global_loss(xa)), float(p.global_loss(xb))
+    fbest = float(p.global_loss(best))
+    assert fbest <= min(fa, fb) + 1e-4
+
+
+@given(frac=st.floats(0.2, 0.8), seed=st.integers(0, 20))
+@settings(max_examples=8, deadline=None)
+def test_chain_budget_conservation(frac, seed):
+    """A chain spends exactly its round budget (local + selection + global)."""
+    p = problems.quadratic_problem(jax.random.PRNGKey(seed), dim=6, zeta=1.0)
+    x0 = p.init_params(jax.random.PRNGKey(0))
+    rounds = 20
+    ch = chain.fedchain(
+        A.FedAvg(eta=0.3, local_steps=2, inner_batch=2),
+        A.SGD(eta=0.3, k=4, mu_avg=p.mu),
+        local_fraction=frac, selection_k=4)
+    res = ch.run(p, x0, rounds, jax.random.PRNGKey(seed))
+    assert res.history.shape == (rounds,)
+
+
+@given(seed=st.integers(0, 30))
+@settings(max_examples=8, deadline=None)
+def test_homogeneous_selection_prefers_local_output(seed):
+    """ζ=0, noiseless: FedAvg strictly improves, so selection must keep x̂_1/2."""
+    p = problems.quadratic_problem(
+        jax.random.PRNGKey(seed), num_clients=4, dim=8, zeta=0.0, sigma=0.0)
+    x0 = p.init_params(jax.random.PRNGKey(0))
+    ch = chain.fedchain(
+        A.FedAvg(eta=0.3, local_steps=4, inner_batch=1),
+        A.SGD(eta=0.3, k=2, mu_avg=p.mu), selection_k=2)
+    res = ch.run(p, x0, 12, jax.random.PRNGKey(seed + 1))
+    assert res.selected_initial == [False]
+
+
+@given(lr=st.floats(0.05, 0.5), s=st.integers(2, 6), d=st.integers(4, 64))
+@settings(max_examples=10, deadline=None)
+def test_aggregate_kernel_linear_in_lr(lr, s, d):
+    """chain_aggregate is affine in lr: out(lr) = x − lr·u."""
+    from repro.kernels.aggregate.aggregate import chain_aggregate
+
+    key = jax.random.PRNGKey(d)
+    x = jax.random.normal(key, (d,))
+    g = jax.random.normal(jax.random.PRNGKey(1), (s, d))
+    ci = jax.random.normal(jax.random.PRNGKey(2), (s, d))
+    c = jax.random.normal(jax.random.PRNGKey(3), (d,))
+    w = jnp.full((s,), 1.0 / s)
+    o1 = chain_aggregate(x, g, ci, c, w, lr=lr, interpret=True, block_d=32)
+    o2 = chain_aggregate(x, g, ci, c, w, lr=2 * lr, interpret=True, block_d=32)
+    # (x - o2) == 2 (x - o1)
+    np.testing.assert_allclose(np.asarray(x - o2), 2 * np.asarray(x - o1),
+                               rtol=1e-4, atol=1e-5)

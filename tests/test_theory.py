@@ -1,0 +1,76 @@
+"""Executable rate tables (Tables 1/2/4, Thm. 5.4): regime and ordering checks
+that mirror the paper's §4–5 discussion."""
+import math
+
+import pytest
+
+from repro.core import theory as T
+
+
+@pytest.fixture
+def c():
+    return T.Constants(delta=10.0, d=3.0, mu=0.1, beta=1.0, zeta=0.5,
+                       sigma=0.0, n=8, s=8, k=64)
+
+
+def test_chain_improves_on_asg_when_zeta_small(c):
+    """Thm 4.2 discussion: FedAvg→ASG beats ASG when ζ²/μ < Δ."""
+    r = 20
+    assert T.fedavg_asg_strongly_convex(c, r) < T.asg_strongly_convex(c, r)
+
+
+def test_chain_exponentially_beats_fedavg(c):
+    """min{Δ,ζ²/μ}·exp(−R/√κ) ≪ κζ²/μ·R⁻² at large R."""
+    r = 200
+    assert T.fedavg_asg_strongly_convex(c, r) < 1e-3 * T.fedavg_strongly_convex(c, r)
+
+
+def test_lower_bound_below_upper_bounds(c):
+    """Thm. 5.4 must lower-bound every achievable rate in the table."""
+    for r in (5, 20, 80):
+        lo = T.lower_bound_strongly_convex(c, r)
+        for name, fn in T.TABLE1.items():
+            if name == "lower_bound":
+                continue
+            assert lo <= fn(c, r) * 1.0001, (name, r)
+
+
+def test_rates_monotone_in_r(c):
+    for table in (T.TABLE1, T.TABLE2, T.TABLE4):
+        for name, fn in table.items():
+            vals = [fn(c, r) for r in (4, 16, 64, 256)]
+            assert all(a >= b - 1e-12 for a, b in zip(vals, vals[1:])), name
+
+
+def test_sampling_term_vanishes_at_full_participation():
+    c_full = T.Constants(delta=10, d=3, mu=0.1, beta=1.0, zeta=1.0, n=8, s=8)
+    c_part = T.Constants(delta=10, d=3, mu=0.1, beta=1.0, zeta=1.0, n=8, s=2)
+    r = 1_000_000  # head terms gone; sampling term remains for s<n
+    assert T.fedavg_sgd_strongly_convex(c_full, r) < \
+        T.fedavg_sgd_strongly_convex(c_part, r)
+
+
+def test_variance_reduction_tradeoff():
+    """§4: SAGA drops the sampling-heterogeneity term but slows the linear
+    rate to min{1/κ, S/N}."""
+    c = T.Constants(delta=10, d=3, mu=0.5, beta=1.0, zeta=2.0, n=16, s=2)
+    r_big = 4000
+    assert T.fedavg_saga_strongly_convex(c, r_big) < \
+        T.fedavg_sgd_strongly_convex(c, r_big)
+
+
+def test_general_convex_chain_regime():
+    """Table 2 discussion (β=D=1): FedAvg→ASG beats ASG iff ζ < 1/R²-ish."""
+    r = 10
+    small = T.Constants(delta=1, d=1, mu=0.0, beta=1.0, zeta=1.0 / r**2 / 4, n=8, s=8)
+    assert T.fedavg_asg_convex(small, r) <= T.asg_convex(small, r) * 1.01
+
+
+def test_pl_lower_bound_matches_cor55(c):
+    assert T.lower_bound_pl(c, 10) == T.lower_bound_strongly_convex(c, 10)
+
+
+def test_kappa_and_inf_handling():
+    c0 = T.Constants(delta=1, d=1, mu=0.0, beta=1.0, zeta=1.0)
+    assert math.isinf(c0.kappa)
+    assert T.sgd_convex(c0, 10) > 0

@@ -1,0 +1,68 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tree_math as tm
+
+
+def _tree(key, shapes=((3,), (2, 4))):
+    ks = jax.random.split(key, len(shapes))
+    return {f"p{i}": jax.random.normal(k, s) for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+def test_add_sub_roundtrip(rng):
+    a, b = _tree(rng), _tree(jax.random.PRNGKey(1))
+    c = tm.tree_sub(tm.tree_add(a, b), b)
+    for l1, l2 in zip(jax.tree.leaves(a), jax.tree.leaves(c)):
+        np.testing.assert_allclose(l1, l2, rtol=1e-6)
+
+
+def test_axpy_matches_scale_add(rng):
+    a, b = _tree(rng), _tree(jax.random.PRNGKey(1))
+    c1 = tm.tree_axpy(0.7, a, b)
+    c2 = tm.tree_add(tm.tree_scale(0.7, a), b)
+    for l1, l2 in zip(jax.tree.leaves(c1), jax.tree.leaves(c2)):
+        np.testing.assert_allclose(l1, l2, rtol=1e-6)
+
+
+@given(t=st.floats(0.0, 1.0))
+@settings(max_examples=20, deadline=None)
+def test_lerp_endpoints(t):
+    a = {"x": jnp.asarray([1.0, 2.0])}
+    b = {"x": jnp.asarray([3.0, -2.0])}
+    out = tm.tree_lerp(t, a, b)["x"]
+    expect = (1 - t) * a["x"] + t * b["x"]
+    np.testing.assert_allclose(out, expect, rtol=1e-6)
+
+
+def test_dot_norm_consistency(rng):
+    a = _tree(rng)
+    assert abs(float(tm.tree_dot(a, a)) - float(tm.tree_sq_norm(a))) < 1e-5
+    assert abs(float(tm.tree_norm(a)) ** 2 - float(tm.tree_sq_norm(a))) < 1e-3
+
+
+def test_stack_index_mean(rng):
+    trees = [_tree(jax.random.PRNGKey(i)) for i in range(4)]
+    stacked = tm.tree_stack(trees)
+    t2 = tm.tree_index(stacked, 2)
+    for l1, l2 in zip(jax.tree.leaves(trees[2]), jax.tree.leaves(t2)):
+        np.testing.assert_allclose(l1, l2)
+    mean = tm.tree_mean_leading(stacked)
+    expect = jax.tree.map(lambda *xs: sum(xs) / 4, *trees)
+    for l1, l2 in zip(jax.tree.leaves(expect), jax.tree.leaves(mean)):
+        np.testing.assert_allclose(l1, l2, rtol=1e-6)
+
+
+def test_scatter_set(rng):
+    table = {"w": jnp.zeros((5, 3))}
+    vals = {"w": jnp.ones((2, 3))}
+    out = tm.tree_scatter_set(table, jnp.asarray([1, 3]), vals)
+    assert float(out["w"][1].sum()) == 3.0
+    assert float(out["w"][0].sum()) == 0.0
+
+
+def test_size_and_ravel(rng):
+    a = _tree(rng)
+    assert tm.tree_size(a) == 3 + 8
+    assert tm.ravel(a).shape == (11,)
