@@ -5,19 +5,32 @@ benchmark's headline quantity, e.g. final suboptimality or accuracy).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
 
 
+def _block(out):
+    """block_until_ready that also descends into result dataclasses
+    (RunResult/ChainResult/SweepResult are plain dataclasses, which
+    ``jax.block_until_ready`` would treat as opaque leaves — timing would
+    then measure async dispatch, not compute)."""
+    if dataclasses.is_dataclass(out) and not isinstance(out, type):
+        for f in dataclasses.fields(out):
+            _block(getattr(out, f.name))
+    else:
+        jax.block_until_ready(out)
+
+
 def timed(fn, *args, repeats: int = 1):
     """(result, us_per_call). jit-warm before timing."""
     out = fn(*args)
-    jax.block_until_ready(out)
+    _block(out)
     t0 = time.perf_counter()
     for _ in range(repeats):
         out = fn(*args)
-    jax.block_until_ready(out)
+    _block(out)
     us = (time.perf_counter() - t0) / repeats * 1e6
     return out, us
 

@@ -18,7 +18,7 @@ def main(argv=None) -> None:
 
     from benchmarks import (
         ablation_selection, appj1_large_k, fig2_convergence, kernels_bench,
-        lower_bound_bench, roofline, table1_strongly_convex,
+        lower_bound_bench, roofline, sweep_bench, table1_strongly_convex,
         table2_general_convex, table3_nonconvex, table4_pl,
     )
 
@@ -31,6 +31,7 @@ def main(argv=None) -> None:
         "lower_bound": lower_bound_bench.main,  # Thm 5.4 / App G
         "appj1": appj1_large_k.main,  # App J.1 (large K)
         "ablation_selection": ablation_selection.main,  # Lemma H.2 on/off
+        "sweep": sweep_bench.main,  # vmapped grid vs per-call loop
         "kernels": kernels_bench.main,  # Pallas kernels
         "roofline": roofline.main,  # deliverable (g) report
     }

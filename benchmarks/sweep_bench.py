@@ -1,0 +1,109 @@
+"""Sweep-engine benchmark: vmapped grid vs per-call loop on the Table-1 grid.
+
+Measures, for representative Table-1 methods on the exact-ζ quadratic, the
+wall time of a seeds × stepsizes grid executed (a) as a Python loop of
+per-call ``runner.run``/``Chain.run`` invocations and (b) as one vmapped
+``run_sweep`` call — cold (including trace/compile) and warm. Asserts the two
+paths agree numerically and records everything in ``BENCH_sweep.json`` at the
+repo root.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import algorithms as A, chain, runner, sweep
+from repro.data import problems
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+SEEDS = (0, 1, 2)
+MULTS = (0.5, 1.0, 1.5)
+
+
+def _grid_loop(algo, p, x0, rounds):
+    """The per-call path: one run per (seed, η) cell."""
+    out = np.zeros((len(SEEDS), len(MULTS)))
+    for i, sd in enumerate(SEEDS):
+        for j, m in enumerate(MULTS):
+            key = jax.random.PRNGKey(sd)
+            if isinstance(algo, chain.Chain):
+                res = algo.run(p, x0, rounds, key, eta_scale=m)
+                final = res.history[-1]
+            else:
+                res = runner.run(algo, p, x0, rounds, key,
+                                 eta=float(algo.eta) * m)
+                final = res.history[-1]
+            out[i, j] = float(final)
+    return out
+
+
+def _grid_sweep(algo, p, x0, rounds):
+    # chains take stepsize multipliers; plain algorithms absolute stepsizes
+    if isinstance(algo, chain.Chain):
+        res = sweep.run_sweep(algo, p, x0, rounds, seeds=SEEDS, etas=MULTS)
+    else:
+        res = sweep.run_sweep(algo, p, x0, rounds, seeds=SEEDS,
+                              etas=tuple(float(algo.eta) * m for m in MULTS),
+                              eta_mode="absolute")
+    jax.block_until_ready(res.history)
+    return np.asarray(res.history[:, :, -1])
+
+
+def _walled(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def main(quick: bool = True):
+    rounds = 60 if quick else 150
+    p = problems.quadratic_problem(
+        jax.random.PRNGKey(0), num_clients=8, dim=16, mu=0.1, beta=1.0,
+        zeta=1.0, sigma=0.2, sigma_f=0.05)
+    x0 = p.init_params(jax.random.PRNGKey(0))
+    k = 32
+    methods = {
+        "sgd": A.SGD(eta=0.5, k=k, mu_avg=p.mu),
+        "fedavg": A.FedAvg.from_k(k, eta=0.5),
+        "fedavg->sgd": chain.fedchain(
+            A.FedAvg.from_k(k, eta=0.5), A.SGD(eta=0.5, k=k, mu_avg=p.mu),
+            selection_k=k),
+    }
+
+    rows = []
+    report = {"grid": {"seeds": list(SEEDS), "etas": list(MULTS),
+                       "rounds": rounds}, "methods": {}}
+    for name, algo in methods.items():
+        runner.clear_executor_cache()
+        loop_res, loop_cold = _walled(lambda: _grid_loop(algo, p, x0, rounds))
+        _, loop_warm = _walled(lambda: _grid_loop(algo, p, x0, rounds))
+        runner.clear_executor_cache()
+        sweep_res, sweep_cold = _walled(lambda: _grid_sweep(algo, p, x0, rounds))
+        _, sweep_warm = _walled(lambda: _grid_sweep(algo, p, x0, rounds))
+        match = bool(np.allclose(loop_res, sweep_res, rtol=5e-3, atol=1e-5))
+        report["methods"][name] = {
+            "loop_cold_s": loop_cold, "loop_warm_s": loop_warm,
+            "sweep_cold_s": sweep_cold, "sweep_warm_s": sweep_warm,
+            "speedup_cold": loop_cold / sweep_cold,
+            "speedup_warm": loop_warm / sweep_warm,
+            "results_match": match,
+        }
+        rows.append(emit(
+            f"sweep/{name}/grid={len(SEEDS)}x{len(MULTS)}",
+            sweep_warm * 1e6,
+            f"speedup_warm={loop_warm / sweep_warm:.2f}x;"
+            f"speedup_cold={loop_cold / sweep_cold:.2f}x;match={match}"))
+
+    with open(os.path.join(ROOT, "BENCH_sweep.json"), "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

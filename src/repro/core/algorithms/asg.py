@@ -65,7 +65,7 @@ class ACSA(base.FederatedAlgorithm):
         cb = alpha * ((1.0 - alpha) * mu + gamma) / denom_md
         x_md = jax.tree.map(lambda a, b: ca * a + cb * b, state.x_ag, state.x)
 
-        g = tm.tree_mean_leading(base.grad_k(problem, x_md, cids, k_grad, self.k))
+        g = base.client_mean(state.x, base.grad_k(problem, x_md, cids, k_grad, self.k))
 
         denom_x = mu + gamma
         x = jax.tree.map(
@@ -119,7 +119,7 @@ class NesterovSGD(base.FederatedAlgorithm):
         m = self._momentum()
         # lookahead point
         x_look = tm.tree_axpy(m, state.v, state.x)
-        g = tm.tree_mean_leading(base.grad_k(problem, x_look, cids, k_grad, self.k))
+        g = base.client_mean(state.x, base.grad_k(problem, x_look, cids, k_grad, self.k))
         v = jax.tree.map(lambda vv, gg: m * vv - state.eta * gg, state.v, g)
         x = tm.tree_add(state.x, v)
         return NesterovState(x=x, v=v, eta=state.eta, r=state.r + 1)

@@ -8,8 +8,13 @@ Conventions
     round(problem, state, key)   -> state   (ONE communication round, jittable)
     output(state)                -> params  (the returned iterate x̂)
 
-* ``state.x`` is always the current server iterate and ``state.eta`` the
-  current stepsize (kept in state so stepsize-decay wrappers can anneal it).
+* Uniform state protocol (relied on by the single-compile executors in
+  ``core.runner``/``core.chain`` and the vmapped sweep engine in
+  ``core.sweep``): every state is a NamedTuple carrying ``.x`` (the current
+  server iterate), ``.eta`` (the base stepsize — kept in state so decay
+  schedules can anneal it and sweeps can batch it) and ``.r`` (the round
+  counter). ``round`` must pass ``eta`` through unchanged; the executor owns
+  annealing. ``audit_state`` checks the protocol.
 * Client sampling is uniform without replacement (paper §2).
 * ``Grad`` (Algo 7): each sampled client averages K stochastic gradient
   queries at the server iterate.
@@ -23,6 +28,63 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tree_math as tm
+
+
+REQUIRED_STATE_FIELDS = ("x", "eta", "r")
+
+
+def audit_state(state):
+    """Assert the uniform state protocol the executors and sweeps rely on."""
+    missing = [f for f in REQUIRED_STATE_FIELDS if not hasattr(state, f)]
+    if missing:
+        raise TypeError(
+            f"{type(state).__name__} violates the state protocol: missing "
+            f"field(s) {missing}; executors need x/eta/r to schedule and "
+            f"batch runs")
+    if not hasattr(state, "_replace"):
+        raise TypeError(f"{type(state).__name__} must be a NamedTuple")
+    return state
+
+
+def flat_params(x) -> bool:
+    """True when params are a single flat [D] vector (the quadratic/theory
+    problems) — the layout the fused Pallas aggregation kernels accept."""
+    return isinstance(x, jax.Array) and x.ndim == 1
+
+
+def client_mean(x, stacked):
+    """Mean over the leading client axis of ``stacked``, routed through the
+    Pallas ``mean_over_clients`` kernel when params are flat vectors (``x`` is
+    the server iterate used only to pick the layout)."""
+    from repro.kernels.aggregate import ops as agg_ops
+
+    if flat_params(x):
+        return agg_ops.mean_over_clients(stacked)
+    return tm.tree_mean_leading(stacked)
+
+
+def fused_server_step(x, g_per, eta, *, c_i=None, c_mean=None):
+    """The (variance-reduced) server update x − η·(meanᵢ(gᵢ − cᵢ) + c̄).
+
+    On flat [D] params this is one fused Pallas ``chain_aggregate`` pass —
+    η is folded into the client weights (η/S each) and the server variate so
+    the traced stepsize reaches the kernel as data while ``lr`` stays static.
+    ``c_i``/``c_mean`` default to zero (plain gradient averaging, Algo 2).
+    """
+    from repro.kernels.aggregate import ops as agg_ops
+
+    if flat_params(x):
+        s = g_per.shape[0]
+        w = jnp.full((s,), 1.0, jnp.float32) * (eta / s)
+        ci = jnp.zeros_like(g_per) if c_i is None else c_i
+        c = jnp.zeros_like(x) if c_mean is None else eta * c_mean
+        return agg_ops.chain_aggregate(x, g_per, ci, c, weights=w, lr=1.0)
+    if c_i is None:
+        g = tm.tree_mean_leading(g_per)
+    else:
+        g = jax.tree.map(lambda gp, ci, cm: jnp.mean(gp - ci, axis=0) + cm,
+                         g_per, c_i, c_mean)
+    return tm.tree_axpy(-eta, g, x)
 
 
 def sample_clients(key, num_clients: int, s: int):
@@ -89,6 +151,15 @@ class FederatedAlgorithm:
 
     def participation(self, problem):
         return self.s if self.s and self.s > 0 else problem.num_clients
+
+    def init_with_eta(self, problem, x0, eta=None):
+        """``init`` with an optional stepsize override written into state —
+        the hook the sweep engine batches over."""
+        state = self.init(problem, x0)
+        if eta is not None:
+            state = state._replace(
+                eta=jnp.asarray(eta, jnp.result_type(state.eta)))
+        return state
 
     # --- to be overridden -------------------------------------------------
     def init(self, problem, x0):

@@ -62,7 +62,7 @@ class FedAvg(base.FederatedAlgorithm):
         y_final = jax.vmap(
             lambda cid, kk: self._local(problem, state.x, cid, kk, state.eta)
         )(cids, keys)
-        y_mean = tm.tree_mean_leading(y_final)
+        y_mean = base.client_mean(state.x, y_final)
         x = tm.tree_lerp(self.server_lr, state.x, y_mean)
         return FedAvgState(x=x, eta=state.eta, r=state.r + 1)
 

@@ -9,6 +9,11 @@ Round:
   Option II: fresh independent sample S′ and fresh gradients for the update.
 
 The strongly-convex returned iterate is the Thm. D.4 weighted average.
+
+On flat [D] parameters the variance-reduced server step
+``x − η·(mean(g_i − c_i) + c̄)`` is exactly the fused Pallas aggregation
+kernel's contract; η is folded into the weights/server-variate operands so
+the traced stepsize passes as data.
 """
 from __future__ import annotations
 
@@ -69,11 +74,8 @@ class SAGA(base.FederatedAlgorithm):
         cids = base.sample_clients(k_sample, problem.num_clients, s)
         g_per = base.grad_k(problem, state.x, cids, k_grad, self.k)
         c_i = jax.tree.map(lambda t: t[cids], state.c_table)
-        g = jax.tree.map(
-            lambda gp, ci, cm: jnp.mean(gp - ci, axis=0) + cm,
-            g_per, c_i, state.c_mean,
-        )
-        x = tm.tree_axpy(-state.eta, g, state.x)
+        x = base.fused_server_step(state.x, g_per, state.eta,
+                                   c_i=c_i, c_mean=state.c_mean)
 
         if self.option == "I":
             c_table, c_mean = self._update_table(state, cids, g_per)

@@ -70,7 +70,8 @@ class Scaffold(base.FederatedAlgorithm):
             return y, ci_new
 
         y_final, ci_new = jax.vmap(local)(cids, c_i, keys)
-        x = tm.tree_lerp(self.server_lr, state.x, tm.tree_mean_leading(y_final))
+        y_mean = base.client_mean(state.x, y_final)
+        x = tm.tree_lerp(self.server_lr, state.x, y_mean)
         delta_c = tm.tree_mean_leading(jax.tree.map(jnp.subtract, ci_new, c_i))
         c = tm.tree_axpy(s / n, delta_c, state.c)
         c_table = tm.tree_scatter_set(state.c_table, cids, ci_new)
@@ -118,7 +119,8 @@ class FedProx(base.FederatedAlgorithm):
             return y
 
         y_final = jax.vmap(local)(cids, keys)
-        x = tm.tree_lerp(self.server_lr, state.x, tm.tree_mean_leading(y_final))
+        y_mean = base.client_mean(state.x, y_final)
+        x = tm.tree_lerp(self.server_lr, state.x, y_mean)
         return FedAvgState(x=x, eta=state.eta, r=state.r + 1)
 
     def output(self, state):

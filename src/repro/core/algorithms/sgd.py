@@ -7,6 +7,11 @@ takes one step. The returned iterate follows Thm. D.1:
   * strongly convex: weighted average with w_r = (1 − ημ)^{−(r+1)}
   * general convex:  uniform average
   * PL:              last iterate
+
+On flat [D] parameter vectors (the quadratic/theory problems) the server step
+runs through the fused Pallas aggregation kernel (``kernels.aggregate.ops``):
+η is folded into the client weights (η/S each) so the traced stepsize reaches
+the kernel as data while ``lr`` stays static.
 """
 from __future__ import annotations
 
@@ -47,8 +52,7 @@ class SGD(base.FederatedAlgorithm):
         s = self.participation(problem)
         cids = base.sample_clients(k_sample, problem.num_clients, s)
         g_per = base.grad_k(problem, state.x, cids, k_grad, self.k)
-        g = tm.tree_mean_leading(g_per)
-        x = tm.tree_axpy(-state.eta, g, state.x)
+        x = base.fused_server_step(state.x, g_per, state.eta)
         decay = jnp.asarray(1.0 - state.eta * self.mu_avg)
         tracker = state.tracker.update(x, jnp.clip(decay, 0.0, 1.0))
         return SGDState(x=x, tracker=tracker, eta=state.eta, r=state.r + 1)

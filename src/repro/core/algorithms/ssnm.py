@@ -92,12 +92,10 @@ class SSNM(base.FederatedAlgorithm):
         g_per = jax.vmap(lambda cid, y, kk: self._tilde_grad_k(problem, y, cid, kk))(
             cids, y_i, keys
         )
-        g = jax.tree.map(
-            lambda gp, ci, cm: jnp.mean(gp - ci, axis=0) + cm, g_per, c_i, state.c_mean
-        )
-        x_new = jax.tree.map(
-            lambda xx, gg: (xx - eta * gg) / (1.0 + eta * self.mu_h), state.x, g
-        )
+        # fused x − η·(mean(g−c_i) + c̄), then the closed-form prox scaling
+        x_lin = base.fused_server_step(state.x, g_per, eta,
+                                       c_i=c_i, c_mean=state.c_mean)
+        x_new = jax.tree.map(lambda t: t / (1.0 + eta * self.mu_h), x_lin)
 
         # fresh sample S' for snapshot/control updates
         cids2 = base.sample_clients(k_s2, n, s)

@@ -6,6 +6,22 @@
 
 ``Chain`` also supports >2 stages (e.g. FedAvg→SCAFFOLD→SGD) and optional
 per-stage stepsize decay — the "multistage algorithms" of Fig. 2.
+
+Execution model
+---------------
+A chain of N stages runs as ONE ``jax.lax.scan`` over a precomputed per-round
+schedule: for each round, which stage executes (``stage_id``), whether the
+round is a Lemma H.2 selection round (``kind``), whether a stage handoff
+(selection + re-init of the incoming stage) happens before it (``hmode``),
+and the η decay multiplier (``eta_scale``). Stage switching is a
+``lax.switch`` over the per-stage round functions inside the scan body, so a
+whole chain — stages, selection rounds, stepsize decay — compiles exactly
+once per ``(chain, problem)``; the compiled executor is cached at module
+level (via ``runner``'s cache) and reused across calls, round budgets and the
+sweep engine's vmapped grids.
+
+The seed implementation Python-looped over stages with a separate jit per
+stage per call; this executor replaces that with schedule data.
 """
 from __future__ import annotations
 
@@ -14,9 +30,17 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import runner as runner_lib
 from repro.core import selection
+from repro.core import tree_math as tm
+
+# handoff modes (the transition INTO stage j, applied before its first round)
+_H_NONE = 0  # no handoff this round
+_H_ANCHOR = 1  # init from the anchor (a costed selection round already ran)
+_H_SELECT = 2  # inline selection between anchor and previous stage's output
+_H_TAKE = 3  # take the previous stage's output unconditionally
 
 
 @dataclasses.dataclass
@@ -25,6 +49,21 @@ class ChainResult:
     history: jnp.ndarray  # concatenated per-round suboptimality
     switch_rounds: list  # round indices where a stage switch happened
     selected_initial: list  # per switch: True if selection kept the pre-stage point
+
+
+@dataclasses.dataclass(frozen=True)
+class _Schedule:
+    """Static per-round schedule for a chain execution."""
+
+    stage_id: np.ndarray  # [R] which stage's round (or whose output, kind=1)
+    kind: np.ndarray  # [R] 0 = algorithm round, 1 = selection round
+    hmode: np.ndarray  # [R] handoff mode before the round (_H_*)
+    eta_scale: np.ndarray  # [R] per-round stepsize multiplier
+    round_slot: np.ndarray  # [R] index into the stage's key block
+    sel_stage: np.ndarray  # [R] selection key index (stage whose k_sel to use)
+    budgets: tuple  # per-stage round budgets
+    switch_rounds: tuple  # cumulative totals after each stage
+    sel_indices: tuple  # round indices carrying a selection decision
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,52 +78,253 @@ class Chain:
     selection_costs_round: bool = True
     name: str = "chain"
 
-    def run(self, problem, x0, rounds: int, key, *, decay: Optional[dict] = None):
-        """Execute the chain for a total budget of ``rounds`` communication rounds."""
+    def _key(self):
+        # name is part of the key: TRACE_COUNTS entries are per-name, so two
+        # same-config chains with different names must not share a counter
+        return (tuple(self.stages), tuple(self.fractions), self.selection_s,
+                self.selection_k, self.select_between_stages,
+                self.selection_costs_round, self.name)
+
+    def budgets(self, rounds: int):
         assert len(self.stages) == len(self.fractions)
         budgets = [max(1, int(round(f * rounds))) for f in self.fractions]
         # spend any rounding surplus/deficit on the last stage
         budgets[-1] += rounds - sum(budgets) - (
-            (len(self.stages) - 1) if (self.select_between_stages and self.selection_costs_round) else 0
+            (len(self.stages) - 1)
+            if (self.select_between_stages and self.selection_costs_round) else 0
         )
         budgets[-1] = max(1, budgets[-1])
+        return budgets
 
+    def _schedule(self, rounds: int, decay: Optional[dict] = None) -> _Schedule:
+        budgets = self.budgets(rounds)
+        n = len(self.stages)
+        stage_id, kind, hmode, eta_scale, round_slot, sel_stage = [], [], [], [], [], []
+        switch_rounds, sel_indices = [], []
+        if decay is not None:
+            d_first = decay.get("decay_first", 0.3)
+            d_factor = decay.get("decay_factor", 0.5)
+
+        for i, b in enumerate(budgets):
+            scales = (np.asarray(runner_lib.decay_eta_scale(b, d_first, d_factor))
+                      if decay is not None else np.ones((b,), np.float32))
+            for j in range(b):
+                mode = _H_NONE
+                if i > 0 and j == 0:
+                    if self.select_between_stages and self.selection_costs_round:
+                        mode = _H_ANCHOR
+                    elif self.select_between_stages:
+                        mode = _H_SELECT
+                        sel_indices.append(len(stage_id))
+                    else:
+                        mode = _H_TAKE
+                stage_id.append(i)
+                kind.append(0)
+                hmode.append(mode)
+                eta_scale.append(scales[j])
+                round_slot.append(j)
+                sel_stage.append(max(i - 1, 0))
+            if i + 1 < n and self.select_between_stages and self.selection_costs_round:
+                sel_indices.append(len(stage_id))
+                stage_id.append(i)
+                kind.append(1)
+                hmode.append(_H_NONE)
+                eta_scale.append(1.0)
+                round_slot.append(0)
+                sel_stage.append(i)
+            switch_rounds.append(len(stage_id))
+
+        return _Schedule(
+            stage_id=np.asarray(stage_id, np.int32),
+            kind=np.asarray(kind, np.int32),
+            hmode=np.asarray(hmode, np.int32),
+            eta_scale=np.asarray(eta_scale, np.float32),
+            round_slot=np.asarray(round_slot, np.int32),
+            sel_stage=np.asarray(sel_stage, np.int32),
+            budgets=tuple(budgets),
+            switch_rounds=tuple(switch_rounds),
+            sel_indices=tuple(sel_indices),
+        )
+
+    # -- executor ----------------------------------------------------------
+
+    def executor_body(self, problem, rounds: int, decay: Optional[dict] = None):
+        """Unjitted single-scan chain executor.
+
+        Returns ``fn(x0, states0, key) -> (x_hat, history, sel_flags)`` where
+        ``states0`` is the tuple of per-stage initial states (their ``.eta``
+        fields carry any sweep stepsize scaling) and ``sel_flags`` is a [R]
+        bool vector whose entries at ``schedule.sel_indices`` record whether
+        selection kept the pre-stage anchor.
+        """
+        decay_key = tuple(sorted(decay.items())) if decay is not None else None
+        key = ("chain-body", self._key(), id(problem), rounds, decay_key)
+        fn = runner_lib._cache_get(key, problem)
+        if fn is not None:
+            return fn
+
+        sched = self._schedule(rounds, decay)
+        stages = tuple(self.stages)
+        n = len(stages)
         f_star = problem.f_star if problem.f_star is not None else 0.0
-        x = x0
-        hist = []
-        switch_rounds = []
-        selected_initial = []
-        total = 0
         sel_s = self.selection_s if self.selection_s > 0 else problem.num_clients
-        keys = jax.random.split(key, 2 * len(self.stages))
+        sel_k = self.selection_k
+        stage_id = jnp.asarray(sched.stage_id)
+        kind = jnp.asarray(sched.kind)
+        hmode = jnp.asarray(sched.hmode)
+        eta_scale = jnp.asarray(sched.eta_scale)
 
-        for i, (algo, budget) in enumerate(zip(self.stages, budgets)):
-            k_run, k_sel = keys[2 * i], keys[2 * i + 1]
-            if decay is not None:
-                res = runner_lib.run_with_decay(algo, problem, x, budget, k_run, **decay)
-            else:
-                res = runner_lib.run(algo, problem, x, budget, k_run)
-            hist.append(res.history)
-            total += budget
-            x_candidate = res.x_hat
-            if i + 1 < len(self.stages) and self.select_between_stages:
-                best, idx, _ = selection.select_better(
-                    problem, [x, x_candidate], k_sel, s=sel_s, k=self.selection_k
-                )
-                selected_initial.append(bool(idx == 0))
-                x = best
-                if self.selection_costs_round:
-                    hist.append(jnp.asarray([problem.global_loss(x) - f_star]))
-                    total += 1
-            else:
-                x = x_candidate
-            switch_rounds.append(total)
+        def _select2(anchor, cand, k_sel):
+            """Lemma H.2 pick between the anchor and a candidate; True = kept
+            the anchor (argmin ties resolve to the anchor, as the seed did)."""
+            vals = selection.empirical_values(
+                problem, [anchor, cand], k_sel, s=sel_s, k=sel_k)
+            keep = vals[0] <= vals[1]
+            return tm.tree_where(keep, anchor, cand), keep
 
+        def _output(j, states):
+            return jax.lax.switch(
+                j, [lambda s, i=i: stages[i].output(s[i]) for i in range(n)], states)
+
+        def _reinit(j, states, x_init):
+            """states with slot j re-initialized at x_init, base η preserved."""
+
+            def branch(i):
+                def init_i(args):
+                    states, x = args
+                    st = stages[i].init(problem, x)
+                    st = st._replace(eta=states[i].eta)
+                    return states[:i] + (st,) + states[i + 1:]
+                return init_i
+
+            return jax.lax.switch(j, [branch(i) for i in range(n)], (states, x_init))
+
+        def _round(j, states, k_round, scale):
+            def branch(i):
+                def round_i(args):
+                    states, k, scale = args
+                    st = states[i]
+                    run = stages[i].round(problem, st._replace(eta=st.eta * scale), k)
+                    run = run._replace(eta=st.eta)
+                    return states[:i] + (run,) + states[i + 1:]
+                return round_i
+
+            return jax.lax.switch(j, [branch(i) for i in range(n)],
+                                  (states, k_round, scale))
+
+        def executor(x0, states0, key):
+            from repro.core.algorithms import base as algo_base
+
+            for st in states0:
+                algo_base.audit_state(st)  # protocol check, once per trace
+            runner_lib.TRACE_COUNTS[f"chain/{self.name}"] += 1
+
+            # Per-round keys mirror the seed's derivation: split(key, 2N),
+            # stage i's rounds use split(keys[2i], budget_i), selections after
+            # stage i use keys[2i+1]. (With decay the seed split stage keys
+            # segment-wise; here rounds always split once per stage, so
+            # decayed-chain streams differ from pre-executor results —
+            # equivalent in distribution, not bit-for-bit.)
+            stage_keys = jax.random.split(key, 2 * n)
+            round_keys = jnp.concatenate([
+                jax.random.split(stage_keys[2 * i], b)
+                for i, b in enumerate(sched.budgets)
+            ])
+            sel_keys = jnp.stack([stage_keys[2 * i + 1] for i in range(n)])
+
+            # round_keys is indexed per stage block; build the flat [R] view
+            offsets = np.concatenate([[0], np.cumsum(sched.budgets)[:-1]])
+            flat_idx = jnp.asarray(
+                offsets[sched.stage_id] + sched.round_slot, jnp.int32)
+            keys_r = round_keys[flat_idx]  # [R, 2]
+            keys_s = sel_keys[jnp.asarray(sched.sel_stage)]  # [R, 2]
+
+            def body(carry, xs):
+                states, anchor = carry
+                k_round, k_sel, sid, knd, hmd, scale = xs
+
+                def do_handoff(args):
+                    states, anchor = args
+                    prev_out = _output(jnp.maximum(sid - 1, 0), states)
+
+                    def from_anchor(_):
+                        return anchor, jnp.asarray(True)
+
+                    def with_sel(_):
+                        return _select2(anchor, prev_out, k_sel)
+
+                    def take(_):
+                        return prev_out, jnp.asarray(False)
+
+                    x_init, kept = jax.lax.switch(
+                        hmd - 1, [from_anchor, with_sel, take], None)
+                    states = _reinit(sid, states, x_init)
+                    return states, x_init, kept
+
+                def no_handoff(args):
+                    states, anchor = args
+                    return states, anchor, jnp.asarray(False)
+
+                states, anchor, h_kept = jax.lax.cond(
+                    hmd > 0, do_handoff, no_handoff, (states, anchor))
+
+                def sel_round(args):
+                    states, anchor = args
+                    cand = _output(sid, states)
+                    best, kept = _select2(anchor, cand, k_sel)
+                    sub = problem.global_loss(best) - f_star
+                    return states, best, sub, kept
+
+                def alg_round(args):
+                    states, anchor = args
+                    states = _round(sid, states, k_round, scale)
+                    sub = problem.global_loss(_output(sid, states)) - f_star
+                    return states, anchor, sub, jnp.asarray(False)
+
+                states, anchor, sub, s_kept = jax.lax.cond(
+                    knd == 1, sel_round, alg_round, (states, anchor))
+                return (states, anchor), (sub, h_kept | s_kept)
+
+            (states, _), (history, kept_flags) = jax.lax.scan(
+                body, (states0, x0),
+                (keys_r, keys_s, stage_id, kind, hmode, eta_scale))
+            x_hat = stages[-1].output(states[-1])
+            return x_hat, history, kept_flags
+
+        return runner_lib._cache_put(key, problem, executor)
+
+    def executor(self, problem, rounds: int, decay: Optional[dict] = None):
+        """The jitted, module-cached chain executor."""
+        decay_key = tuple(sorted(decay.items())) if decay is not None else None
+        key = ("chain-jit", self._key(), id(problem), rounds, decay_key)
+        fn = runner_lib._cache_get(key, problem)
+        if fn is not None:
+            return fn
+        return runner_lib._cache_put(
+            key, problem, jax.jit(self.executor_body(problem, rounds, decay)))
+
+    def init_states(self, problem, x0, eta_scale=None):
+        """Per-stage initial states; ``eta_scale`` multiplies every stage's
+        base stepsize (the sweep engine's batched axis)."""
+        states = tuple(a.init(problem, x0) for a in self.stages)
+        if eta_scale is not None:
+            states = tuple(s._replace(eta=s.eta * eta_scale) for s in states)
+        return states
+
+    def run(self, problem, x0, rounds: int, key, *, decay: Optional[dict] = None,
+            eta_scale=None):
+        """Execute the chain for a total budget of ``rounds`` communication
+        rounds — a single compiled call regardless of stage count."""
+        sched = self._schedule(rounds, decay)
+        fn = self.executor(problem, rounds, decay)
+        states0 = self.init_states(problem, x0, eta_scale)
+        x_hat, history, kept_flags = fn(x0, states0, key)
+        kept = np.asarray(kept_flags)
         return ChainResult(
-            x_hat=x,
-            history=jnp.concatenate(hist),
-            switch_rounds=switch_rounds[:-1],
-            selected_initial=selected_initial,
+            x_hat=x_hat,
+            history=history,
+            switch_rounds=list(sched.switch_rounds[:-1]),
+            selected_initial=[bool(kept[i]) for i in sched.sel_indices],
         )
 
 

@@ -1,13 +1,44 @@
-"""Round-loop runners: jit/scan execution of federated algorithms with
-suboptimality trajectories, plus a stepsize-decay (multistage "M-") wrapper.
+"""Single-compile round executors for federated algorithms.
+
+The round loop is one ``jax.lax.scan`` over a per-round *schedule*: PRNG keys
+plus a stepsize multiplier ``eta_scale[r]`` applied to the state's base η each
+round. Stepsize decay (the paper's "M-" variants, App. I.1) is therefore pure
+data — the same compiled executor runs constant-η and decayed-η schedules.
+
+Executors are cached at module level, keyed by ``(algo, problem, eval mode)``:
+repeated ``run`` calls with the same algorithm on the same problem never
+re-trace (the seed implementation re-jitted a fresh closure per call). The
+cache also exposes the *unjitted* executor body so ``repro.core.sweep`` can
+``vmap`` it over a seeds × stepsizes grid inside one compiled call.
+
+State protocol (audited in ``algorithms.base``): every algorithm state is a
+NamedTuple carrying ``.x`` (server iterate), ``.eta`` (base stepsize — the
+executor owns annealing and restores the base after every round) and ``.r``
+(round counter). ``round`` must pass ``eta`` through unchanged.
+
+``TRACE_COUNTS`` increments once per executor *trace* (a Python side effect
+inside the traced body) — tests assert single-compile behaviour with it.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+# Trace counter: the executor bodies bump this when (re)traced. A cached,
+# single-compile executor leaves the count unchanged on repeated calls.
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+# (cache key) -> (problem, executor fn). The problem participates in the key
+# by id() — FederatedProblem closes over arrays and is not hashable — and is
+# held strongly in the entry so a hit can verify identity (guarding against
+# id reuse). The cache is a bounded LRU: executors close over their problem's
+# data, so unbounded growth would pin every problem ever run.
+_EXECUTOR_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+_EXECUTOR_CACHE_MAX = 128
 
 
 @dataclasses.dataclass
@@ -18,33 +49,102 @@ class RunResult:
     grad_norms: Optional[jnp.ndarray] = None
 
 
-def run(algo, problem, x0, rounds: int, key, *, eval_output: bool = True, jit: bool = True):
-    """Run ``rounds`` communication rounds; record suboptimality each round."""
+def _env_key():
+    """Trace-time environment baked into compiled executors: a cached
+    executor traced under one kernel-dispatch mode must not be served under
+    another (``REPRO_FORCE_PALLAS`` is read when the round body traces)."""
+    from repro.kernels.aggregate import ops as agg_ops
+
+    return agg_ops._force_pallas_env()
+
+
+def _cache_get(key, problem):
+    hit = _EXECUTOR_CACHE.get((key, _env_key()))
+    if hit is not None:
+        cached_problem, fn = hit
+        if cached_problem is problem:
+            _EXECUTOR_CACHE.move_to_end((key, _env_key()))
+            return fn
+    return None
+
+
+def _cache_put(key, problem, fn):
+    full = (key, _env_key())
+    _EXECUTOR_CACHE[full] = (problem, fn)
+    _EXECUTOR_CACHE.move_to_end(full)
+    while len(_EXECUTOR_CACHE) > _EXECUTOR_CACHE_MAX:
+        _EXECUTOR_CACHE.popitem(last=False)
+    return fn
+
+
+def clear_executor_cache():
+    """Drop all cached executors (mainly for tests)."""
+    _EXECUTOR_CACHE.clear()
+
+
+def executor_body(algo, problem, eval_output: bool = True):
+    """The unjitted single-compile executor.
+
+    Returns ``fn(state0, keys, eta_scale) -> (state, history)`` scanning all
+    rounds at once; ``keys`` is [R, 2] raw PRNG keys, ``eta_scale`` is [R]
+    multipliers on the *base* stepsize carried in ``state0.eta``.
+    """
+    key = ("body", algo, id(problem), eval_output)
+    fn = _cache_get(key, problem)
+    if fn is not None:
+        return fn
+
     f_star = problem.f_star if problem.f_star is not None else 0.0
 
-    def one_round(state, k):
-        state = algo.round(problem, state, k)
-        x_eval = algo.output(state) if eval_output else state.x
-        sub = problem.global_loss(x_eval) - f_star
-        return state, sub
+    def executor(state0, keys, eta_scale):
+        from repro.core.algorithms import base as algo_base
 
-    def scan_all(state0, keys):
-        return jax.lax.scan(one_round, state0, keys)
+        algo_base.audit_state(state0)  # protocol check, once per trace
+        TRACE_COUNTS[f"runner/{algo.name}"] += 1  # trace-time side effect
+        base_eta = state0.eta
 
-    state0 = algo.init(problem, x0)
+        def one_round(state, xs):
+            k, scale = xs
+            st = algo.round(problem, state._replace(eta=base_eta * scale), k)
+            st = st._replace(eta=base_eta)  # executor owns annealing
+            x_eval = algo.output(st) if eval_output else st.x
+            sub = problem.global_loss(x_eval) - f_star
+            return st, sub
+
+        return jax.lax.scan(one_round, state0, (keys, eta_scale))
+
+    return _cache_put(key, problem, executor)
+
+
+def executor(algo, problem, eval_output: bool = True):
+    """The jitted, module-cached executor (same signature as the body)."""
+    key = ("jit", algo, id(problem), eval_output)
+    fn = _cache_get(key, problem)
+    if fn is not None:
+        return fn
+    return _cache_put(key, problem, jax.jit(executor_body(algo, problem, eval_output)))
+
+
+def run(algo, problem, x0, rounds: int, key, *, eval_output: bool = True,
+        jit: bool = True, eta=None):
+    """Run ``rounds`` communication rounds; record suboptimality each round.
+
+    ``eta`` overrides the state's base stepsize (used by the sweep engine's
+    per-run comparator); ``None`` keeps the algorithm's own initialization.
+    """
+    state0 = algo.init_with_eta(problem, x0, eta)
     keys = jax.random.split(key, rounds)
-    fn = jax.jit(scan_all) if jit else scan_all
-    state, history = fn(state0, keys)
+    eta_scale = jnp.ones((rounds,), jnp.float32)
+    fn = (executor if jit else executor_body)(algo, problem, eval_output)
+    state, history = fn(state0, keys, eta_scale)
     return RunResult(state=state, x_hat=algo.output(state), history=history)
 
 
-def run_with_decay(
-    algo, problem, x0, rounds: int, key, *,
-    decay_first: float = 0.3, decay_factor: float = 0.5, jit: bool = True,
-):
-    """The paper's "M-" stepsize-decay variants (App. I.1): halve η at
-    R_decay = decay_first·R and again at every doubling of R_decay."""
-    # decay boundaries: ceil(decay_first*R), 2x, 4x, ... up to R
+def decay_segments(rounds: int, decay_first: float = 0.3):
+    """Segment lengths of the App. I.1 decay schedule (sum == rounds).
+
+    Boundaries at ceil(decay_first·R) and every doubling thereof.
+    """
     boundaries = []
     b = max(1, int(round(decay_first * rounds)))
     while b < rounds:
@@ -56,27 +156,43 @@ def run_with_decay(
         segments.append(b - prev)
         prev = b
     segments.append(rounds - prev)
+    return segments
 
-    state = algo.init(problem, x0)
-    f_star = problem.f_star if problem.f_star is not None else 0.0
-    hist = []
-    keys = jax.random.split(key, len(segments))
 
-    def seg_fn(state0, ks):
-        def one_round(st, k):
-            st = algo.round(problem, st, k)
-            sub = problem.global_loss(algo.output(st)) - f_star
-            return st, sub
-
-        return jax.lax.scan(one_round, state0, ks)
-
-    seg_jit = jax.jit(seg_fn) if jit else seg_fn
+def decay_eta_scale(rounds: int, decay_first: float = 0.3,
+                    decay_factor: float = 0.5) -> jnp.ndarray:
+    """Per-round η multipliers implementing the "M-" stepsize decay."""
+    segments = decay_segments(rounds, decay_first)
+    scales = []
     for i, seg in enumerate(segments):
-        if seg <= 0:
-            continue
-        ks = jax.random.split(keys[i], seg)
-        state, h = seg_jit(state, ks)
-        hist.append(h)
-        state = state._replace(eta=state.eta * decay_factor)
-    history = jnp.concatenate(hist) if hist else jnp.zeros((0,))
+        if seg > 0:
+            scales.append(jnp.full((seg,), decay_factor**i, jnp.float32))
+    return jnp.concatenate(scales) if scales else jnp.zeros((0,), jnp.float32)
+
+
+def run_with_decay(
+    algo, problem, x0, rounds: int, key, *,
+    decay_first: float = 0.3, decay_factor: float = 0.5, jit: bool = True,
+    eta=None,
+):
+    """The paper's "M-" stepsize-decay variants (App. I.1): halve η at
+    R_decay = decay_first·R and again at every doubling of R_decay.
+
+    Runs through the SAME compiled executor as ``run`` — decay is schedule
+    data (``eta_scale``), not a re-traced per-segment loop.
+    """
+    segments = decay_segments(rounds, decay_first)
+    seg_keys = jax.random.split(key, len(segments))
+    keys = jnp.concatenate([
+        jax.random.split(seg_keys[i], seg)
+        for i, seg in enumerate(segments) if seg > 0
+    ]) if rounds > 0 else jnp.zeros((0, 2), jnp.uint32)
+    eta_scale = decay_eta_scale(rounds, decay_first, decay_factor)
+
+    state0 = algo.init_with_eta(problem, x0, eta)
+    fn = (executor if jit else executor_body)(algo, problem, True)
+    state, history = fn(state0, keys, eta_scale)
+    # final state carries the fully-annealed stepsize, as the segment loop did
+    n_applied = sum(1 for seg in segments if seg > 0)
+    state = state._replace(eta=state0.eta * decay_factor**n_applied)
     return RunResult(state=state, x_hat=algo.output(state), history=history)

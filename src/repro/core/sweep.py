@@ -1,0 +1,157 @@
+"""Vmapped sweep engine: one compiled call for a seeds × stepsizes grid.
+
+FedChain's experiment grids (Tables 1–4, Fig. 2) repeat the same algorithm
+over seeds and stepsizes. ``run_sweep`` vmaps the single-compile executors
+from ``runner``/``chain`` over both axes and jits the whole grid, so an
+S × E sweep costs ONE trace + one device dispatch instead of S·E re-traced
+round loops. Sweep functions are cached per ``(algo-or-chain, problem,
+rounds)`` — repeated sweeps (e.g. across ζ values on the same problem
+instance) never re-trace.
+
+Stepsize semantics
+------------------
+* Plain algorithms, ``eta_mode="absolute"`` (default): each grid value is the
+  stepsize itself (``state.eta = η``), matching ``runner.run(..., eta=η)``.
+* Plain algorithms, ``eta_mode="scale"``: grid values multiply the state's
+  own initialized stepsize — use this for algorithms that derive η from
+  problem constants (e.g. SSNM's Thm. D.5 stepsize).
+* Chains: grid values are always *multipliers* applied to every stage's base
+  stepsize (a chain has one η per stage, so an absolute grid is ambiguous),
+  matching ``Chain.run(..., eta_scale=m)``.
+
+Because η lives in algorithm state (the uniform state protocol of
+``algorithms.base``), batching stepsizes is just a batched ``state.eta`` leaf
+— no algorithm code is sweep-aware.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import chain as chain_lib
+from repro.core import runner as runner_lib
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Results over the grid; leading axes are [n_seeds, n_etas]."""
+
+    history: jnp.ndarray  # [S, E, R] per-round suboptimality
+    final_sub: jnp.ndarray  # [S, E] F(x̂) − F* at the end
+    x_hat: object  # pytree, leaves [S, E, ...]
+    seeds: tuple
+    etas: tuple
+    selected_initial: Optional[jnp.ndarray] = None  # [S, E, n_sel] (chains)
+
+
+def _sweep_fn_algo(algo, problem, rounds: int, eval_output: bool, eta_mode: str):
+    key = ("sweep-algo", algo, id(problem), rounds, eval_output, eta_mode)
+    fn = runner_lib._cache_get(key, problem)
+    if fn is not None:
+        return fn
+
+    body = runner_lib.executor_body(algo, problem, eval_output)
+    f_star = problem.f_star if problem.f_star is not None else 0.0
+    eta_scale = jnp.ones((rounds,), jnp.float32)
+
+    def cell(x0, key, eta):
+        runner_lib.TRACE_COUNTS[f"sweep/{algo.name}"] += 1
+        state0 = algo.init(problem, x0)
+        new_eta = (state0.eta * eta if eta_mode == "scale"
+                   else jnp.asarray(eta, jnp.result_type(state0.eta)))
+        state0 = state0._replace(eta=new_eta)
+        keys = jax.random.split(key, rounds)
+        state, history = body(state0, keys, eta_scale)
+        x_hat = algo.output(state)
+        return x_hat, history, problem.global_loss(x_hat) - f_star
+
+    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, 0)),
+                    in_axes=(None, 0, None))
+    return runner_lib._cache_put(key, problem, jax.jit(grid))
+
+
+def _sweep_fn_chain(chain, problem, rounds: int, decay):
+    decay_key = tuple(sorted(decay.items())) if decay is not None else None
+    key = ("sweep-chain", chain._key(), id(problem), rounds, decay_key)
+    fn = runner_lib._cache_get(key, problem)
+    if fn is not None:
+        return fn
+
+    body = chain.executor_body(problem, rounds, decay)
+    sched = chain._schedule(rounds, decay)
+    sel_idx = jnp.asarray(sched.sel_indices, jnp.int32)
+    f_star = problem.f_star if problem.f_star is not None else 0.0
+
+    def cell(x0, key, mult):
+        runner_lib.TRACE_COUNTS[f"sweep/{chain.name}"] += 1
+        states0 = chain.init_states(problem, x0, eta_scale=mult)
+        x_hat, history, kept = body(x0, states0, key)
+        return x_hat, history, problem.global_loss(x_hat) - f_star, kept[sel_idx]
+
+    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, 0)),
+                    in_axes=(None, 0, None))
+    return runner_lib._cache_put(key, problem, jax.jit(grid))
+
+
+def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
+              seeds: Sequence[int], etas: Sequence[float],
+              eta_mode: Optional[str] = None, eval_output: bool = True,
+              decay: Optional[dict] = None) -> SweepResult:
+    """Run every (seed, η) grid cell in one compiled, vmapped call.
+
+    ``seeds`` are PRNG seeds (cell s uses ``jax.random.PRNGKey(seeds[s])``,
+    so results match per-call ``runner.run``/``Chain.run`` with those keys);
+    ``etas`` follow the stepsize semantics in the module docstring.
+    ``eta_mode`` defaults to "absolute" for plain algorithms; chains only
+    accept "scale" (their grid values are per-stage multipliers), so passing
+    "absolute" with a chain is an error rather than a silent reinterpretation.
+    """
+    is_chain = isinstance(algo_or_chain, chain_lib.Chain)
+    if eta_mode is None:
+        eta_mode = "scale" if is_chain else "absolute"
+    if eta_mode not in ("absolute", "scale"):
+        raise ValueError(f"eta_mode must be 'absolute' or 'scale', got {eta_mode!r}")
+    if is_chain and eta_mode != "scale":
+        raise ValueError(
+            "chains sweep stepsize *multipliers* (one η per stage makes an "
+            "absolute grid ambiguous); pass eta_mode='scale' or omit it")
+    seeds = tuple(int(s) for s in seeds)
+    etas = tuple(float(e) for e in etas)
+    if not seeds:
+        raise ValueError("run_sweep needs at least one seed")
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+    etas_arr = jnp.asarray(etas, jnp.float32)
+
+    if is_chain:
+        fn = _sweep_fn_chain(algo_or_chain, problem, rounds, decay)
+        x_hat, history, final, kept = fn(x0, keys, etas_arr)
+        return SweepResult(history=history, final_sub=final, x_hat=x_hat,
+                           seeds=seeds, etas=etas, selected_initial=kept)
+
+    if decay is not None:
+        raise NotImplementedError("decay sweeps: wrap the algorithm in a Chain")
+    fn = _sweep_fn_algo(algo_or_chain, problem, rounds, eval_output, eta_mode)
+    x_hat, history, final = fn(x0, keys, etas_arr)
+    return SweepResult(history=history, final_sub=final, x_hat=x_hat,
+                       seeds=seeds, etas=etas)
+
+
+def best_cell(result: SweepResult):
+    """(seed_idx, eta_idx) of the lowest finite final suboptimality.
+
+    Raises if every cell diverged — callers must not mistake a nan/inf run
+    for a tuned result.
+    """
+    import numpy as np
+
+    final = np.asarray(result.final_sub)
+    masked = np.where(np.isfinite(final), final, np.inf)
+    if not np.isfinite(masked).any():
+        raise ValueError(
+            f"every sweep cell diverged (no finite final suboptimality) "
+            f"over seeds={result.seeds} etas={result.etas}")
+    flat = int(np.argmin(masked))
+    return np.unravel_index(flat, final.shape)

@@ -1,9 +1,18 @@
 """Backend-dispatching wrappers for the aggregate kernel.
 
-TPU: the Pallas kernel. CPU: interpret-mode Pallas when ``force_pallas``
-(tests), else the jnp reference (XLA:CPU can't lower Mosaic).
+TPU: the Pallas kernel. CPU: interpret-mode Pallas when ``force_pallas`` or
+``REPRO_FORCE_PALLAS=1`` (tests / kernel-path debugging), else the jnp
+reference (XLA:CPU can't lower Mosaic).
+
+These wrappers are the *fused aggregation path* exercised by the main
+experiment loop: the flat-vector algorithms (``core.algorithms.sgd/saga/
+ssnm/fedavg/scaffold/asg``) route their server updates here, so the
+quadratic/theory benchmarks hit the same kernel entry points as
+``benchmarks.kernels_bench``.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 
@@ -16,6 +25,10 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _force_pallas_env() -> bool:
+    return os.environ.get("REPRO_FORCE_PALLAS", "0") not in ("0", "", "false")
+
+
 def chain_aggregate(x, g, c_i, c, weights=None, *, lr: float, force_pallas: bool = False):
     import jax.numpy as jnp
 
@@ -23,7 +36,7 @@ def chain_aggregate(x, g, c_i, c, weights=None, *, lr: float, force_pallas: bool
         weights = jnp.full((g.shape[0],), 1.0 / g.shape[0], jnp.float32)
     if _on_tpu():
         return _kernel(x, g, c_i, c, weights, lr=lr)
-    if force_pallas:
+    if force_pallas or _force_pallas_env():
         return _kernel(x, g, c_i, c, weights, lr=lr, interpret=True)
     return ref.chain_aggregate_ref(x, g, c_i, c, lr=lr, weights=weights)
 
@@ -31,6 +44,6 @@ def chain_aggregate(x, g, c_i, c, weights=None, *, lr: float, force_pallas: bool
 def mean_over_clients(t, *, force_pallas: bool = False):
     if _on_tpu():
         return _mean_kernel(t)
-    if force_pallas:
+    if force_pallas or _force_pallas_env():
         return _mean_kernel(t, interpret=True)
     return ref.mean_over_clients_ref(t)

@@ -1,0 +1,142 @@
+"""Sweep engine + single-compile executor guarantees.
+
+(a) ``run_sweep`` over a seeds × η grid matches the per-call
+    ``runner.run``/``Chain.run`` loop cell-for-cell;
+(b) repeated executor calls never re-trace (``runner.TRACE_COUNTS`` is bumped
+    by a Python side effect inside the traced bodies, so a cache hit leaves
+    it unchanged);
+(c) every algorithm honors the uniform state protocol the executors and the
+    vmapped sweeps rely on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms as A, chain, runner, sweep
+from repro.core.algorithms import base
+from repro.data import problems
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return problems.quadratic_problem(
+        jax.random.PRNGKey(0), num_clients=8, dim=16, mu=0.1, beta=1.0,
+        zeta=1.0, sigma=0.2, sigma_f=0.05)
+
+
+SEEDS = (0, 1)
+ETAS = (0.2, 0.5)
+
+
+def test_sweep_matches_per_run_loop_algo(quad):
+    algo = A.SGD(eta=0.4, k=4, mu_avg=quad.mu)
+    x0 = quad.init_params(jax.random.PRNGKey(0))
+    res = sweep.run_sweep(algo, quad, x0, 20, seeds=SEEDS, etas=ETAS)
+    assert res.history.shape == (2, 2, 20)
+    for i, sd in enumerate(SEEDS):
+        for j, eta in enumerate(ETAS):
+            r = runner.run(algo, quad, x0, 20, jax.random.PRNGKey(sd), eta=eta)
+            np.testing.assert_allclose(
+                np.asarray(res.history[i, j]), np.asarray(r.history),
+                rtol=2e-4, atol=1e-6)
+            np.testing.assert_allclose(
+                float(res.final_sub[i, j]), float(r.history[-1]),
+                rtol=2e-4, atol=1e-6)
+
+
+def test_sweep_matches_per_run_loop_chain(quad):
+    ch = chain.fedchain(
+        A.FedAvg(eta=0.3, local_steps=3, inner_batch=2),
+        A.SGD(eta=0.3, k=4, mu_avg=quad.mu), selection_k=4,
+        name="sweep-eq-chain")
+    x0 = quad.init_params(jax.random.PRNGKey(0))
+    mults = (0.5, 1.0)
+    res = sweep.run_sweep(ch, quad, x0, 16, seeds=SEEDS, etas=mults)
+    assert res.history.shape == (2, 2, 16)
+    assert res.selected_initial.shape == (2, 2, 1)
+    for i, sd in enumerate(SEEDS):
+        for j, m in enumerate(mults):
+            r = ch.run(quad, x0, 16, jax.random.PRNGKey(sd), eta_scale=m)
+            np.testing.assert_allclose(
+                np.asarray(res.history[i, j]), np.asarray(r.history),
+                rtol=2e-4, atol=1e-6)
+            assert bool(res.selected_initial[i, j, 0]) == r.selected_initial[0]
+
+
+def test_runner_single_compile(quad):
+    algo = A.SGD(eta=0.35, k=3, mu_avg=quad.mu, name="cc-sgd")
+    x0 = quad.init_params(jax.random.PRNGKey(0))
+    runner.run(algo, quad, x0, 10, jax.random.PRNGKey(0))
+    count = runner.TRACE_COUNTS["runner/cc-sgd"]
+    assert count >= 1
+    for s in range(1, 4):
+        runner.run(algo, quad, x0, 10, jax.random.PRNGKey(s))
+    assert runner.TRACE_COUNTS["runner/cc-sgd"] == count  # no re-trace
+
+
+def test_chain_single_compile_with_selection_and_decay(quad):
+    """A chain of N stages — selection rounds and stepsize decay included —
+    executes in a single jit compile across repeated calls."""
+    ch = chain.Chain(
+        stages=[A.FedAvg(eta=0.3), A.Scaffold(eta=0.3),
+                A.SGD(eta=0.3, k=4, mu_avg=quad.mu)],
+        fractions=[0.3, 0.3, 0.4], selection_k=4, name="cc-chain")
+    x0 = quad.init_params(jax.random.PRNGKey(0))
+    decay = {"decay_first": 0.4, "decay_factor": 0.5}
+    ch.run(quad, x0, 24, jax.random.PRNGKey(0), decay=decay)
+    count = runner.TRACE_COUNTS["chain/cc-chain"]
+    assert count == 1  # the whole chain traced exactly once
+    for s in range(1, 4):
+        res = ch.run(quad, x0, 24, jax.random.PRNGKey(s), decay=decay)
+    assert runner.TRACE_COUNTS["chain/cc-chain"] == 1
+    assert res.history.shape == (24,)
+    assert len(res.selected_initial) == 2
+
+
+def test_sweep_single_compile(quad):
+    algo = A.SGD(eta=0.35, k=3, mu_avg=quad.mu, name="cc-sweep")
+    x0 = quad.init_params(jax.random.PRNGKey(0))
+    sweep.run_sweep(algo, quad, x0, 8, seeds=SEEDS, etas=ETAS)
+    count = runner.TRACE_COUNTS["sweep/cc-sweep"]
+    assert count == 1  # vmap traces the cell once for the whole grid
+    sweep.run_sweep(algo, quad, x0, 8, seeds=(2, 3), etas=(0.1, 0.3))
+    assert runner.TRACE_COUNTS["sweep/cc-sweep"] == 1
+
+
+def test_sweep_eta_scale_mode(quad):
+    """scale mode multiplies the state's own stepsize — the hook for
+    algorithms that derive η from problem constants (SSNM)."""
+    algo = A.SSNM(mu_h=quad.mu, beta=quad.beta, k=2)
+    x0 = quad.init_params(jax.random.PRNGKey(0))
+    res = sweep.run_sweep(algo, quad, x0, 6, seeds=(0,), etas=(1.0,),
+                          eta_mode="scale")
+    r = runner.run(algo, quad, x0, 6, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(res.history[0, 0]),
+                               np.asarray(r.history), rtol=2e-4, atol=1e-6)
+
+
+def test_state_protocol_all_algorithms(quad):
+    x0 = quad.init_params(jax.random.PRNGKey(0))
+    algos = [
+        A.SGD(eta=0.3, k=2), A.NesterovSGD(eta=0.3, mu=0.1, beta=1.0, k=2),
+        A.ACSA(mu=0.1, beta=1.0, k=2), A.FedAvg(eta=0.3),
+        A.Scaffold(eta=0.3), A.SAGA(eta=0.3, k=2),
+        A.SSNM(mu_h=0.1, beta=1.0, k=2), A.FedProx(eta=0.3),
+    ]
+    for algo in algos:
+        state = base.audit_state(algo.init(quad, x0))
+        # the executor relies on round() passing eta through unchanged
+        out = algo.round(quad, state, jax.random.PRNGKey(1))
+        assert float(out.eta) == float(state.eta), algo.name
+        # stepsize override is a pure state edit (what sweeps batch over)
+        st2 = algo.init_with_eta(quad, x0, eta=0.123)
+        assert float(st2.eta) == pytest.approx(0.123), algo.name
+
+
+def test_best_cell_skips_nonfinite():
+    res = sweep.SweepResult(
+        history=jnp.zeros((2, 2, 1)),
+        final_sub=jnp.asarray([[jnp.inf, 3.0], [jnp.nan, 2.0]]),
+        x_hat=None, seeds=(0, 1), etas=(0.1, 0.2))
+    assert sweep.best_cell(res) == (1, 1)
