@@ -1,0 +1,117 @@
+"""Communication-cost frontier: suboptimality vs *bits*, not rounds.
+
+Runs the Table-1 strongly convex grid through the comm subsystem — the
+chained FedAvg→SGD method against compressed / partial-participation
+baselines — and reports, per method, the exact cumulative uplink+downlink
+bits next to the reached suboptimality. The headline metric is
+``bits_to_target``: total wire bits until the median suboptimality first
+drops below a fixed target (the paper's cost-vs-accuracy question, asked
+in bits). Everything lands in ``BENCH_comm.json`` at the repo root.
+
+All methods share compiled executors: comm config is operand data, so the
+whole frontier (compressors × participation × methods) costs one trace per
+(algorithm, problem) pair.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.comm import CommConfig
+from repro.core import algorithms as A, chain, sweep
+from repro.data import problems
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def build(zeta=1.0, sigma=0.2, mu=0.1, beta=1.0):
+    return problems.quadratic_problem(
+        jax.random.PRNGKey(0), num_clients=8, dim=16, mu=mu, beta=beta,
+        zeta=zeta, sigma=sigma, sigma_f=0.05)
+
+
+def methods(p):
+    k = 32
+    fa = A.FedAvg.from_k(k, eta=0.5)
+    sgd = A.SGD(eta=0.5, k=k, mu_avg=p.mu)
+    saga = A.SAGA(eta=0.5, k=k, mu_avg=p.mu)
+    chained = chain.fedchain(fa, sgd, selection_k=k, name="fedavg->sgd")
+
+    full = CommConfig()
+    qsgd4 = CommConfig(compressor="qsgd", qsgd_bits=4)
+    qsgd8 = CommConfig(compressor="qsgd", qsgd_bits=8)
+    randk4 = CommConfig(compressor="randk", spars_k=4)
+    topk4_ef = CommConfig(compressor="topk", spars_k=4, error_feedback=True)
+    part50 = CommConfig(compressor="qsgd", qsgd_bits=4, participation=0.5)
+
+    return {
+        "fedavg->sgd/full32": (chained, full),
+        "fedavg->sgd/qsgd4": (chained, qsgd4),
+        "sgd/full32": (sgd, full),
+        "sgd/qsgd4": (sgd, qsgd4),
+        "sgd/qsgd8": (sgd, qsgd8),
+        "sgd/randk4": (sgd, randk4),
+        "sgd/qsgd4+part50": (sgd, part50),
+        "fedavg/topk4+ef": (fa, topk4_ef),
+        "saga/qsgd4": (saga, qsgd4),  # compressed variance reduction
+    }
+
+
+def _bits_to_target(cum_bits, med_sub, target):
+    """Total bits when the median suboptimality first reaches the target."""
+    hit = np.flatnonzero(med_sub <= target)
+    return float(cum_bits[hit[0]]) if hit.size else None
+
+
+def main(quick: bool = True):
+    rounds = 40 if quick else 120
+    seeds = tuple(100 + s for s in range(3))
+    p = build()
+    x0 = p.init_params(jax.random.PRNGKey(0))
+    target = 1e-2 * float(p.suboptimality(x0))  # 100× below the init gap
+
+    rows = []
+    report = {
+        "problem": {"name": p.name, "num_clients": p.num_clients,
+                    "dim": int(x0.shape[0]), "rounds": rounds,
+                    "seeds": list(seeds), "target_sub": target},
+        "methods": {},
+    }
+    for name, (algo, cfg) in methods(p).items():
+        res, us = timed(lambda a=algo, c=cfg: sweep.run_sweep(
+            a, p, x0, rounds, seeds=seeds, etas=(1.0,), eta_mode="scale",
+            comm=c))
+        med = np.median(np.asarray(res.history)[:, 0, :], axis=0)  # [R]
+        cum = np.median(res.cumulative_bits()[:, 0, :], axis=0)  # [R]
+        final = float(med[-1])
+        total_bits = float(cum[-1])
+        to_target = _bits_to_target(cum, med, target)
+        report["methods"][name] = {
+            "config": {"compressor": cfg.compressor,
+                       "qsgd_bits": cfg.qsgd_bits, "spars_k": cfg.spars_k,
+                       "participation": cfg.participation,
+                       "error_feedback": cfg.error_feedback},
+            "us_per_sweep": us,
+            "final_sub": final,
+            "total_bits": total_bits,
+            "uplink_bits_per_vector": cfg.uplink_bits(int(x0.shape[0])),
+            "bits_to_target": to_target,
+            "sub_curve": [float(v) for v in med],
+            "cum_bits_curve": [float(v) for v in cum],
+        }
+        to_s = f"{to_target:.3e}" if to_target is not None else "miss"
+        rows.append(emit(f"comm/{name}", us,
+                         f"sub={final:.3e};bits={total_bits:.3e};"
+                         f"bits_to_target={to_s}"))
+
+    with open(os.path.join(ROOT, "BENCH_comm.json"), "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -17,9 +17,10 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (
-        ablation_selection, appj1_large_k, fig2_convergence, kernels_bench,
-        lower_bound_bench, roofline, sweep_bench, table1_strongly_convex,
-        table2_general_convex, table3_nonconvex, table4_pl,
+        ablation_selection, appj1_large_k, comm_frontier, fig2_convergence,
+        kernels_bench, lower_bound_bench, roofline, sweep_bench,
+        table1_strongly_convex, table2_general_convex, table3_nonconvex,
+        table4_pl,
     )
 
     harnesses = {
@@ -31,6 +32,7 @@ def main(argv=None) -> None:
         "lower_bound": lower_bound_bench.main,  # Thm 5.4 / App G
         "appj1": appj1_large_k.main,  # App J.1 (large K)
         "ablation_selection": ablation_selection.main,  # Lemma H.2 on/off
+        "comm_frontier": comm_frontier.main,  # suboptimality-vs-bits frontier
         "sweep": sweep_bench.main,  # vmapped grid vs per-call loop
         "kernels": kernels_bench.main,  # Pallas kernels
         "roofline": roofline.main,  # deliverable (g) report

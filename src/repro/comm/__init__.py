@@ -1,0 +1,79 @@
+"""Communication subsystem: compressed uplinks, partial participation, and
+exact bits accounting for the FedChain experiment harnesses.
+
+The paper's objective is *communication* cost, but rounds R are only a proxy
+for it — this package makes cost first-class, so every sweep can report
+suboptimality-vs-bits instead of suboptimality-vs-rounds.
+
+Design: comm config is DATA, not a trace trigger
+------------------------------------------------
+All comm behavior threads through the single-compile executors
+(``core.runner``/``core.chain``) as runtime operands:
+
+* the compressor choice is an integer ``comp_id`` selecting a branch of one
+  ``lax.switch`` (every branch is traced once; only the selected one runs),
+* QSGD bit-width and top-k/rand-k sparsity ``k`` are traced scalars,
+* partial participation is a precomputed per-round client-mask schedule
+  ``[R, N]`` fed to the ``lax.scan`` alongside the PRNG keys,
+
+so changing participation fraction, compressor, or bit-width never
+recompiles an executor (``runner.TRACE_COUNTS`` stays flat). The only
+trace-time comm choice is *enabling* error feedback, which changes the state
+structure (the residual table goes from ``[N, 0]`` to ``[N, D]``).
+
+Compression is simulated as a quantize→dequantize round trip: algorithms see
+the server-side reconstruction of each client's uplink, while the bits that
+WOULD have crossed the wire are accounted in closed form.
+
+Bits-accounting model
+---------------------
+Let d be the (flat) parameter dimension, S_r = Σ mask_r the number of
+participating clients in round r, and ⌈log₂d⌉ the index width. Per
+participating client and uplinked vector:
+
+* identity:  ``32·d``                       (full-precision float32)
+* QSGD(b):   ``32 + d·(b+1)``               (ℓ₂ norm + sign and b-bit level
+                                             per coordinate)
+* top-k/rand-k: ``k·(32 + ⌈log₂ d⌉)``        (float32 value + index per
+                                             retained coordinate)
+
+Downlinks are uncompressed: ``32·d`` per broadcast vector per participant
+(SCAFFOLD broadcasts x and the server variate: 2 vectors). A Lemma H.2
+selection round costs ``2·32·d`` down and ``2·32`` up per sampled client
+(both candidates broadcast; one scalar empirical value returned each).
+``CommState.bits_up``/``bits_down`` meter ONE round at a time (executors
+zero them each scan step and emit them as the per-round [R] meters);
+cumulative totals are summed in float64 outside the scan
+(``SweepResult.cumulative_bits``), so the accounting stays exact instead of
+saturating a float32 running sum.
+"""
+from repro.comm.compressors import (
+    COMP_IDENTITY,
+    COMP_QSGD,
+    COMP_RANDK,
+    COMP_TOPK,
+    CommParams,
+    compress_rows,
+)
+from repro.comm.config import (
+    CommConfig,
+    CommState,
+    account_round,
+    comm_key,
+    downlink_bits_per_client,
+    ef_enabled,
+    masked_keep,
+    participation_scale,
+    selection_round_bits,
+    uplink,
+    uplink_bits_per_client,
+)
+
+__all__ = [
+    "COMP_IDENTITY", "COMP_QSGD", "COMP_TOPK", "COMP_RANDK",
+    "CommParams", "CommConfig", "CommState",
+    "compress_rows", "uplink", "account_round", "comm_key",
+    "participation_scale", "masked_keep", "ef_enabled",
+    "uplink_bits_per_client", "downlink_bits_per_client",
+    "selection_round_bits",
+]

@@ -1,0 +1,90 @@
+"""Uplink compressors as one switchable, jit-stable operator.
+
+``compress_rows`` applies the compressor selected by ``params.comp_id`` to a
+batch of per-client vectors [S, D]. All four branches are traced into every
+comm-enabled executor and selected at RUNTIME by a ``lax.switch``, so the
+compressor choice (and its bit-width / sparsity knobs) is operand data — the
+hook that keeps ``runner.TRACE_COUNTS`` flat across comm configs.
+
+Branch semantics (all return the server-side dequantized reconstruction):
+
+* identity — the input, bitwise (the branch body is ``lambda v: v``; this is
+  what makes identity-compressor runs reproduce uncompressed trajectories
+  bit-exactly).
+* qsgd — unbiased stochastic quantization to L = 2^b − 1 levels per row
+  (Alistarh et al. 2017), via the Pallas quantize/dequantize kernel.
+* topk — keep the k largest-|v| coordinates per row (biased; pair with
+  error feedback).
+* randk — keep k uniformly random coordinates per row, scaled by d/k
+  (unbiased).
+
+k and b are traced scalars: top-k/rand-k use rank masks (``ranks < k``)
+rather than dynamic slicing, so a sparsity grid reuses one compile.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+COMP_IDENTITY = 0
+COMP_QSGD = 1
+COMP_TOPK = 2
+COMP_RANDK = 3
+
+COMP_IDS = {
+    "identity": COMP_IDENTITY,
+    "qsgd": COMP_QSGD,
+    "topk": COMP_TOPK,
+    "randk": COMP_RANDK,
+}
+
+
+class CommParams(NamedTuple):
+    """Runtime compressor knobs — jnp scalars, never trace triggers."""
+
+    comp_id: jnp.ndarray  # int32 ∈ COMP_IDS.values()
+    qsgd_bits: jnp.ndarray  # float32, QSGD bit-width b (L = 2^b − 1)
+    spars_k: jnp.ndarray  # int32, retained coords for top-k/rand-k
+
+
+def _row_ranks(x):
+    """Per-row ranks along axis 1: rank 0 = smallest (argsort of argsort)."""
+    order = jnp.argsort(x, axis=1)
+    return jnp.argsort(order, axis=1)
+
+
+def compress_rows(vec, key, params: CommParams):
+    """Quantize→dequantize each row of ``vec`` [S, D].
+
+    ``key`` drives the stochastic branches (QSGD rounding / rand-k subset);
+    the uniforms are drawn INSIDE those branches, so deterministic
+    compressors (identity, top-k) never pay for the [S, D] sample.
+    """
+    d = vec.shape[1]
+
+    def _identity(v, _):
+        return v
+
+    def _qsgd(v, k):
+        from repro.kernels.compress import ops as compress_ops
+
+        u = jax.random.uniform(k, v.shape, jnp.float32)
+        norms = jnp.linalg.norm(v.astype(jnp.float32), axis=1)
+        levels = jnp.maximum(2.0 ** params.qsgd_bits - 1.0, 1.0)
+        return compress_ops.qsgd_dequantize(v, u, norms, levels)
+
+    def _topk(v, _):
+        ranks = _row_ranks(-jnp.abs(v))
+        return v * (ranks < params.spars_k).astype(v.dtype)
+
+    def _randk(v, k):
+        u = jax.random.uniform(k, v.shape, jnp.float32)
+        ranks = _row_ranks(u)
+        keep = (ranks < params.spars_k).astype(v.dtype)
+        scale = jnp.float32(d) / jnp.maximum(params.spars_k.astype(jnp.float32), 1.0)
+        return v * keep * scale.astype(v.dtype)
+
+    return jax.lax.switch(
+        params.comp_id, [_identity, _qsgd, _topk, _randk], vec, key)

@@ -1,0 +1,291 @@
+"""Comm configuration, per-run state, and the uplink/accounting operators.
+
+``CommConfig`` is the user-facing static description; everything it produces
+for the executors — ``CommParams`` scalars, the per-round participation mask
+schedule, the ``CommState`` carried in algorithm state — is runtime data.
+See the package docstring for the bits model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import compressors
+from repro.comm.compressors import COMP_IDENTITY, COMP_QSGD, CommParams
+
+# fold_in tag deriving the comm PRNG stream from a round key WITHOUT
+# disturbing the key splits the algorithms already perform (bit-exactness of
+# identity-compressor runs depends on this).
+_COMM_KEY_TAG = 0x636D
+
+
+class CommState(NamedTuple):
+    """The optional ``comm`` leaf of the uniform state protocol.
+
+    All fields are arrays (operand data). ``mask`` is the CURRENT round's
+    participation mask — the executor overwrites it each scan step from the
+    precomputed schedule. ``residual`` is the per-client error-feedback table:
+    ``[N, D]`` when EF is on, ``[N, 0]`` when off (the shape is the trace-time
+    EF flag — see ``ef_enabled``).
+
+    ``bits_up``/``bits_down`` meter the CURRENT round only: executors zero
+    them at round start, ``account_round`` (and the chain's selection
+    billing) add within the round, and the executor emits the totals as the
+    per-round [R] meters. Keeping the in-scan meters per-round (a few 1e8
+    bits at most, exact in float32 for the 32-bit-granular counts) instead
+    of cumulative is what keeps the accounting exact — cumulative sums are
+    taken in float64 OUTSIDE the scan (``SweepResult.cumulative_bits``).
+    """
+
+    params: CommParams
+    mask: jnp.ndarray  # [N] float32 ∈ {0, 1}
+    residual: jnp.ndarray  # [N, D] or [N, 0]
+    bits_up: jnp.ndarray  # float32 scalar, THIS round's uplink bits
+    bits_down: jnp.ndarray  # float32 scalar, THIS round's downlink bits
+
+
+def zero_round_bits(comm: CommState) -> CommState:
+    """Reset the per-round meters (executors call this at round start)."""
+    return comm._replace(bits_up=jnp.zeros_like(comm.bits_up),
+                         bits_down=jnp.zeros_like(comm.bits_down))
+
+
+def ef_enabled(comm: CommState) -> bool:
+    """Trace-time error-feedback flag, encoded in the residual table shape."""
+    return comm.residual.shape[1] > 0
+
+
+def comm_key(key):
+    """The comm PRNG stream for a round key (quantization randomness)."""
+    return jax.random.fold_in(key, _COMM_KEY_TAG)
+
+
+def participation_scale(mask, cids):
+    """Per-row aggregation weights turning a plain client mean into the
+    participant mean: scaleᵢ = m_i · S_rows / Σm, so
+    meanᵢ(scaleᵢ·vᵢ) = Σ m_i·v_i / Σm. Under full participation every scale
+    is exactly 1.0 — multiplying by it is a bitwise no-op."""
+    m = mask[cids].astype(jnp.float32)
+    total = jnp.maximum(jnp.sum(m), 1.0)
+    return m * (jnp.float32(m.shape[0]) / total)
+
+
+def uplink_bits_per_client(params: CommParams, d: int):
+    """Closed-form uplink bits for ONE compressed [d] vector (traced scalar)."""
+    idx_bits = float(max(1, math.ceil(math.log2(d)))) if d > 1 else 1.0
+    k = params.spars_k.astype(jnp.float32)
+    return jnp.select(
+        [params.comp_id == COMP_IDENTITY, params.comp_id == COMP_QSGD],
+        [jnp.float32(32.0 * d), 32.0 + d * (params.qsgd_bits + 1.0)],
+        default=k * (32.0 + idx_bits),
+    )
+
+
+def downlink_bits_per_client(d: int):
+    """Downlinks are uncompressed float32 broadcasts."""
+    return 32.0 * d
+
+
+def selection_round_bits(d: int, s_sel: int):
+    """(uplink, downlink) bits of one Lemma H.2 two-candidate selection."""
+    return 2.0 * 32.0 * s_sel, 2.0 * 32.0 * d * s_sel
+
+
+def account_round(comm: CommState, d: int, *, up_vectors: int,
+                  down_vectors: int) -> CommState:
+    """Accumulate one round's bits: S_r participants, ``up_vectors``
+    compressed uplink vectors and ``down_vectors`` broadcast vectors each."""
+    s_r = jnp.sum(comm.mask.astype(jnp.float32))
+    up = s_r * up_vectors * uplink_bits_per_client(comm.params, d)
+    down = s_r * down_vectors * downlink_bits_per_client(d)
+    return comm._replace(bits_up=comm.bits_up + up,
+                         bits_down=comm.bits_down + down)
+
+
+def uplink(comm: CommState, payload, cids, key, *, ref=None,
+           use_ef: bool = True):
+    """Compress one batch of per-client uplink vectors.
+
+    ``payload`` is [S, D] (row i = client ``cids[i]``'s transmission);
+    ``ref`` is an optional reference point (the broadcast iterate) — when
+    given, the *delta* payload − ref is compressed and the reconstruction
+    ref + C(Δ) returned, which is the standard wire format for local-update
+    methods. Identity compression short-circuits to the payload itself
+    (bitwise), whatever the reference. Error feedback adds the client's
+    residual before compression and stores the quantization error after —
+    participants only (masked-out clients neither transmit nor consume
+    residual). Returns ``(reconstruction [S, D], updated CommState)``.
+    """
+    params = comm.params
+    delta = payload - ref if ref is not None else payload
+
+    ef = ef_enabled(comm) and use_ef
+    if ef:
+        res = comm.residual[cids]
+        delta_in = delta + res
+    else:
+        delta_in = delta
+
+    comp = compressors.compress_rows(delta_in, key, params)
+
+    if ef:
+        m = comm.mask[cids].astype(jnp.float32)[:, None]
+        new_res = m * (delta_in - comp) + (1.0 - m) * res
+        comm = comm._replace(residual=comm.residual.at[cids].set(new_res))
+
+    recon = ref + comp if ref is not None else comp
+    # identity returns the payload itself: ref + (payload − ref) round-trips
+    # through float addition, but the wire carried the exact payload.
+    out = jnp.where(params.comp_id == COMP_IDENTITY, payload, recon)
+    return out, comm
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    """Static description of a communication regime.
+
+    ``participation`` is the per-round client fraction (exactly
+    ``max(1, round(frac·N))`` clients are drawn uniformly without replacement
+    each round); ``error_feedback`` carries compression error per client
+    across rounds (trace-time flag). ``mask_seed`` seeds the mask schedule —
+    independent of the run key, so comm schedules are reproducible across
+    algorithms.
+    """
+
+    compressor: str = "identity"  # identity | qsgd | topk | randk
+    qsgd_bits: int = 4
+    spars_k: int = 4
+    participation: float = 1.0
+    error_feedback: bool = False
+    mask_seed: int = 0
+
+    def __post_init__(self):
+        if self.compressor not in compressors.COMP_IDS:
+            raise ValueError(
+                f"unknown compressor {self.compressor!r}; "
+                f"expected one of {sorted(compressors.COMP_IDS)}")
+        if not (0.0 < self.participation <= 1.0):
+            raise ValueError("participation must be in (0, 1]")
+        if self.qsgd_bits < 1:
+            raise ValueError("qsgd_bits must be ≥ 1 (one sign+level bit)")
+        if self.spars_k < 1:
+            raise ValueError("spars_k must be ≥ 1 (top-k/rand-k keep ≥ 1 "
+                             "coordinate)")
+
+    @property
+    def name(self) -> str:
+        tag = {"identity": "full32",
+               "qsgd": f"qsgd{self.qsgd_bits}",
+               "topk": f"topk{self.spars_k}",
+               "randk": f"randk{self.spars_k}"}[self.compressor]
+        if self.error_feedback:
+            tag += "+ef"
+        if self.participation < 1.0:
+            tag += f"+part{self.participation:g}"
+        return tag
+
+    def params(self) -> CommParams:
+        return CommParams(
+            comp_id=jnp.asarray(compressors.COMP_IDS[self.compressor], jnp.int32),
+            qsgd_bits=jnp.asarray(self.qsgd_bits, jnp.float32),
+            spars_k=jnp.asarray(self.spars_k, jnp.int32),
+        )
+
+    def clients_per_round(self, num_clients: int) -> int:
+        return max(1, int(round(self.participation * num_clients)))
+
+    def round_masks(self, rounds: int, num_clients: int, *, fold: int = 0):
+        """[R, N] float32 schedule: exactly ``clients_per_round`` ones per
+        row, drawn uniformly without replacement. ``fold`` derives
+        independent schedules (e.g. one per sweep seed) from one mask_seed.
+        Full participation returns all-ones (no randomness consumed)."""
+        if self.participation >= 1.0:
+            return jnp.ones((rounds, num_clients), jnp.float32)
+        s = self.clients_per_round(num_clients)
+        key = jax.random.fold_in(jax.random.PRNGKey(self.mask_seed), fold)
+
+        def one_round(k):
+            u = jax.random.uniform(k, (num_clients,))
+            ranks = jnp.argsort(jnp.argsort(u))
+            return (ranks < s).astype(jnp.float32)
+
+        return jax.vmap(one_round)(jax.random.split(key, rounds))
+
+    def init_state(self, num_clients: int, dim: int) -> CommState:
+        if self.compressor in ("topk", "randk") and self.spars_k > dim:
+            raise ValueError(
+                f"spars_k={self.spars_k} exceeds the parameter dimension "
+                f"{dim}: the sparsifier would keep everything while billing "
+                f"MORE than the identity compressor — use identity (or a "
+                f"smaller k) instead")
+        res_d = dim if self.error_feedback else 0
+        return CommState(
+            params=self.params(),
+            mask=jnp.ones((num_clients,), jnp.float32),
+            residual=jnp.zeros((num_clients, res_d), jnp.float32),
+            bits_up=jnp.asarray(0.0, jnp.float32),
+            bits_down=jnp.asarray(0.0, jnp.float32),
+        )
+
+    def uplink_bits(self, d: int) -> float:
+        """Bits per client per uplinked vector — evaluates the SAME closed
+        form the executors bill (``uplink_bits_per_client``), so reports can
+        never desynchronize from the in-scan accounting."""
+        return float(uplink_bits_per_client(self.params(), d))
+
+
+def require_flat(x0, what: str = "comm"):
+    """The comm subsystem operates on flat [D] parameter vectors (residual
+    tables, compress kernels, masked aggregation are all [N, D]-shaped)."""
+    if not (isinstance(x0, jax.Array) and x0.ndim == 1):
+        raise NotImplementedError(
+            f"{what} requires flat [D] parameter vectors; got a pytree/"
+            f"non-vector — extend the batched-state audit before enabling "
+            f"comm on pytree models (see ROADMAP)")
+    return x0
+
+
+def masked_keep(mask_rows, new, old):
+    """Participants take the new value; masked-out clients keep the old —
+    the table-update convention every comm-aware algorithm shares (a bitwise
+    no-op selecting ``new`` under full participation)."""
+    return jnp.where(mask_rows[:, None] > 0, new, old)
+
+
+def reject_algo_participation(algo_s: int, algo_name: str):
+    """Comm-enabled rounds own participation through the mask schedule; an
+    algorithm's own ``s`` would be silently ignored — refuse instead."""
+    if algo_s and algo_s > 0:
+        raise ValueError(
+            f"algorithm {algo_name!r} sets s={algo_s} (its own client "
+            f"sampling) but the comm layer is enabled — participation is "
+            f"owned by CommConfig.participation (the per-round mask "
+            f"schedule); set s=0 on the algorithm and put the fraction in "
+            f"the comm config")
+
+
+def require_comm_leaf(state, algo_name: str):
+    """Pre-run check that an algorithm's state CAN carry a comm leaf (the
+    friendly error before ``_replace(comm=...)`` would crash on a NamedTuple
+    without the field — e.g. ACSA/SSNM states)."""
+    if not hasattr(state, "comm"):
+        raise TypeError(
+            f"algorithm {algo_name!r} is not comm-aware: its state has no "
+            f"comm leaf (see algorithms.base — comm-aware states declare "
+            f"`comm: Optional[object] = None`)")
+    return state
+
+
+def comm_state_or_error(state, algo_name: str) -> Optional[CommState]:
+    """Executor-side check that an algorithm honored the comm leaf."""
+    comm = getattr(state, "comm", None)
+    if comm is None:
+        raise TypeError(
+            f"algorithm {algo_name!r} is not comm-aware: its round() dropped "
+            f"the comm leaf (comm-aware rounds must thread state.comm "
+            f"through and account their uplinks)")
+    return comm

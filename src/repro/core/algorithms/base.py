@@ -15,6 +15,13 @@ Conventions
   schedules can anneal it and sweeps can batch it) and ``.r`` (the round
   counter). ``round`` must pass ``eta`` through unchanged; the executor owns
   annealing. ``audit_state`` checks the protocol.
+* Optional ``comm`` leaf: comm-aware algorithm states additionally carry
+  ``comm: Optional[CommState] = None`` (``repro.comm``). ``None`` (the
+  default) is an empty pytree — plain runs are untouched. The comm
+  executors inject a ``CommState`` (with the round's participation mask)
+  before each round; a comm-aware ``round`` compresses its uplinks through
+  ``repro.comm.uplink``, aggregates with ``weight_scale`` masks, accounts
+  bits via ``repro.comm.account_round`` and returns the updated leaf.
 * Client sampling is uniform without replacement (paper §2).
 * ``Grad`` (Algo 7): each sampled client averages K stochastic gradient
   queries at the server iterate.
@@ -52,33 +59,54 @@ def flat_params(x) -> bool:
     return isinstance(x, jax.Array) and x.ndim == 1
 
 
-def client_mean(x, stacked):
+def client_mean(x, stacked, weight_scale=None):
     """Mean over the leading client axis of ``stacked``, routed through the
     Pallas ``mean_over_clients`` kernel when params are flat vectors (``x`` is
-    the server iterate used only to pick the layout)."""
+    the server iterate used only to pick the layout).
+
+    ``weight_scale`` [S] (comm partial participation) switches to the masked
+    aggregate meanᵢ(wᵢ·tᵢ); callers pass ``m_i·S/Σm`` so masked-out clients
+    drop out and the result is the participant mean. Under full participation
+    every wᵢ is exactly 1.0, keeping the result bitwise equal to the plain
+    mean."""
     from repro.kernels.aggregate import ops as agg_ops
 
+    if weight_scale is not None:
+        from repro.kernels.compress import ops as compress_ops
+
+        if not flat_params(x):
+            raise NotImplementedError(
+                "weight_scale (comm) aggregation needs flat [D] params")
+        return compress_ops.weighted_mean_over_clients(stacked, weight_scale)
     if flat_params(x):
         return agg_ops.mean_over_clients(stacked)
     return tm.tree_mean_leading(stacked)
 
 
-def fused_server_step(x, g_per, eta, *, c_i=None, c_mean=None):
+def fused_server_step(x, g_per, eta, *, c_i=None, c_mean=None,
+                      weight_scale=None):
     """The (variance-reduced) server update x − η·(meanᵢ(gᵢ − cᵢ) + c̄).
 
     On flat [D] params this is one fused Pallas ``chain_aggregate`` pass —
     η is folded into the client weights (η/S each) and the server variate so
     the traced stepsize reaches the kernel as data while ``lr`` stays static.
     ``c_i``/``c_mean`` default to zero (plain gradient averaging, Algo 2).
+    ``weight_scale`` [S] rescales per-client weights (comm participation
+    masks, exactly 1.0 per client under full participation).
     """
     from repro.kernels.aggregate import ops as agg_ops
 
     if flat_params(x):
         s = g_per.shape[0]
-        w = jnp.full((s,), 1.0, jnp.float32) * (eta / s)
+        base_w = (jnp.full((s,), 1.0, jnp.float32) if weight_scale is None
+                  else weight_scale.astype(jnp.float32))
+        w = base_w * (eta / s)
         ci = jnp.zeros_like(g_per) if c_i is None else c_i
         c = jnp.zeros_like(x) if c_mean is None else eta * c_mean
         return agg_ops.chain_aggregate(x, g_per, ci, c, weights=w, lr=1.0)
+    if weight_scale is not None:
+        raise NotImplementedError(
+            "weight_scale (comm) server steps need flat [D] params")
     if c_i is None:
         g = tm.tree_mean_leading(g_per)
     else:

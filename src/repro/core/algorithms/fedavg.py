@@ -8,12 +8,16 @@ paper's √K×√K convention.
 Server update: x^{r+1} = x^r − server_lr · mean_i Σ_k η·g_{i,k}
              = (1 − server_lr)·x^r + server_lr · mean_i x_{i,final}
 (the paper uses server_lr = 1, i.e. plain iterate averaging).
+
+Comm-aware: the uplink payload is the local iterate delta y_i − x (the wire
+format of local-update methods); the server reconstructs x + C(y_i − x) and
+averages over the round's participation mask.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +30,7 @@ class FedAvgState(NamedTuple):
     x: object
     eta: jnp.ndarray
     r: jnp.ndarray
+    comm: Optional[object] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,15 +61,31 @@ class FedAvg(base.FederatedAlgorithm):
 
     def round(self, problem, state, key):
         k_sample, k_local = jax.random.split(key)
-        s = self.participation(problem)
+        comm = state.comm
+        if comm is not None:
+            from repro.comm import config as comm_cfg
+
+            comm_cfg.reject_algo_participation(self.s, self.name)
+        s = (problem.num_clients if comm is not None
+             else self.participation(problem))
         cids = base.sample_clients(k_sample, problem.num_clients, s)
         keys = jax.random.split(k_local, s)
         y_final = jax.vmap(
             lambda cid, kk: self._local(problem, state.x, cid, kk, state.eta)
         )(cids, keys)
-        y_mean = base.client_mean(state.x, y_final)
+        if comm is not None:
+            from repro import comm as comm_lib
+
+            y_hat, comm = comm_lib.uplink(
+                comm, y_final, cids, comm_lib.comm_key(key), ref=state.x)
+            scale = comm_lib.participation_scale(comm.mask, cids)
+            y_mean = base.client_mean(state.x, y_hat, weight_scale=scale)
+            comm = comm_lib.account_round(
+                comm, state.x.shape[0], up_vectors=1, down_vectors=1)
+        else:
+            y_mean = base.client_mean(state.x, y_final)
         x = tm.tree_lerp(self.server_lr, state.x, y_mean)
-        return FedAvgState(x=x, eta=state.eta, r=state.r + 1)
+        return FedAvgState(x=x, eta=state.eta, r=state.r + 1, comm=comm)
 
     def init(self, problem, x0):
         return FedAvgState(x=x0, eta=jnp.asarray(self.eta), r=jnp.asarray(0))

@@ -14,11 +14,18 @@ On flat [D] parameters the variance-reduced server step
 ``x − η·(mean(g_i − c_i) + c̄)`` is exactly the fused Pallas aggregation
 kernel's contract; η is folded into the weights/server-variate operands so
 the traced stepsize passes as data.
+
+Comm-aware: compressed variance reduction in the style of Zhao et al.
+("Faster Rates for Compressed Federated Learning with Client-Variance
+Reduction") — gradients are compressed on the uplink and the server-side
+control-variate table stores the TRANSMITTED (dequantized) values, so server
+state never references information that did not cross the wire. Masked-out
+clients neither update the table nor contribute to the step.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +41,7 @@ class SAGAState(NamedTuple):
     tracker: base.AvgTracker
     eta: jnp.ndarray
     r: jnp.ndarray
+    comm: Optional[object] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,25 +78,71 @@ class SAGA(base.FederatedAlgorithm):
 
     def round(self, problem, state, key):
         k_sample, k_grad, k_sample2, k_grad2 = jax.random.split(key, 4)
-        s = self.participation(problem)
+        comm = state.comm
+        if comm is not None:
+            from repro.comm import config as comm_cfg
+
+            comm_cfg.reject_algo_participation(self.s, self.name)
+        s = (problem.num_clients if comm is not None
+             else self.participation(problem))
         cids = base.sample_clients(k_sample, problem.num_clients, s)
         g_per = base.grad_k(problem, state.x, cids, k_grad, self.k)
         c_i = jax.tree.map(lambda t: t[cids], state.c_table)
-        x = base.fused_server_step(state.x, g_per, state.eta,
-                                   c_i=c_i, c_mean=state.c_mean)
+        if comm is not None:
+            from repro import comm as comm_lib
+
+            g_per, comm = comm_lib.uplink(
+                comm, g_per, cids, comm_lib.comm_key(key))
+            scale = comm_lib.participation_scale(comm.mask, cids)
+            x = base.fused_server_step(state.x, g_per, state.eta,
+                                       c_i=c_i, c_mean=state.c_mean,
+                                       weight_scale=scale)
+        else:
+            x = base.fused_server_step(state.x, g_per, state.eta,
+                                       c_i=c_i, c_mean=state.c_mean)
+
+        def masked(new, old, m):
+            """Participants' values, masked-out rows keep the old table
+            entry (``comm_lib.masked_keep``; identity when no mask)."""
+            if m is None:
+                return new
+            from repro.comm import config as comm_cfg
+
+            return comm_cfg.masked_keep(m, new, old)
 
         if self.option == "I":
-            c_table, c_mean = self._update_table(state, cids, g_per)
+            m = comm.mask[cids] if comm is not None else None
+            c_table, c_mean = self._update_table(
+                state, cids, masked(g_per, c_i, m))
         else:  # Option II: independent sample + fresh gradients at x^{(r)}
             cids2 = base.sample_clients(k_sample2, problem.num_clients, s)
             g2 = base.grad_k(problem, state.x, cids2, k_grad2, self.k)
-            c_table, c_mean = self._update_table(state, cids2, g2)
+            m2 = None
+            if comm is not None:
+                from repro import comm as comm_lib
+
+                # fresh gradients are a second compressed uplink (no EF:
+                # the residual stream belongs to the step gradients)
+                g2, comm = comm_lib.uplink(
+                    comm, g2, cids2,
+                    jax.random.fold_in(comm_lib.comm_key(key), 1),
+                    use_ef=False)
+                m2 = comm.mask[cids2]
+            old2 = jax.tree.map(lambda t: t[cids2], state.c_table)
+            c_table, c_mean = self._update_table(
+                state, cids2, masked(g2, old2, m2))
+        if comm is not None:
+            from repro import comm as comm_lib
+
+            comm = comm_lib.account_round(
+                comm, state.x.shape[0],
+                up_vectors=1 if self.option == "I" else 2, down_vectors=1)
 
         decay = jnp.clip(jnp.asarray(1.0 - state.eta * self.mu_avg), 0.0, 1.0)
         tracker = state.tracker.update(x, decay)
         return SAGAState(
             x=x, c_table=c_table, c_mean=c_mean, tracker=tracker,
-            eta=state.eta, r=state.r + 1,
+            eta=state.eta, r=state.r + 1, comm=comm,
         )
 
     def output(self, state):

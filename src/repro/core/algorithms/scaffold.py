@@ -8,11 +8,15 @@ Per sampled client i:
 Server:
   x ← x + server_lr · mean_i (y_i − x)
   c ← c + (S/N) · mean_i (c_i⁺ − c_i)
+
+Comm-aware: clients uplink TWO compressed vectors per round — the iterate
+delta (y_i − x) and the control-variate delta (c_i⁺ − c_i); the server
+broadcasts two (x and c). Masked-out clients keep their table entries.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +31,7 @@ class ScaffoldState(NamedTuple):
     c: object  # server control variate
     eta: jnp.ndarray
     r: jnp.ndarray
+    comm: Optional[object] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,8 +53,13 @@ class Scaffold(base.FederatedAlgorithm):
 
     def round(self, problem, state, key):
         k_sample, k_local = jax.random.split(key)
-        s = self.participation(problem)
+        comm = state.comm
+        if comm is not None:
+            from repro.comm import config as comm_cfg
+
+            comm_cfg.reject_algo_participation(self.s, self.name)
         n = problem.num_clients
+        s = n if comm is not None else self.participation(problem)
         cids = base.sample_clients(k_sample, problem.num_clients, s)
         keys = jax.random.split(k_local, s)
         c_i = jax.tree.map(lambda t: t[cids], state.c_table)
@@ -70,12 +80,32 @@ class Scaffold(base.FederatedAlgorithm):
             return y, ci_new
 
         y_final, ci_new = jax.vmap(local)(cids, c_i, keys)
-        y_mean = base.client_mean(state.x, y_final)
+        if comm is not None:
+            from repro import comm as comm_lib
+
+            k_comm = comm_lib.comm_key(key)
+            y_final, comm = comm_lib.uplink(
+                comm, y_final, cids, k_comm, ref=state.x)
+            # control deltas ride a second uplink (per-row reference, no EF)
+            ci_new, comm = comm_lib.uplink(
+                comm, ci_new, cids, jax.random.fold_in(k_comm, 1),
+                ref=c_i, use_ef=False)
+            from repro.comm import config as comm_cfg
+
+            m = comm.mask[cids]
+            scale = comm_lib.participation_scale(comm.mask, cids)
+            y_mean = base.client_mean(state.x, y_final, weight_scale=scale)
+            ci_new = comm_cfg.masked_keep(m, ci_new, c_i)
+            comm = comm_lib.account_round(
+                comm, state.x.shape[0], up_vectors=2, down_vectors=2)
+        else:
+            y_mean = base.client_mean(state.x, y_final)
         x = tm.tree_lerp(self.server_lr, state.x, y_mean)
         delta_c = tm.tree_mean_leading(jax.tree.map(jnp.subtract, ci_new, c_i))
         c = tm.tree_axpy(s / n, delta_c, state.c)
         c_table = tm.tree_scatter_set(state.c_table, cids, ci_new)
-        return ScaffoldState(x=x, c_table=c_table, c=c, eta=state.eta, r=state.r + 1)
+        return ScaffoldState(x=x, c_table=c_table, c=c, eta=state.eta,
+                             r=state.r + 1, comm=comm)
 
     def output(self, state):
         return state.x

@@ -12,11 +12,17 @@ On flat [D] parameter vectors (the quadratic/theory problems) the server step
 runs through the fused Pallas aggregation kernel (``kernels.aggregate.ops``):
 η is folded into the client weights (η/S each) so the traced stepsize reaches
 the kernel as data while ``lr`` stays static.
+
+Comm-aware: with a ``comm`` leaf injected (``repro.comm``), every client's
+K-sample gradient is computed, the uplink is compressed (g is the wire
+payload), and the server step averages over the round's participation mask.
+With the identity compressor and full participation this path is bit-exact
+with the plain one.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 
@@ -29,6 +35,7 @@ class SGDState(NamedTuple):
     tracker: base.AvgTracker
     eta: jnp.ndarray
     r: jnp.ndarray
+    comm: Optional[object] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,13 +56,33 @@ class SGD(base.FederatedAlgorithm):
         import jax
 
         k_sample, k_grad = jax.random.split(key)
-        s = self.participation(problem)
-        cids = base.sample_clients(k_sample, problem.num_clients, s)
-        g_per = base.grad_k(problem, state.x, cids, k_grad, self.k)
-        x = base.fused_server_step(state.x, g_per, state.eta)
+        comm = state.comm
+        if comm is not None:
+            from repro import comm as comm_lib
+            from repro.comm import config as comm_cfg
+
+            # all N clients compute (static shape); the round's mask decides
+            # who transmits — an algorithm-level s would be silently ignored
+            comm_cfg.reject_algo_participation(self.s, self.name)
+            n = problem.num_clients
+            cids = base.sample_clients(k_sample, n, n)
+            g_per = base.grad_k(problem, state.x, cids, k_grad, self.k)
+            g_hat, comm = comm_lib.uplink(
+                comm, g_per, cids, comm_lib.comm_key(key))
+            scale = comm_lib.participation_scale(comm.mask, cids)
+            x = base.fused_server_step(state.x, g_hat, state.eta,
+                                       weight_scale=scale)
+            comm = comm_lib.account_round(
+                comm, state.x.shape[0], up_vectors=1, down_vectors=1)
+        else:
+            s = self.participation(problem)
+            cids = base.sample_clients(k_sample, problem.num_clients, s)
+            g_per = base.grad_k(problem, state.x, cids, k_grad, self.k)
+            x = base.fused_server_step(state.x, g_per, state.eta)
         decay = jnp.asarray(1.0 - state.eta * self.mu_avg)
         tracker = state.tracker.update(x, jnp.clip(decay, 0.0, 1.0))
-        return SGDState(x=x, tracker=tracker, eta=state.eta, r=state.r + 1)
+        return SGDState(x=x, tracker=tracker, eta=state.eta, r=state.r + 1,
+                        comm=comm)
 
     def output(self, state):
         if self.output_mode == "last":

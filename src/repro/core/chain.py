@@ -49,16 +49,21 @@ class ChainResult:
     history: jnp.ndarray  # concatenated per-round suboptimality
     switch_rounds: list  # round indices where a stage switch happened
     selected_initial: list  # per switch: True if selection kept the pre-stage point
+    bits_up: Optional[jnp.ndarray] = None  # [R] per-round uplink bits (comm)
+    bits_down: Optional[jnp.ndarray] = None  # [R] per-round downlink bits
 
 
 @dataclasses.dataclass(frozen=True)
 class _Schedule:
-    """Static per-round schedule for a chain execution."""
+    """Static per-round schedule for a chain execution.
+
+    Stepsize decay is NOT part of the schedule: η multipliers are an executor
+    *operand* (see ``eta_schedule``), so a decay grid reuses one compile.
+    """
 
     stage_id: np.ndarray  # [R] which stage's round (or whose output, kind=1)
     kind: np.ndarray  # [R] 0 = algorithm round, 1 = selection round
     hmode: np.ndarray  # [R] handoff mode before the round (_H_*)
-    eta_scale: np.ndarray  # [R] per-round stepsize multiplier
     round_slot: np.ndarray  # [R] index into the stage's key block
     sel_stage: np.ndarray  # [R] selection key index (stage whose k_sel to use)
     budgets: tuple  # per-stage round budgets
@@ -96,18 +101,13 @@ class Chain:
         budgets[-1] = max(1, budgets[-1])
         return budgets
 
-    def _schedule(self, rounds: int, decay: Optional[dict] = None) -> _Schedule:
+    def _schedule(self, rounds: int) -> _Schedule:
         budgets = self.budgets(rounds)
         n = len(self.stages)
-        stage_id, kind, hmode, eta_scale, round_slot, sel_stage = [], [], [], [], [], []
+        stage_id, kind, hmode, round_slot, sel_stage = [], [], [], [], []
         switch_rounds, sel_indices = [], []
-        if decay is not None:
-            d_first = decay.get("decay_first", 0.3)
-            d_factor = decay.get("decay_factor", 0.5)
 
         for i, b in enumerate(budgets):
-            scales = (np.asarray(runner_lib.decay_eta_scale(b, d_first, d_factor))
-                      if decay is not None else np.ones((b,), np.float32))
             for j in range(b):
                 mode = _H_NONE
                 if i > 0 and j == 0:
@@ -121,7 +121,6 @@ class Chain:
                 stage_id.append(i)
                 kind.append(0)
                 hmode.append(mode)
-                eta_scale.append(scales[j])
                 round_slot.append(j)
                 sel_stage.append(max(i - 1, 0))
             if i + 1 < n and self.select_between_stages and self.selection_costs_round:
@@ -129,7 +128,6 @@ class Chain:
                 stage_id.append(i)
                 kind.append(1)
                 hmode.append(_H_NONE)
-                eta_scale.append(1.0)
                 round_slot.append(0)
                 sel_stage.append(i)
             switch_rounds.append(len(stage_id))
@@ -138,7 +136,6 @@ class Chain:
             stage_id=np.asarray(stage_id, np.int32),
             kind=np.asarray(kind, np.int32),
             hmode=np.asarray(hmode, np.int32),
-            eta_scale=np.asarray(eta_scale, np.float32),
             round_slot=np.asarray(round_slot, np.int32),
             sel_stage=np.asarray(sel_stage, np.int32),
             budgets=tuple(budgets),
@@ -146,24 +143,54 @@ class Chain:
             sel_indices=tuple(sel_indices),
         )
 
+    def eta_schedule(self, rounds: int, decay: Optional[dict] = None):
+        """Per-round η multipliers [R] — EXECUTOR OPERAND, not schedule
+        structure: the paper's "M-" decay (per stage, selection rounds at
+        1.0) is data, so sweeping ``decay_factor`` reuses one compile.
+
+        Derived from ``_schedule``'s round enumeration (stage/slot/kind), so
+        the multipliers stay aligned with the executor's rounds by
+        construction."""
+        sched = self._schedule(rounds)
+        if decay is None:
+            return jnp.ones((len(sched.stage_id),), jnp.float32)
+        d_first = decay.get("decay_first", 0.3)
+        d_factor = decay.get("decay_factor", 0.5)
+        per_stage = [np.asarray(runner_lib.decay_eta_scale(b, d_first, d_factor))
+                     for b in sched.budgets]
+        out = np.asarray([
+            1.0 if k == 1 else per_stage[s][j]
+            for s, j, k in zip(sched.stage_id, sched.round_slot, sched.kind)
+        ], np.float32)
+        return jnp.asarray(out)
+
     # -- executor ----------------------------------------------------------
 
-    def executor_body(self, problem, rounds: int, decay: Optional[dict] = None):
+    def executor_body(self, problem, rounds: int, comm: bool = False):
         """Unjitted single-scan chain executor.
 
-        Returns ``fn(x0, states0, key) -> (x_hat, history, sel_flags)`` where
-        ``states0`` is the tuple of per-stage initial states (their ``.eta``
-        fields carry any sweep stepsize scaling) and ``sel_flags`` is a [R]
-        bool vector whose entries at ``schedule.sel_indices`` record whether
-        selection kept the pre-stage anchor.
+        Returns ``fn(x0, states0, key, eta_scale) -> (x_hat, history,
+        sel_flags)`` where ``states0`` is the tuple of per-stage initial
+        states (their ``.eta`` fields carry any sweep stepsize scaling),
+        ``eta_scale`` is the [R] per-round η multiplier operand (see
+        ``eta_schedule``) and ``sel_flags`` is a [R] bool vector whose
+        entries at ``schedule.sel_indices`` record whether selection kept
+        the pre-stage anchor.
+
+        With ``comm=True`` the signature grows ``(…, masks, comm0)`` — the
+        [R, N] participation schedule and the initial ``CommState`` — and the
+        executor returns ``(x_hat, history, sel_flags, bits_up, bits_down)``.
+        One ``CommState`` is carried through the whole chain (residuals and
+        bit meters persist across stage handoffs) and injected into the
+        active stage's state each round; selection rounds are billed at the
+        Lemma H.2 cost (2 candidates down, 1 scalar per candidate up).
         """
-        decay_key = tuple(sorted(decay.items())) if decay is not None else None
-        key = ("chain-body", self._key(), id(problem), rounds, decay_key)
+        key = ("chain-body", self._key(), id(problem), rounds, comm)
         fn = runner_lib._cache_get(key, problem)
         if fn is not None:
             return fn
 
-        sched = self._schedule(rounds, decay)
+        sched = self._schedule(rounds)
         stages = tuple(self.stages)
         n = len(stages)
         f_star = problem.f_star if problem.f_star is not None else 0.0
@@ -172,7 +199,6 @@ class Chain:
         stage_id = jnp.asarray(sched.stage_id)
         kind = jnp.asarray(sched.kind)
         hmode = jnp.asarray(sched.hmode)
-        eta_scale = jnp.asarray(sched.eta_scale)
 
         def _select2(anchor, cand, k_sel):
             """Lemma H.2 pick between the anchor and a candidate; True = kept
@@ -212,13 +238,29 @@ class Chain:
             return jax.lax.switch(j, [branch(i) for i in range(n)],
                                   (states, k_round, scale))
 
-        def executor(x0, states0, key):
-            from repro.core.algorithms import base as algo_base
+        def _round_comm(j, states, comm_st, k_round, scale, mask):
+            """One stage round with the shared CommState injected into (and
+            pulled back out of) the active stage's state; every branch
+            returns the ``comm=None`` structure the carry uses."""
+            from repro.comm import config as comm_cfg
 
-            for st in states0:
-                algo_base.audit_state(st)  # protocol check, once per trace
-            runner_lib.TRACE_COUNTS[f"chain/{self.name}"] += 1
+            def branch(i):
+                def round_i(args):
+                    states, comm_st, k, scale, mask = args
+                    st = states[i]
+                    st_in = st._replace(eta=st.eta * scale,
+                                        comm=comm_st._replace(mask=mask))
+                    out = stages[i].round(problem, st_in, k)
+                    new_comm = comm_cfg.comm_state_or_error(
+                        out, stages[i].name)
+                    out = out._replace(eta=st.eta, comm=None)
+                    return states[:i] + (out,) + states[i + 1:], new_comm
+                return round_i
 
+            return jax.lax.switch(j, [branch(i) for i in range(n)],
+                                  (states, comm_st, k_round, scale, mask))
+
+        def _derive_keys(key):
             # Per-round keys mirror the seed's derivation: split(key, 2N),
             # stage i's rounds use split(keys[2i], budget_i), selections after
             # stage i use keys[2i+1]. (With decay the seed split stage keys
@@ -236,72 +278,149 @@ class Chain:
             offsets = np.concatenate([[0], np.cumsum(sched.budgets)[:-1]])
             flat_idx = jnp.asarray(
                 offsets[sched.stage_id] + sched.round_slot, jnp.int32)
-            keys_r = round_keys[flat_idx]  # [R, 2]
-            keys_s = sel_keys[jnp.asarray(sched.sel_stage)]  # [R, 2]
+            return round_keys[flat_idx], sel_keys[jnp.asarray(sched.sel_stage)]
 
-            def body(carry, xs):
-                states, anchor = carry
-                k_round, k_sel, sid, knd, hmd, scale = xs
+        def _handoff(states, anchor, sid, hmd, k_sel):
+            def do_handoff(args):
+                states, anchor = args
+                prev_out = _output(jnp.maximum(sid - 1, 0), states)
 
-                def do_handoff(args):
-                    states, anchor = args
-                    prev_out = _output(jnp.maximum(sid - 1, 0), states)
+                def from_anchor(_):
+                    return anchor, jnp.asarray(True)
 
-                    def from_anchor(_):
-                        return anchor, jnp.asarray(True)
+                def with_sel(_):
+                    return _select2(anchor, prev_out, k_sel)
 
-                    def with_sel(_):
-                        return _select2(anchor, prev_out, k_sel)
+                def take(_):
+                    return prev_out, jnp.asarray(False)
 
-                    def take(_):
-                        return prev_out, jnp.asarray(False)
+                x_init, kept = jax.lax.switch(
+                    hmd - 1, [from_anchor, with_sel, take], None)
+                states = _reinit(sid, states, x_init)
+                return states, x_init, kept
 
-                    x_init, kept = jax.lax.switch(
-                        hmd - 1, [from_anchor, with_sel, take], None)
-                    states = _reinit(sid, states, x_init)
-                    return states, x_init, kept
+            def no_handoff(args):
+                states, anchor = args
+                return states, anchor, jnp.asarray(False)
 
-                def no_handoff(args):
-                    states, anchor = args
-                    return states, anchor, jnp.asarray(False)
+            return jax.lax.cond(
+                hmd > 0, do_handoff, no_handoff, (states, anchor))
 
-                states, anchor, h_kept = jax.lax.cond(
-                    hmd > 0, do_handoff, no_handoff, (states, anchor))
+        if not comm:
 
-                def sel_round(args):
-                    states, anchor = args
-                    cand = _output(sid, states)
-                    best, kept = _select2(anchor, cand, k_sel)
-                    sub = problem.global_loss(best) - f_star
-                    return states, best, sub, kept
+            def executor(x0, states0, key, eta_scale):
+                from repro.core.algorithms import base as algo_base
 
-                def alg_round(args):
-                    states, anchor = args
-                    states = _round(sid, states, k_round, scale)
-                    sub = problem.global_loss(_output(sid, states)) - f_star
-                    return states, anchor, sub, jnp.asarray(False)
+                for st in states0:
+                    algo_base.audit_state(st)  # protocol check, once per trace
+                runner_lib.TRACE_COUNTS[f"chain/{self.name}"] += 1
+                keys_r, keys_s = _derive_keys(key)
 
-                states, anchor, sub, s_kept = jax.lax.cond(
-                    knd == 1, sel_round, alg_round, (states, anchor))
-                return (states, anchor), (sub, h_kept | s_kept)
+                def body(carry, xs):
+                    states, anchor = carry
+                    k_round, k_sel, sid, knd, hmd, scale = xs
+                    states, anchor, h_kept = _handoff(
+                        states, anchor, sid, hmd, k_sel)
 
-            (states, _), (history, kept_flags) = jax.lax.scan(
-                body, (states0, x0),
-                (keys_r, keys_s, stage_id, kind, hmode, eta_scale))
-            x_hat = stages[-1].output(states[-1])
-            return x_hat, history, kept_flags
+                    def sel_round(args):
+                        states, anchor = args
+                        cand = _output(sid, states)
+                        best, kept = _select2(anchor, cand, k_sel)
+                        sub = problem.global_loss(best) - f_star
+                        return states, best, sub, kept
+
+                    def alg_round(args):
+                        states, anchor = args
+                        states = _round(sid, states, k_round, scale)
+                        sub = problem.global_loss(_output(sid, states)) - f_star
+                        return states, anchor, sub, jnp.asarray(False)
+
+                    states, anchor, sub, s_kept = jax.lax.cond(
+                        knd == 1, sel_round, alg_round, (states, anchor))
+                    return (states, anchor), (sub, h_kept | s_kept)
+
+                (states, _), (history, kept_flags) = jax.lax.scan(
+                    body, (states0, x0),
+                    (keys_r, keys_s, stage_id, kind, hmode, eta_scale))
+                x_hat = stages[-1].output(states[-1])
+                return x_hat, history, kept_flags
+
+        else:
+
+            def executor(x0, states0, key, eta_scale, masks, comm0):
+                from repro.comm import config as comm_cfg
+                from repro.core.algorithms import base as algo_base
+
+                for st in states0:
+                    algo_base.audit_state(st)
+                runner_lib.TRACE_COUNTS[f"chain-comm/{self.name}"] += 1
+                keys_r, keys_s = _derive_keys(key)
+                d = x0.shape[0]  # comm chains are flat-params only
+                sel_up, sel_down = comm_cfg.selection_round_bits(d, sel_s)
+
+                def body(carry, xs):
+                    states, anchor, comm_st = carry
+                    k_round, k_sel, sid, knd, hmd, scale, mask = xs
+                    comm_st = comm_cfg.zero_round_bits(comm_st)
+                    # error-feedback residuals don't survive a stage
+                    # handoff: the incoming stage's uplink payloads have
+                    # different semantics (iterate deltas vs gradients), and
+                    # the residual mass may belong to a trajectory selection
+                    # just discarded
+                    comm_st = comm_st._replace(residual=jnp.where(
+                        hmd > 0, 0.0, comm_st.residual))
+                    states, anchor, h_kept = _handoff(
+                        states, anchor, sid, hmd, k_sel)
+
+                    def sel_round(args):
+                        states, anchor, comm_st = args
+                        cand = _output(sid, states)
+                        best, kept = _select2(anchor, cand, k_sel)
+                        sub = problem.global_loss(best) - f_star
+                        return states, best, comm_st, sub, kept
+
+                    def alg_round(args):
+                        states, anchor, comm_st = args
+                        states, comm_st = _round_comm(
+                            sid, states, comm_st, k_round, scale, mask)
+                        sub = problem.global_loss(_output(sid, states)) - f_star
+                        return states, anchor, comm_st, sub, jnp.asarray(False)
+
+                    states, anchor, comm_st, sub, s_kept = jax.lax.cond(
+                        knd == 1, sel_round, alg_round,
+                        (states, anchor, comm_st))
+
+                    # Lemma H.2 selections (explicit rounds AND inline
+                    # handoffs) bill their candidate broadcasts / value
+                    # uplinks on top of whatever the stage round accounted.
+                    did_sel = (knd == 1) | (hmd == _H_SELECT)
+                    comm_st = comm_st._replace(
+                        bits_up=comm_st.bits_up
+                        + jnp.where(did_sel, sel_up, 0.0),
+                        bits_down=comm_st.bits_down
+                        + jnp.where(did_sel, sel_down, 0.0))
+                    return ((states, anchor, comm_st),
+                            (sub, h_kept | s_kept,
+                             comm_st.bits_up, comm_st.bits_down))
+
+                (states, _, _), (history, kept_flags, bits_up, bits_down) = (
+                    jax.lax.scan(
+                        body, (states0, x0, comm0),
+                        (keys_r, keys_s, stage_id, kind, hmode, eta_scale,
+                         masks)))
+                x_hat = stages[-1].output(states[-1])
+                return x_hat, history, kept_flags, bits_up, bits_down
 
         return runner_lib._cache_put(key, problem, executor)
 
-    def executor(self, problem, rounds: int, decay: Optional[dict] = None):
+    def executor(self, problem, rounds: int, comm: bool = False):
         """The jitted, module-cached chain executor."""
-        decay_key = tuple(sorted(decay.items())) if decay is not None else None
-        key = ("chain-jit", self._key(), id(problem), rounds, decay_key)
+        key = ("chain-jit", self._key(), id(problem), rounds, comm)
         fn = runner_lib._cache_get(key, problem)
         if fn is not None:
             return fn
         return runner_lib._cache_put(
-            key, problem, jax.jit(self.executor_body(problem, rounds, decay)))
+            key, problem, jax.jit(self.executor_body(problem, rounds, comm)))
 
     def init_states(self, problem, x0, eta_scale=None):
         """Per-stage initial states; ``eta_scale`` multiplies every stage's
@@ -312,19 +431,45 @@ class Chain:
         return states
 
     def run(self, problem, x0, rounds: int, key, *, decay: Optional[dict] = None,
-            eta_scale=None):
+            eta_scale=None, comm=None, comm_masks=None):
         """Execute the chain for a total budget of ``rounds`` communication
-        rounds — a single compiled call regardless of stage count."""
-        sched = self._schedule(rounds, decay)
-        fn = self.executor(problem, rounds, decay)
+        rounds — a single compiled call regardless of stage count, decay
+        schedule, or comm config (decay multipliers, participation masks and
+        compressor knobs are all executor operands).
+
+        ``comm`` (a ``repro.comm.CommConfig``) enables compressed uplinks +
+        partial participation + bits accounting; ``comm_masks`` overrides the
+        config-derived [R, N] schedule.
+        """
+        sched = self._schedule(rounds)
+        eta_arr = self.eta_schedule(rounds, decay)
         states0 = self.init_states(problem, x0, eta_scale)
-        x_hat, history, kept_flags = fn(x0, states0, key)
+        bits_up = bits_down = None
+        if comm is None:
+            fn = self.executor(problem, rounds)
+            x_hat, history, kept_flags = fn(x0, states0, key, eta_arr)
+        else:
+            from repro.comm import config as comm_cfg
+
+            comm_cfg.require_flat(x0)
+            for stage, st in zip(self.stages, states0):
+                comm_cfg.require_comm_leaf(st, stage.name)
+            n_clients = problem.num_clients
+            masks = (comm.round_masks(len(sched.stage_id), n_clients)
+                     if comm_masks is None
+                     else jnp.asarray(comm_masks, jnp.float32))
+            comm0 = comm.init_state(n_clients, x0.shape[0])
+            fn = self.executor(problem, rounds, comm=True)
+            x_hat, history, kept_flags, bits_up, bits_down = fn(
+                x0, states0, key, eta_arr, masks, comm0)
         kept = np.asarray(kept_flags)
         return ChainResult(
             x_hat=x_hat,
             history=history,
             switch_rounds=list(sched.switch_rounds[:-1]),
             selected_initial=[bool(kept[i]) for i in sched.sel_indices],
+            bits_up=bits_up,
+            bits_down=bits_down,
         )
 
 

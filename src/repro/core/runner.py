@@ -47,6 +47,8 @@ class RunResult:
     x_hat: object  # algorithm's returned iterate
     history: jnp.ndarray  # [R] F(x̂_r) − F* after each round (of x̂, not x)
     grad_norms: Optional[jnp.ndarray] = None
+    bits_up: Optional[jnp.ndarray] = None  # [R] per-round uplink bits (comm)
+    bits_down: Optional[jnp.ndarray] = None  # [R] per-round downlink bits
 
 
 def _env_key():
@@ -125,16 +127,88 @@ def executor(algo, problem, eval_output: bool = True):
     return _cache_put(key, problem, jax.jit(executor_body(algo, problem, eval_output)))
 
 
+def comm_executor_body(algo, problem, eval_output: bool = True):
+    """The comm-enabled single-compile executor.
+
+    Returns ``fn(state0, keys, eta_scale, masks) -> (state, (history,
+    bits_up, bits_down))``. ``state0`` must carry a ``CommState`` in its
+    ``comm`` leaf; ``masks`` is the [R, N] participation schedule — pure scan
+    data, like the keys and η multipliers, so comm config (participation
+    fraction, compressor, bit-width) never re-traces this executor.
+    """
+    key = ("comm-body", algo, id(problem), eval_output)
+    fn = _cache_get(key, problem)
+    if fn is not None:
+        return fn
+
+    f_star = problem.f_star if problem.f_star is not None else 0.0
+
+    def executor(state0, keys, eta_scale, masks):
+        from repro.comm import config as comm_cfg
+        from repro.core.algorithms import base as algo_base
+
+        algo_base.audit_state(state0)
+        comm_cfg.comm_state_or_error(state0, algo.name)
+        TRACE_COUNTS[f"runner-comm/{algo.name}"] += 1
+        base_eta = state0.eta
+
+        def one_round(state, xs):
+            k, scale, mask = xs
+            comm_in = comm_cfg.zero_round_bits(
+                state.comm._replace(mask=mask))
+            st = algo.round(
+                problem, state._replace(eta=base_eta * scale, comm=comm_in), k)
+            comm = comm_cfg.comm_state_or_error(st, algo.name)
+            st = st._replace(eta=base_eta)
+            x_eval = algo.output(st) if eval_output else st.x
+            sub = problem.global_loss(x_eval) - f_star
+            return st, (sub, comm.bits_up, comm.bits_down)
+
+        return jax.lax.scan(one_round, state0, (keys, eta_scale, masks))
+
+    return _cache_put(key, problem, executor)
+
+
+def comm_executor(algo, problem, eval_output: bool = True):
+    """The jitted, module-cached comm executor."""
+    key = ("comm-jit", algo, id(problem), eval_output)
+    fn = _cache_get(key, problem)
+    if fn is not None:
+        return fn
+    return _cache_put(
+        key, problem, jax.jit(comm_executor_body(algo, problem, eval_output)))
+
+
 def run(algo, problem, x0, rounds: int, key, *, eval_output: bool = True,
-        jit: bool = True, eta=None):
+        jit: bool = True, eta=None, comm=None, comm_masks=None):
     """Run ``rounds`` communication rounds; record suboptimality each round.
 
     ``eta`` overrides the state's base stepsize (used by the sweep engine's
     per-run comparator); ``None`` keeps the algorithm's own initialization.
+    ``comm`` (a ``repro.comm.CommConfig``) enables the communication layer:
+    compressed uplinks, the per-round participation schedule (``comm_masks``
+    overrides the config-derived [R, N] masks) and exact bits accounting in
+    the result's ``bits_up``/``bits_down``.
     """
     state0 = algo.init_with_eta(problem, x0, eta)
     keys = jax.random.split(key, rounds)
     eta_scale = jnp.ones((rounds,), jnp.float32)
+    if comm is not None:
+        from repro.comm import config as comm_cfg
+
+        comm_cfg.require_flat(x0)
+        comm_cfg.require_comm_leaf(state0, algo.name)
+        n = problem.num_clients
+        masks = (comm.round_masks(rounds, n) if comm_masks is None
+                 else jnp.asarray(comm_masks, jnp.float32))
+        state0 = state0._replace(comm=comm.init_state(n, x0.shape[0]))
+        fn = (comm_executor if jit else comm_executor_body)(
+            algo, problem, eval_output)
+        state, (history, bits_up, bits_down) = fn(
+            state0, keys, eta_scale, masks)
+        return RunResult(state=state, x_hat=algo.output(state),
+                         history=history, bits_up=bits_up,
+                         bits_down=bits_down)
     fn = (executor if jit else executor_body)(algo, problem, eval_output)
     state, history = fn(state0, keys, eta_scale)
     return RunResult(state=state, x_hat=algo.output(state), history=history)

@@ -22,6 +22,20 @@ Stepsize semantics
 Because η lives in algorithm state (the uniform state protocol of
 ``algorithms.base``), batching stepsizes is just a batched ``state.eta`` leaf
 — no algorithm code is sweep-aware.
+
+Communication sweeps
+--------------------
+``run_sweep(..., comm=CommConfig(...))`` threads the communication subsystem
+(``repro.comm``) through every grid cell: uplinks are compressed, per-round
+participation masks (one independent [R, N] schedule per seed) ride the scan
+as data, and ``SweepResult.bits_up``/``bits_down`` record the exact per-round
+wire cost — the suboptimality-vs-bits frontier. All comm knobs are operands:
+switching compressor, bit-width or participation fraction reuses the same
+compiled grid (``runner.TRACE_COUNTS`` stays flat).
+
+Decay sweeps: stepsize-decay multipliers are an executor *operand* (PR-2),
+so ``run_decay_sweep`` batches a ``decay_factor`` grid through one compile
+of the same chain executor ``run_sweep`` uses.
 """
 from __future__ import annotations
 
@@ -45,6 +59,19 @@ class SweepResult:
     seeds: tuple
     etas: tuple
     selected_initial: Optional[jnp.ndarray] = None  # [S, E, n_sel] (chains)
+    bits_up: Optional[jnp.ndarray] = None  # [S, E, R] per-round uplink bits
+    bits_down: Optional[jnp.ndarray] = None  # [S, E, R] downlink bits
+
+    def cumulative_bits(self):
+        """[S, E, R] total (up + down) bits through each round, float64 —
+        the x-axis of a cost-vs-accuracy frontier."""
+        import numpy as np
+
+        if self.bits_up is None:
+            raise ValueError("not a comm sweep: no bits were accounted")
+        per_round = (np.asarray(self.bits_up, np.float64)
+                     + np.asarray(self.bits_down, np.float64))
+        return np.cumsum(per_round, axis=-1)
 
 
 def _sweep_fn_algo(algo, problem, rounds: int, eval_output: bool, eta_mode: str):
@@ -73,24 +100,98 @@ def _sweep_fn_algo(algo, problem, rounds: int, eval_output: bool, eta_mode: str)
     return runner_lib._cache_put(key, problem, jax.jit(grid))
 
 
-def _sweep_fn_chain(chain, problem, rounds: int, decay):
-    decay_key = tuple(sorted(decay.items())) if decay is not None else None
-    key = ("sweep-chain", chain._key(), id(problem), rounds, decay_key)
+def _sweep_fn_algo_comm(algo, problem, rounds: int, eval_output: bool,
+                        eta_mode: str):
+    key = ("sweep-algo-comm", algo, id(problem), rounds, eval_output, eta_mode)
     fn = runner_lib._cache_get(key, problem)
     if fn is not None:
         return fn
 
-    body = chain.executor_body(problem, rounds, decay)
-    sched = chain._schedule(rounds, decay)
+    body = runner_lib.comm_executor_body(algo, problem, eval_output)
+    f_star = problem.f_star if problem.f_star is not None else 0.0
+    eta_scale = jnp.ones((rounds,), jnp.float32)
+
+    def cell(x0, key, eta, masks, comm0):
+        runner_lib.TRACE_COUNTS[f"sweep-comm/{algo.name}"] += 1
+        state0 = algo.init(problem, x0)
+        new_eta = (state0.eta * eta if eta_mode == "scale"
+                   else jnp.asarray(eta, jnp.result_type(state0.eta)))
+        state0 = state0._replace(eta=new_eta, comm=comm0)
+        keys = jax.random.split(key, rounds)
+        state, (history, bits_up, bits_down) = body(
+            state0, keys, eta_scale, masks)
+        x_hat = algo.output(state)
+        return (x_hat, history, problem.global_loss(x_hat) - f_star,
+                bits_up, bits_down)
+
+    # masks batch with the seed axis (one independent schedule per seed)
+    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, 0, None, None)),
+                    in_axes=(None, 0, None, 0, None))
+    return runner_lib._cache_put(key, problem, jax.jit(grid))
+
+
+def _sweep_fn_chain(chain, problem, rounds: int):
+    key = ("sweep-chain", chain._key(), id(problem), rounds)
+    fn = runner_lib._cache_get(key, problem)
+    if fn is not None:
+        return fn
+
+    body = chain.executor_body(problem, rounds)
+    sched = chain._schedule(rounds)
     sel_idx = jnp.asarray(sched.sel_indices, jnp.int32)
     f_star = problem.f_star if problem.f_star is not None else 0.0
 
-    def cell(x0, key, mult):
+    def cell(x0, key, mult, eta_scale):
         runner_lib.TRACE_COUNTS[f"sweep/{chain.name}"] += 1
         states0 = chain.init_states(problem, x0, eta_scale=mult)
-        x_hat, history, kept = body(x0, states0, key)
+        x_hat, history, kept = body(x0, states0, key, eta_scale)
         return x_hat, history, problem.global_loss(x_hat) - f_star, kept[sel_idx]
 
+    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, 0, None)),
+                    in_axes=(None, 0, None, None))
+    return runner_lib._cache_put(key, problem, jax.jit(grid))
+
+
+def _sweep_fn_chain_comm(chain, problem, rounds: int):
+    key = ("sweep-chain-comm", chain._key(), id(problem), rounds)
+    fn = runner_lib._cache_get(key, problem)
+    if fn is not None:
+        return fn
+
+    body = chain.executor_body(problem, rounds, comm=True)
+    sched = chain._schedule(rounds)
+    sel_idx = jnp.asarray(sched.sel_indices, jnp.int32)
+    f_star = problem.f_star if problem.f_star is not None else 0.0
+
+    def cell(x0, key, mult, eta_scale, masks, comm0):
+        runner_lib.TRACE_COUNTS[f"sweep-comm/{chain.name}"] += 1
+        states0 = chain.init_states(problem, x0, eta_scale=mult)
+        x_hat, history, kept, bits_up, bits_down = body(
+            x0, states0, key, eta_scale, masks, comm0)
+        return (x_hat, history, problem.global_loss(x_hat) - f_star,
+                kept[sel_idx], bits_up, bits_down)
+
+    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, 0, None, None, None)),
+                    in_axes=(None, 0, None, None, 0, None))
+    return runner_lib._cache_put(key, problem, jax.jit(grid))
+
+
+def _sweep_fn_chain_decay(chain, problem, rounds: int):
+    key = ("sweep-chain-decay", chain._key(), id(problem), rounds)
+    fn = runner_lib._cache_get(key, problem)
+    if fn is not None:
+        return fn
+
+    body = chain.executor_body(problem, rounds)  # SAME executor as run_sweep
+    f_star = problem.f_star if problem.f_star is not None else 0.0
+
+    def cell(x0, key, eta_scale):
+        runner_lib.TRACE_COUNTS[f"sweep-decay/{chain.name}"] += 1
+        states0 = chain.init_states(problem, x0)
+        x_hat, history, _ = body(x0, states0, key, eta_scale)
+        return x_hat, history, problem.global_loss(x_hat) - f_star
+
+    # axes: seeds × decay grids (eta_scale rows)
     grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, 0)),
                     in_axes=(None, 0, None))
     return runner_lib._cache_put(key, problem, jax.jit(grid))
@@ -99,7 +200,7 @@ def _sweep_fn_chain(chain, problem, rounds: int, decay):
 def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
               seeds: Sequence[int], etas: Sequence[float],
               eta_mode: Optional[str] = None, eval_output: bool = True,
-              decay: Optional[dict] = None) -> SweepResult:
+              decay: Optional[dict] = None, comm=None) -> SweepResult:
     """Run every (seed, η) grid cell in one compiled, vmapped call.
 
     ``seeds`` are PRNG seeds (cell s uses ``jax.random.PRNGKey(seeds[s])``,
@@ -108,6 +209,10 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
     ``eta_mode`` defaults to "absolute" for plain algorithms; chains only
     accept "scale" (their grid values are per-stage multipliers), so passing
     "absolute" with a chain is an error rather than a silent reinterpretation.
+    ``comm`` (a ``repro.comm.CommConfig``) enables compressed uplinks /
+    partial participation / bits accounting; seed s uses the config's mask
+    schedule derived with ``fold=s`` (``runner.run(..., comm_masks=...)``
+    reproduces any single cell).
     """
     is_chain = isinstance(algo_or_chain, chain_lib.Chain)
     if eta_mode is None:
@@ -125,18 +230,77 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
     keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
     etas_arr = jnp.asarray(etas, jnp.float32)
 
+    if comm is not None:
+        from repro.comm import config as comm_cfg
+
+        comm_cfg.require_flat(x0)
+        n_clients = problem.num_clients
+        comm0 = comm.init_state(n_clients, x0.shape[0])
+
     if is_chain:
-        fn = _sweep_fn_chain(algo_or_chain, problem, rounds, decay)
-        x_hat, history, final, kept = fn(x0, keys, etas_arr)
+        chain = algo_or_chain
+        eta_sched = chain.eta_schedule(rounds, decay)
+        if comm is not None:
+            n_sched = len(chain._schedule(rounds).stage_id)
+            masks = jnp.stack([
+                comm.round_masks(n_sched, n_clients, fold=s)
+                for s in range(len(seeds))])
+            fn = _sweep_fn_chain_comm(chain, problem, rounds)
+            x_hat, history, final, kept, bits_up, bits_down = fn(
+                x0, keys, etas_arr, eta_sched, masks, comm0)
+            return SweepResult(history=history, final_sub=final, x_hat=x_hat,
+                               seeds=seeds, etas=etas, selected_initial=kept,
+                               bits_up=bits_up, bits_down=bits_down)
+        fn = _sweep_fn_chain(chain, problem, rounds)
+        x_hat, history, final, kept = fn(x0, keys, etas_arr, eta_sched)
         return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                            seeds=seeds, etas=etas, selected_initial=kept)
 
     if decay is not None:
         raise NotImplementedError("decay sweeps: wrap the algorithm in a Chain")
+    if comm is not None:
+        masks = jnp.stack([
+            comm.round_masks(rounds, n_clients, fold=s)
+            for s in range(len(seeds))])
+        fn = _sweep_fn_algo_comm(algo_or_chain, problem, rounds, eval_output,
+                                 eta_mode)
+        x_hat, history, final, bits_up, bits_down = fn(
+            x0, keys, etas_arr, masks, comm0)
+        return SweepResult(history=history, final_sub=final, x_hat=x_hat,
+                           seeds=seeds, etas=etas,
+                           bits_up=bits_up, bits_down=bits_down)
     fn = _sweep_fn_algo(algo_or_chain, problem, rounds, eval_output, eta_mode)
     x_hat, history, final = fn(x0, keys, etas_arr)
     return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                        seeds=seeds, etas=etas)
+
+
+def run_decay_sweep(chain, problem, x0, rounds: int, *,
+                    seeds: Sequence[int], decay_factors: Sequence[float],
+                    decay_first: float = 0.3) -> SweepResult:
+    """Sweep the "M-" ``decay_factor`` grid in one compiled, vmapped call.
+
+    Decay multipliers are executor operands ([R] η-scale rows, one per
+    factor), so the whole grid — and any later ``run_sweep``/``Chain.run`` on
+    the same chain — shares ONE compiled executor. Returns a ``SweepResult``
+    whose ``etas`` axis carries the decay factors.
+    """
+    if not isinstance(chain, chain_lib.Chain):
+        raise TypeError("run_decay_sweep takes a Chain (wrap plain "
+                        "algorithms in a single-stage Chain)")
+    seeds = tuple(int(s) for s in seeds)
+    factors = tuple(float(f) for f in decay_factors)
+    if not seeds or not factors:
+        raise ValueError("run_decay_sweep needs ≥1 seed and ≥1 decay factor")
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+    eta_rows = jnp.stack([
+        chain.eta_schedule(rounds, {"decay_first": decay_first,
+                                    "decay_factor": f})
+        for f in factors])
+    fn = _sweep_fn_chain_decay(chain, problem, rounds)
+    x_hat, history, final = fn(x0, keys, eta_rows)
+    return SweepResult(history=history, final_sub=final, x_hat=x_hat,
+                       seeds=seeds, etas=factors)
 
 
 def best_cell(result: SweepResult):

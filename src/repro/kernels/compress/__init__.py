@@ -1,0 +1,27 @@
+"""Pallas kernels for the communication subsystem's hot path.
+
+Two fused ops back ``repro.comm``:
+
+* ``qsgd_dequantize`` — QSGD stochastic quantize→dequantize of per-client
+  uplink vectors (the simulated wire format: the server-visible value after
+  one quantized round trip).
+* ``weighted_mean_over_clients`` — mean over the client axis with per-client
+  weights, the masked-aggregate primitive behind partial participation.
+
+Dispatch mirrors ``kernels.aggregate``: jnp reference on CPU, interpret-mode
+Pallas under ``REPRO_FORCE_PALLAS=1``, real kernels on TPU.
+"""
+from repro.kernels.compress import ops
+from repro.kernels.compress.compress import qsgd_dequantize, weighted_mean_over_clients
+from repro.kernels.compress.ref import (
+    qsgd_dequantize_ref,
+    weighted_mean_over_clients_ref,
+)
+
+__all__ = [
+    "ops",
+    "qsgd_dequantize",
+    "weighted_mean_over_clients",
+    "qsgd_dequantize_ref",
+    "weighted_mean_over_clients_ref",
+]

@@ -1,0 +1,90 @@
+"""Pallas TPU kernels for uplink compression and masked aggregation.
+
+``qsgd_dequantize`` is elementwise over [S, D] with a per-row norm and a
+scalar level count; one pass streams [S, BLOCK_D] tiles through VMEM
+(quantize and dequantize fused, so the int lattice never hits HBM).
+``weighted_mean_over_clients`` is the masked-aggregate primitive: the whole
+[S] weight vector is staged per grid step next to each [S, BLOCK_D] tile
+(same layout as ``aggregate.chain_aggregate``'s weights).
+
+Both take runtime operands only — levels and weights are data, so comm
+config changes never retrace a compiled caller.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 2048
+
+
+def _qsgd_kernel(lv_ref, n_ref, v_ref, u_ref, o_ref):
+    lv = jnp.maximum(lv_ref[0], 1.0)
+    safe = jnp.maximum(n_ref[...].astype(jnp.float32), 1e-30)[:, None]
+    v = v_ref[...].astype(jnp.float32)  # [S, BD]
+    scaled = jnp.abs(v) / safe * lv
+    lo = jnp.floor(scaled)
+    q = lo + jnp.where(u_ref[...].astype(jnp.float32) < scaled - lo, 1.0, 0.0)
+    o_ref[...] = (jnp.sign(v) * safe * (q / lv)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_d"))
+def qsgd_dequantize(v, u, norms, levels, *, interpret: bool = False,
+                    block_d: int = BLOCK_D):
+    """v, u: [S, D]; norms: [S]; levels: scalar array. Returns [S, D]."""
+    s, d = v.shape
+    bd = min(block_d, d)
+    pad = (-d) % bd
+    if pad:  # padded zeros quantize to zero and are sliced off below
+        v = jnp.pad(v, ((0, 0), (0, pad)))
+        u = jnp.pad(u, ((0, 0), (0, pad)))
+    dp = v.shape[1]
+    lv = jnp.reshape(levels, (1,)).astype(jnp.float32)
+
+    out = pl.pallas_call(
+        _qsgd_kernel,
+        grid=(dp // bd,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda j: (0,)),  # levels: whole scalar
+            pl.BlockSpec((s,), lambda j: (0,)),  # norms: whole vector
+            pl.BlockSpec((s, bd), lambda j: (0, j)),  # v tile
+            pl.BlockSpec((s, bd), lambda j: (0, j)),  # u tile
+        ],
+        out_specs=pl.BlockSpec((s, bd), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((s, dp), v.dtype),
+        interpret=interpret,
+    )(lv, norms, v, u)
+    return out[:, :d] if pad else out
+
+
+def _wmean_kernel(w_ref, t_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)
+    t = t_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.mean(w[:, None] * t, axis=0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_d"))
+def weighted_mean_over_clients(t, w, *, interpret: bool = False,
+                               block_d: int = BLOCK_D):
+    """meanᵢ wᵢ·tᵢ over the leading axis of t: [S, D] × [S] → [D]."""
+    s, d = t.shape
+    bd = min(block_d, d)
+    pad = (-d) % bd
+    if pad:
+        t = jnp.pad(t, ((0, 0), (0, pad)))
+    dp = t.shape[1]
+    out = pl.pallas_call(
+        _wmean_kernel,
+        grid=(dp // bd,),
+        in_specs=[
+            pl.BlockSpec((s,), lambda j: (0,)),  # weights: whole vector
+            pl.BlockSpec((s, bd), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), t.dtype),
+        interpret=interpret,
+    )(w, t)
+    return out[:d] if pad else out

@@ -1,0 +1,34 @@
+"""Backend-dispatching wrappers for the compress kernels.
+
+TPU: Pallas kernels. CPU: interpret-mode Pallas when ``force_pallas`` or
+``REPRO_FORCE_PALLAS=1``, else the jnp reference — the same contract as
+``kernels.aggregate.ops`` (and the same env key the executor cache uses,
+so a cached executor traced under one dispatch mode is never served under
+another).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.aggregate.ops import _force_pallas_env, _on_tpu
+from repro.kernels.compress import ref
+from repro.kernels.compress.compress import qsgd_dequantize as _qsgd_kernel
+from repro.kernels.compress.compress import (
+    weighted_mean_over_clients as _wmean_kernel,
+)
+
+
+def qsgd_dequantize(v, u, norms, levels, *, force_pallas: bool = False):
+    if _on_tpu():
+        return _qsgd_kernel(v, u, norms, levels)
+    if force_pallas or _force_pallas_env():
+        return _qsgd_kernel(v, u, norms, levels, interpret=True)
+    return ref.qsgd_dequantize_ref(v, u, norms, levels)
+
+
+def weighted_mean_over_clients(t, w, *, force_pallas: bool = False):
+    if _on_tpu():
+        return _wmean_kernel(t, w)
+    if force_pallas or _force_pallas_env():
+        return _wmean_kernel(t, w, interpret=True)
+    return ref.weighted_mean_over_clients_ref(t, w)

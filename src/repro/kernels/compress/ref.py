@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the compress kernels.
+
+QSGD (Alistarh et al. 2017) with L quantization levels per half-range:
+
+    q(v)_j = sign(v_j) · ||v||₂ · ξ_j / L,
+    ξ_j = ⌊|v_j|/||v||₂ · L⌋ + Bernoulli(frac)   (stochastic rounding)
+
+so E[q(v)] = v. The kernel computes the quantize→dequantize round trip (what
+the server reconstructs); the Bernoulli draw is ``u < frac`` on caller-supplied
+uniforms so Pallas and reference paths share the randomness bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qsgd_dequantize_ref(v, u, norms, levels):
+    """v, u: [S, D]; norms: [S] (ℓ₂ of each row); levels: scalar L ≥ 1."""
+    vf = v.astype(jnp.float32)
+    lv = jnp.maximum(levels.astype(jnp.float32), 1.0)
+    safe = jnp.maximum(norms.astype(jnp.float32), 1e-30)[:, None]
+    scaled = jnp.abs(vf) / safe * lv
+    lo = jnp.floor(scaled)
+    q = lo + jnp.where(u.astype(jnp.float32) < scaled - lo, 1.0, 0.0)
+    return (jnp.sign(vf) * safe * (q / lv)).astype(v.dtype)
+
+
+def weighted_mean_over_clients_ref(t, w):
+    """meanᵢ wᵢ·tᵢ over the leading client axis (weights NOT renormalized —
+    callers fold the Σw normalization into w)."""
+    return jnp.mean(w.astype(jnp.float32)[:, None] * t.astype(jnp.float32),
+                    axis=0).astype(t.dtype)

@@ -1,0 +1,329 @@
+"""Communication subsystem: bit-exactness, bits accounting, compile budget.
+
+The three load-bearing guarantees of ``repro.comm``:
+
+(a) the identity compressor + full participation reproduces the plain
+    (PR-1) executors' trajectories BIT-exactly — comm is a superset, not a
+    fork, of the uncompressed path;
+(b) comm config (participation fraction, compressor choice, bit-width,
+    sparsity) is operand/schedule data: switching it never adds a compile
+    (``runner.TRACE_COUNTS`` stays flat);
+(c) per-round bit counts equal their closed forms (e.g. rand-k uplink =
+    S·k·(32+⌈log₂d⌉)).
+
+Plus the PR-2 satellites: decay grids reusing one executor and logreg ζ
+estimation.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig
+from repro.core import algorithms as A, chain, runner, sweep
+from repro.data import problems
+
+N_CLIENTS, DIM = 8, 16
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return problems.quadratic_problem(
+        jax.random.PRNGKey(0), num_clients=N_CLIENTS, dim=DIM, mu=0.1,
+        beta=1.0, zeta=1.0, sigma=0.2, sigma_f=0.05)
+
+
+@pytest.fixture(scope="module")
+def x0(quad):
+    return quad.init_params(jax.random.PRNGKey(0))
+
+
+def _algos(mu):
+    return {
+        "sgd": A.SGD(eta=0.4, k=4, mu_avg=mu),
+        "fedavg": A.FedAvg(eta=0.3, local_steps=3, inner_batch=2),
+        "saga": A.SAGA(eta=0.4, k=4, mu_avg=mu),
+        "saga2": A.SAGA(eta=0.4, k=4, mu_avg=mu, option="II", name="saga2"),
+        "scaffold": A.Scaffold(eta=0.3),
+    }
+
+
+# ------------------------- bit-exactness (a) --------------------------------
+
+@pytest.mark.parametrize("name", ["sgd", "fedavg", "saga", "saga2", "scaffold"])
+def test_identity_full_participation_bitexact(quad, x0, name):
+    algo = _algos(quad.mu)[name]
+    plain = runner.run(algo, quad, x0, 12, jax.random.PRNGKey(3))
+    comm = runner.run(algo, quad, x0, 12, jax.random.PRNGKey(3),
+                      comm=CommConfig())
+    assert np.array_equal(np.asarray(plain.history), np.asarray(comm.history))
+    assert np.array_equal(np.asarray(plain.x_hat), np.asarray(comm.x_hat))
+
+
+def test_identity_bitexact_chain_and_sweep(quad, x0):
+    ch = chain.fedchain(
+        A.FedAvg(eta=0.3, local_steps=3, inner_batch=2),
+        A.SGD(eta=0.3, k=4, mu_avg=quad.mu), selection_k=4,
+        name="comm-eq-chain")
+    plain = sweep.run_sweep(ch, quad, x0, 16, seeds=(0, 1), etas=(0.5, 1.0))
+    comm = sweep.run_sweep(ch, quad, x0, 16, seeds=(0, 1), etas=(0.5, 1.0),
+                           comm=CommConfig())
+    assert np.array_equal(np.asarray(plain.history), np.asarray(comm.history))
+    assert np.array_equal(np.asarray(plain.selected_initial),
+                          np.asarray(comm.selected_initial))
+    assert comm.bits_up.shape == (2, 2, 16)
+
+
+# ------------------------- compile budget (b) -------------------------------
+
+def test_comm_config_is_not_a_trace_trigger(quad, x0):
+    algo = A.SGD(eta=0.4, k=4, mu_avg=quad.mu, name="cc-comm-sgd")
+    sweep.run_sweep(algo, quad, x0, 8, seeds=(0, 1), etas=(0.3, 0.5),
+                    comm=CommConfig())
+    before = dict(runner.TRACE_COUNTS)
+    assert before["sweep-comm/cc-comm-sgd"] == 1
+    # participation fraction, compressor choice, bit-width, sparsity: all
+    # operand/schedule data — NONE may add a compile
+    for cfg in [
+        CommConfig(participation=0.5),
+        CommConfig(compressor="qsgd", qsgd_bits=4),
+        CommConfig(compressor="qsgd", qsgd_bits=8, participation=0.25),
+        CommConfig(compressor="topk", spars_k=2),
+        CommConfig(compressor="randk", spars_k=6, participation=0.5),
+    ]:
+        sweep.run_sweep(algo, quad, x0, 8, seeds=(0, 1), etas=(0.3, 0.5),
+                        comm=cfg)
+    assert dict(runner.TRACE_COUNTS) == before
+
+
+def test_comm_runner_single_compile(quad, x0):
+    algo = A.SGD(eta=0.4, k=4, mu_avg=quad.mu, name="cc-comm-run")
+    runner.run(algo, quad, x0, 6, jax.random.PRNGKey(0), comm=CommConfig())
+    count = runner.TRACE_COUNTS["runner-comm/cc-comm-run"]
+    for s in range(1, 3):
+        runner.run(algo, quad, x0, 6, jax.random.PRNGKey(s),
+                   comm=CommConfig(compressor="qsgd", participation=0.5))
+    assert runner.TRACE_COUNTS["runner-comm/cc-comm-run"] == count
+
+
+# ------------------------- bits accounting (c) ------------------------------
+
+def test_bits_closed_forms(quad, x0):
+    algo = A.SGD(eta=0.4, k=4, mu_avg=quad.mu)
+    idx_bits = math.ceil(math.log2(DIM))
+    cases = [
+        (CommConfig(), N_CLIENTS * 32 * DIM),
+        (CommConfig(compressor="qsgd", qsgd_bits=4),
+         N_CLIENTS * (32 + DIM * 5)),
+        (CommConfig(compressor="randk", spars_k=4, participation=0.5),
+         (N_CLIENTS // 2) * 4 * (32 + idx_bits)),
+        (CommConfig(compressor="topk", spars_k=2, participation=0.25),
+         (N_CLIENTS // 4) * 2 * (32 + idx_bits)),
+    ]
+    for cfg, expect_up in cases:
+        res = runner.run(algo, quad, x0, 5, jax.random.PRNGKey(0), comm=cfg)
+        s_r = cfg.clients_per_round(N_CLIENTS)
+        np.testing.assert_array_equal(
+            np.asarray(res.bits_up), np.full(5, float(expect_up)),
+            err_msg=cfg.name)
+        np.testing.assert_array_equal(
+            np.asarray(res.bits_down), np.full(5, float(s_r * 32 * DIM)),
+            err_msg=cfg.name)
+
+
+def test_scaffold_bills_two_vectors_each_way(quad, x0):
+    res = runner.run(A.Scaffold(eta=0.3), quad, x0, 4, jax.random.PRNGKey(0),
+                     comm=CommConfig())
+    np.testing.assert_array_equal(
+        np.asarray(res.bits_up), np.full(4, float(2 * N_CLIENTS * 32 * DIM)))
+    np.testing.assert_array_equal(
+        np.asarray(res.bits_down), np.full(4, float(2 * N_CLIENTS * 32 * DIM)))
+
+
+def test_chain_selection_round_bits(quad, x0):
+    ch = chain.fedchain(
+        A.FedAvg(eta=0.3, local_steps=2, inner_batch=2),
+        A.SGD(eta=0.3, k=4, mu_avg=quad.mu), selection_k=4,
+        name="bits-chain")
+    res = ch.run(quad, x0, 12, jax.random.PRNGKey(0), comm=CommConfig())
+    bits_up = np.asarray(res.bits_up)
+    sel = res.switch_rounds[0] - 1  # the costed selection round
+    # selection: both candidates broadcast, one scalar per candidate back
+    assert bits_up[sel] == 2 * 32 * N_CLIENTS
+    assert np.asarray(res.bits_down)[sel] == 2 * 32 * DIM * N_CLIENTS
+    # algorithm rounds bill the standard uplink on top of nothing else
+    assert bits_up[0] == N_CLIENTS * 32 * DIM
+
+
+def test_sweep_reports_bits_frontier(quad, x0):
+    cfg = CommConfig(compressor="qsgd", qsgd_bits=4, participation=0.5)
+    res = sweep.run_sweep(A.SGD(eta=0.4, k=4, mu_avg=quad.mu), quad, x0, 10,
+                          seeds=(0, 1), etas=(0.4,), comm=cfg)
+    assert res.bits_up.shape == (2, 1, 10)
+    cum = res.cumulative_bits()
+    assert cum.shape == (2, 1, 10)
+    assert (np.diff(cum, axis=-1) > 0).all()
+    # per-cell reproducibility: the sweep's per-seed masks are fold=s
+    rr = runner.run(A.SGD(eta=0.4, k=4, mu_avg=quad.mu), quad, x0, 10,
+                    jax.random.PRNGKey(1), eta=0.4, comm=cfg,
+                    comm_masks=cfg.round_masks(10, N_CLIENTS, fold=1))
+    np.testing.assert_array_equal(np.asarray(res.bits_up[1, 0]),
+                                  np.asarray(rr.bits_up))
+    np.testing.assert_allclose(np.asarray(res.history[1, 0]),
+                               np.asarray(rr.history), rtol=2e-4, atol=1e-6)
+
+
+# ------------------------- participation schedule ---------------------------
+
+def test_round_masks_schedule(quad):
+    cfg = CommConfig(participation=0.5, mask_seed=7)
+    masks = cfg.round_masks(20, N_CLIENTS)
+    assert masks.shape == (20, N_CLIENTS)
+    np.testing.assert_array_equal(np.asarray(masks.sum(axis=1)),
+                                  np.full(20, 4.0))
+    # deterministic per fold, independent across folds
+    again = cfg.round_masks(20, N_CLIENTS)
+    np.testing.assert_array_equal(np.asarray(masks), np.asarray(again))
+    other = cfg.round_masks(20, N_CLIENTS, fold=1)
+    assert not np.array_equal(np.asarray(masks), np.asarray(other))
+    full = CommConfig().round_masks(3, N_CLIENTS)
+    np.testing.assert_array_equal(np.asarray(full), np.ones((3, N_CLIENTS)))
+
+
+def test_partial_participation_converges(quad, x0):
+    algo = A.SGD(eta=0.4, k=4, mu_avg=quad.mu)
+    res = runner.run(algo, quad, x0, 30, jax.random.PRNGKey(0),
+                     comm=CommConfig(participation=0.5))
+    h = np.asarray(res.history)
+    assert np.isfinite(h).all()
+    assert h[-1] < h[0]
+
+
+# ------------------------- guard rails --------------------------------------
+
+def test_comm_rejects_pytree_params(quad):
+    with pytest.raises(NotImplementedError, match="flat"):
+        runner.run(A.SGD(eta=0.1), quad, {"w": jnp.zeros((4, 4))}, 3,
+                   jax.random.PRNGKey(0), comm=CommConfig())
+
+
+def test_comm_unaware_algorithm_raises(quad, x0):
+    # FedProx HAS the comm field (shared FedAvgState) but drops it in round()
+    with pytest.raises(TypeError, match="not comm-aware"):
+        runner.run(A.FedProx(eta=0.3), quad, x0, 3, jax.random.PRNGKey(0),
+                   comm=CommConfig())
+    # ACSA's state has no comm field at all — same friendly error, not a
+    # cryptic NamedTuple._replace crash
+    with pytest.raises(TypeError, match="not comm-aware"):
+        runner.run(A.ACSA(mu=quad.mu, beta=quad.beta, k=2), quad, x0, 3,
+                   jax.random.PRNGKey(0), comm=CommConfig())
+    with pytest.raises(TypeError, match="not comm-aware"):
+        ch = chain.fedchain(A.FedAvg(eta=0.3), A.SSNM(mu_h=quad.mu,
+                                                      beta=quad.beta, k=2),
+                            name="unaware-chain")
+        ch.run(quad, x0, 6, jax.random.PRNGKey(0), comm=CommConfig())
+
+
+def test_algo_participation_conflicts_with_comm(quad, x0):
+    """An algorithm-level s would be silently ignored under comm — the round
+    refuses instead of running a different regime than configured."""
+    with pytest.raises(ValueError, match="owned by CommConfig"):
+        runner.run(A.SGD(eta=0.4, k=4, s=4), quad, x0, 3,
+                   jax.random.PRNGKey(0), comm=CommConfig())
+
+
+def test_uplink_bits_report_matches_billed_form():
+    for cfg in [CommConfig(), CommConfig(compressor="qsgd", qsgd_bits=6),
+                CommConfig(compressor="randk", spars_k=3),
+                CommConfig(compressor="topk", spars_k=5)]:
+        from repro.comm.config import uplink_bits_per_client
+
+        assert cfg.uplink_bits(DIM) == float(
+            uplink_bits_per_client(cfg.params(), DIM))
+
+
+def test_bad_config_rejected():
+    with pytest.raises(ValueError, match="compressor"):
+        CommConfig(compressor="gzip")
+    with pytest.raises(ValueError, match="participation"):
+        CommConfig(participation=0.0)
+    with pytest.raises(ValueError, match="qsgd_bits"):
+        CommConfig(compressor="qsgd", qsgd_bits=0)
+    with pytest.raises(ValueError, match="spars_k"):
+        CommConfig(compressor="topk", spars_k=0)
+    # k > d would keep everything while billing more than identity
+    with pytest.raises(ValueError, match="exceeds the parameter dimension"):
+        CommConfig(compressor="randk", spars_k=DIM + 1).init_state(
+            N_CLIENTS, DIM)
+
+
+def test_chain_error_feedback_runs_across_handoffs(quad, x0):
+    """EF residuals reset at stage handoffs (payload semantics change
+    between stages); the chained run stays finite and converges."""
+    ch = chain.fedchain(
+        A.FedAvg(eta=0.3, local_steps=2, inner_batch=2),
+        A.SGD(eta=0.3, k=4, mu_avg=quad.mu), selection_k=4,
+        name="ef-chain")
+    res = ch.run(quad, x0, 20, jax.random.PRNGKey(0),
+                 comm=CommConfig(compressor="topk", spars_k=4,
+                                 error_feedback=True))
+    h = np.asarray(res.history)
+    assert np.isfinite(h).all()
+    assert h[-1] < h[0]
+
+
+# ------------------------- PR-2 satellites ----------------------------------
+
+def test_decay_grid_reuses_one_executor(quad, x0):
+    """decay_factor is an executor operand: a whole decay grid — per-call and
+    vmapped — compiles the chain exactly once."""
+    ch = chain.Chain(
+        stages=[A.FedAvg(eta=0.3), A.SGD(eta=0.3, k=4, mu_avg=quad.mu)],
+        fractions=[0.5, 0.5], selection_k=4, name="decay-grid-chain")
+    ch.run(quad, x0, 12, jax.random.PRNGKey(0),
+           decay={"decay_first": 0.3, "decay_factor": 0.5})
+    assert runner.TRACE_COUNTS["chain/decay-grid-chain"] == 1
+    for f in (0.3, 0.7, 0.9):
+        ch.run(quad, x0, 12, jax.random.PRNGKey(0),
+               decay={"decay_first": 0.3, "decay_factor": f})
+    ch.run(quad, x0, 12, jax.random.PRNGKey(0))  # no decay: same executor
+    assert runner.TRACE_COUNTS["chain/decay-grid-chain"] == 1
+
+
+def test_run_decay_sweep_matches_per_call(quad, x0):
+    ch = chain.fedchain(
+        A.FedAvg(eta=0.3, local_steps=3, inner_batch=2),
+        A.SGD(eta=0.3, k=4, mu_avg=quad.mu), selection_k=4,
+        name="decay-sweep-chain")
+    factors = (0.5, 0.7)
+    res = sweep.run_decay_sweep(ch, quad, x0, 16, seeds=(0, 1),
+                                decay_factors=factors)
+    assert res.history.shape == (2, 2, 16)
+    for i, sd in enumerate((0, 1)):
+        for j, f in enumerate(factors):
+            r = ch.run(quad, x0, 16, jax.random.PRNGKey(sd),
+                       decay={"decay_first": 0.3, "decay_factor": f})
+            np.testing.assert_allclose(
+                np.asarray(res.history[i, j]), np.asarray(r.history),
+                rtol=2e-4, atol=1e-6)
+
+
+def test_logreg_zeta_estimation():
+    key = jax.random.PRNGKey(0)
+    kf, kl = jax.random.split(key)
+    base = jax.random.normal(kf, (4, 64, 8))
+    shift = jnp.arange(4.0)[:, None, None] * 0.5  # heterogeneous clients
+    X = base + shift
+    w_true = jax.random.normal(kl, (8,))
+    y = (jax.vmap(lambda Xi: Xi @ w_true)(X) > 0).astype(jnp.float32)
+    p_off = problems.logreg_problem(key, features=X, labels=y)
+    assert p_off.zeta == 0.0  # the documented vacuous default
+    p_on = problems.logreg_problem(key, features=X, labels=y,
+                                   estimate_zeta=True)
+    assert p_on.zeta > 0.0 and p_on.zeta_f > 0.0
+    # estimates are deterministic in the problem key
+    p_again = problems.logreg_problem(key, features=X, labels=y,
+                                      estimate_zeta=True)
+    assert p_again.zeta == p_on.zeta

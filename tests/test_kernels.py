@@ -11,6 +11,11 @@ from hypothesis import given, settings, strategies as st
 from repro.kernels.aggregate import ops as agg_ops
 from repro.kernels.aggregate.aggregate import chain_aggregate, mean_over_clients
 from repro.kernels.aggregate.ref import chain_aggregate_ref, mean_over_clients_ref
+from repro.kernels.compress import ops as compress_ops
+from repro.kernels.compress.compress import (
+    qsgd_dequantize, weighted_mean_over_clients)
+from repro.kernels.compress.ref import (
+    qsgd_dequantize_ref, weighted_mean_over_clients_ref)
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 
@@ -72,6 +77,85 @@ def test_aggregate_is_fedavg_server_step():
                           jnp.full((5,), 0.2), lr=1.0, interpret=True, block_d=64)
     np.testing.assert_allclose(np.asarray(out), np.asarray(jnp.mean(y, 0)),
                                rtol=1e-5, atol=1e-6)
+
+
+# --------------------------- compress ----------------------------------------
+
+@pytest.mark.parametrize("levels", [1.0, 15.0, 255.0])
+@pytest.mark.parametrize("s,d", [(1, 128), (4, 1000), (8, 257)])
+def test_qsgd_dequantize_sweep(s, d, levels):
+    key = jax.random.PRNGKey(s * 100 + d)
+    v = jax.random.normal(key, (s, d))
+    u = jax.random.uniform(jax.random.PRNGKey(1), (s, d))
+    norms = jnp.linalg.norm(v, axis=1)
+    lv = jnp.float32(levels)
+    out = qsgd_dequantize(v, u, norms, lv, interpret=True, block_d=256)
+    ref = qsgd_dequantize_ref(v, u, norms, lv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+    # dequantized values live on the sign·norm·{0..L}/L lattice
+    lattice = np.round(np.abs(np.asarray(out)) / np.asarray(norms)[:, None]
+                       * levels)
+    np.testing.assert_allclose(
+        np.abs(np.asarray(out)),
+        lattice * np.asarray(norms)[:, None] / levels, rtol=1e-4, atol=1e-6)
+
+
+def test_qsgd_zero_row_is_stable():
+    v = jnp.zeros((2, 64)).at[1].set(1.0)
+    u = jax.random.uniform(jax.random.PRNGKey(0), (2, 64))
+    norms = jnp.linalg.norm(v, axis=1)
+    out = qsgd_dequantize(v, u, norms, jnp.float32(15.0), interpret=True,
+                          block_d=64)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_array_equal(np.asarray(out[0]), np.zeros(64))
+
+
+@given(
+    s=st.integers(1, 6),
+    d=st.integers(1, 300),
+    full=st.booleans(),
+)
+@settings(max_examples=25, deadline=None)
+def test_weighted_mean_property(s, d, full):
+    t = jax.random.normal(jax.random.PRNGKey(s + d), (s, d))
+    w = (jnp.ones((s,)) if full
+         else jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(1), (s,))) * s)
+    out = weighted_mean_over_clients(t, w, interpret=True, block_d=64)
+    ref = weighted_mean_over_clients_ref(t, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+    want = np.einsum("s,sd->d", np.asarray(w), np.asarray(t)) / s
+    np.testing.assert_allclose(np.asarray(ref), want, rtol=1e-5, atol=1e-5)
+
+
+def test_weighted_mean_unit_weights_bitwise_equals_plain_mean():
+    """The comm bit-exactness keystone: under full participation the masked
+    aggregate IS the plain client mean, bit for bit (both dispatch paths)."""
+    t = jax.random.normal(jax.random.PRNGKey(0), (8, 300))
+    ones = jnp.ones((8,))
+    assert bool(jnp.all(weighted_mean_over_clients_ref(t, ones)
+                        == mean_over_clients_ref(t)))
+    a = weighted_mean_over_clients(t, ones, interpret=True, block_d=128)
+    b = mean_over_clients(t, interpret=True, block_d=128)
+    assert bool(jnp.all(a == b))
+
+
+def test_compress_ops_dispatch():
+    """CPU default (ref) path == forced-pallas interpret path."""
+    v = jax.random.normal(jax.random.PRNGKey(0), (4, 300))
+    u = jax.random.uniform(jax.random.PRNGKey(1), (4, 300))
+    norms = jnp.linalg.norm(v, axis=1)
+    lv = jnp.float32(15.0)
+    a = compress_ops.qsgd_dequantize(v, u, norms, lv)
+    b = compress_ops.qsgd_dequantize(v, u, norms, lv, force_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-6)
+    w = jnp.asarray([1.0, 0.0, 2.0, 1.0])
+    c = compress_ops.weighted_mean_over_clients(v, w)
+    d = compress_ops.weighted_mean_over_clients(v, w, force_pallas=True)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(d), rtol=1e-5,
+                               atol=1e-6)
 
 
 # --------------------------- flash attention --------------------------------
