@@ -29,7 +29,9 @@ ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
 def build(zeta=1.0, sigma=0.2, mu=0.1, beta=1.0):
-    return problems.quadratic_problem(
+    # the comm executors take the problem as a ProblemSpec operand: every
+    # comm config below shares ONE compiled executor per (algorithm, shape)
+    return problems.quadratic_spec(
         jax.random.PRNGKey(0), num_clients=8, dim=16, mu=mu, beta=beta,
         zeta=zeta, sigma=sigma, sigma_f=0.05)
 
@@ -37,8 +39,8 @@ def build(zeta=1.0, sigma=0.2, mu=0.1, beta=1.0):
 def methods(p):
     k = 32
     fa = A.FedAvg.from_k(k, eta=0.5)
-    sgd = A.SGD(eta=0.5, k=k, mu_avg=p.mu)
-    saga = A.SAGA(eta=0.5, k=k, mu_avg=p.mu)
+    sgd = A.SGD(eta=0.5, k=k, mu_avg=float(p.mu))
+    saga = A.SAGA(eta=0.5, k=k, mu_avg=float(p.mu))
     chained = chain.fedchain(fa, sgd, selection_k=k, name="fedavg->sgd")
 
     full = CommConfig()

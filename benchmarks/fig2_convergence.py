@@ -2,14 +2,15 @@
 heterogeneity levels (0% / 50% / 100% homogeneous shuffling), R=100 rounds,
 all clients participating, K=20 (paper §6 setup).
 
-Per the paper's App. I.1 protocol every method's stepsize is tuned over a
-small grid; that grid now runs as ONE vmapped ``run_sweep`` call per method
-(each method is built at a base stepsize and the grid supplies multipliers,
-reproducing the seed's per-η candidates exactly), and the best-final-loss
-curve is kept.
+The heterogeneity axis is a PROBLEM OPERAND: the three shuffling levels are
+same-shaped ``logreg_spec``s, so ALL levels × the stepsize-tuning grid run
+as ONE vmapped ``run_sweep(problems=...)`` call per method (per the paper's
+App. I.1 protocol every method's stepsize is tuned over a small grid; the
+best-final curve per level is kept). Logreg F* is Newton-solved, so curves
+are TRUE suboptimality F(x) − F*, not raw loss.
 
 Writes per-round curves to experiments/fig2_curves.csv; derived column:
-final loss + gradient norm of the tuned run."""
+final suboptimality + gradient norm of the tuned run."""
 from __future__ import annotations
 
 import os
@@ -24,6 +25,8 @@ from repro.data import partition, problems, synthetic_vision
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments")
 
+HOMS = (0.0, 0.5, 1.0)
+
 
 def build_logreg(homogeneous_frac: float, seed: int = 0):
     data = synthetic_vision.make_prototype_images(
@@ -31,7 +34,7 @@ def build_logreg(homogeneous_frac: float, seed: int = 0):
     cx, cy = partition.shuffled_heterogeneity(
         data, homogeneous_frac=homogeneous_frac, num_clients=5, seed=seed)
     labels = synthetic_vision.binary_labels_even_odd(cy)
-    return problems.logreg_problem(
+    return problems.logreg_spec(
         jax.random.PRNGKey(seed), features=jnp.asarray(cx),
         labels=jnp.asarray(labels), l2=0.1, oracle_batch_frac=0.01)
 
@@ -42,9 +45,10 @@ ETAS = (0.1, 0.5, 2.0)  # stepsize multipliers on each method's base η
 def method_specs(p, k):
     """Methods at base stepsizes chosen so the ETAS multipliers reproduce the
     seed grid (e.g. ASG ran at η/2 → base 0.5)."""
+    mu, beta = float(p.mu), float(p.beta)
     fa = A.FedAvg(eta=1.0, local_steps=4, inner_batch=5)
-    sgd = A.SGD(eta=1.0, k=k, mu_avg=p.mu, output_mode="last")
-    asg = A.NesterovSGD(eta=0.5, mu=p.mu, beta=p.beta, k=k)
+    sgd = A.SGD(eta=1.0, k=k, mu_avg=mu, output_mode="last")
+    asg = A.NesterovSGD(eta=0.5, mu=mu, beta=beta, k=k)
     scaffold = A.Scaffold(eta=1.0, local_steps=4, inner_batch=5)
     return {
         "sgd": sgd,
@@ -62,26 +66,37 @@ def main(quick: bool = True):
     k = 20
     rows = []
     curves = {}
-    for hom in (0.0, 0.5, 1.0):
-        p = build_logreg(hom)
-        x0 = p.init_params(jax.random.PRNGKey(0))
-        for name, algo in method_specs(p, k).items():
-            res, us = timed(lambda: sweep.run_sweep(
-                algo, p, x0, rounds, seeds=(5,), etas=ETAS,
-                eta_mode="scale"))
-            si, ei = sweep.best_cell(res)
-            hist = np.asarray(res.history)[si, ei]
+    specs = [build_logreg(hom) for hom in HOMS]
+    x0 = specs[0].x0  # logreg initializes at 0 for every level
+    for name, algo in method_specs(specs[0], k).items():
+        res, us = timed(lambda: sweep.run_sweep(
+            algo, None, x0, rounds, seeds=(5,), etas=ETAS,
+            eta_mode="scale", problems=specs))
+        hist_all = np.asarray(res.history)  # [P, 1, E, R]
+        final_all = np.asarray(res.final_sub)
+        for i, hom in enumerate(HOMS):
+            p = specs[i]
+            finite = np.where(np.isfinite(final_all[i, 0]),
+                              final_all[i, 0], np.inf)
+            if not np.isfinite(finite).any():
+                # mirror sweep.best_cell's guard: a nan/inf run must never
+                # be mistaken for a tuned result
+                raise ValueError(
+                    f"fig2/{name}/hom={hom}: every stepsize multiplier "
+                    f"diverged over etas={ETAS}")
+            ei = int(np.argmin(finite))
+            hist = hist_all[i, 0, ei]
             final = float(hist[-1])
-            x_hat = jax.tree.map(lambda t: t[si, ei], res.x_hat)
-            gnorm = float(tm.tree_norm(jax.grad(p.global_loss)(x_hat)))
+            x_hat = jax.tree.map(lambda t: t[i, 0, ei], res.x_hat)
+            gnorm = float(tm.tree_norm(p.global_grad(x_hat)))
             curves[f"hom={hom}/{name}"] = hist
-            rows.append(emit(f"fig2/{name}/hom={hom}", us,
-                             f"loss={final:.4f};gnorm={gnorm:.3e}"))
+            rows.append(emit(f"fig2/{name}/hom={hom}", us / len(HOMS),
+                             f"sub={final:.4f};gnorm={gnorm:.3e}"))
 
     os.makedirs(OUT, exist_ok=True)
     path = os.path.join(OUT, "fig2_curves.csv")
     with open(path, "w") as f:
-        f.write("curve,round,loss\n")
+        f.write("curve,round,sub\n")
         for name, hist in curves.items():
             for r, v in enumerate(hist):
                 f.write(f"{name},{r},{v}\n")

@@ -1,0 +1,180 @@
+"""Problem-operand sweep benchmark: a ζ × σ grid in ONE compile.
+
+The headline claim of the ProblemSpec redesign (``repro.data.spec``): the
+executors take problems as operands, so
+
+  (a) a stacked ζ × σ grid of quadratic instances runs seeds × stepsizes ×
+      problems in one vmapped call with ONE trace per executor,
+  (b) a Python loop over the same instances (one ``run_sweep`` per problem)
+      also reuses that single compile (cache key = family + shapes), and
+  (c) the LEGACY closure path re-traces per instance — the compile tax this
+      redesign removes, measured here for contrast.
+
+Also demos multi-method stacking (SGD at several ``mu_avg`` through one
+``lax.switch``-dispatched executor). Asserts ``runner.TRACE_COUNTS`` stays
+at one compile per executor across the whole grid — the CI ``problem-sweep``
+leg runs this in miniature and fails on any re-trace. Everything lands in
+``BENCH_problem_sweep.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import algorithms as A, chain, runner, sweep
+from repro.data import problems
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def build_grid(zetas, sigmas):
+    """Same-shaped quadratic specs over the ζ × σ product grid."""
+    return [
+        problems.quadratic_spec(
+            jax.random.PRNGKey(0), num_clients=8, dim=16, mu=0.1, beta=1.0,
+            zeta=z, sigma=s, sigma_f=0.05)
+        for z in zetas for s in sigmas
+    ], [f"zeta={z},sigma={s}" for z in zetas for s in sigmas]
+
+
+def _walled(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(getattr(out, "history", out))
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def _assert_single_compile(deltas, keys):
+    for k in keys:
+        if deltas.get(k, 0) != 1:
+            raise AssertionError(
+                f"executor {k!r} traced {deltas.get(k, 0)} times across the "
+                f"problem grid (expected exactly 1): counts={deltas}")
+
+
+def main(quick: bool = True):
+    zetas = (0.2, 1.0, 5.0)
+    sigmas = (0.0, 0.2) if quick else (0.0, 0.2, 0.5)
+    rounds = 30 if quick else 100
+    seeds = (0, 1) if quick else (0, 1, 2)
+    etas = (0.5, 1.0)
+    closure_instances = 2 if quick else 4
+
+    specs, labels = build_grid(zetas, sigmas)
+    x0 = specs[0].x0
+    mu = float(specs[0].mu)
+    k = 16
+    sgd = A.SGD(eta=0.5, k=k, mu_avg=mu)
+    fa = A.FedAvg.from_k(k, eta=0.5)
+    ch = chain.fedchain(fa, sgd, selection_k=k, name="fedavg->sgd")
+
+    rows = []
+    report = {
+        "grid": {"zetas": list(zetas), "sigmas": list(sigmas),
+                 "problems": len(specs), "seeds": list(seeds),
+                 "etas": list(etas), "rounds": rounds},
+        "methods": {},
+    }
+
+    for name, algo in (("sgd", sgd), ("fedavg->sgd", ch)):
+        eta_mode = None if isinstance(algo, chain.Chain) else "scale"
+        before = dict(runner.TRACE_COUNTS)
+
+        def grid_call():
+            return sweep.run_sweep(
+                algo, None, x0, rounds, seeds=seeds, etas=etas,
+                eta_mode=eta_mode or "scale", problems=specs)
+
+        res_cold, us_cold = _walled(grid_call)
+        res_warm, us_warm = _walled(grid_call)
+        grid_deltas = {k2: v - before.get(k2, 0)
+                       for k2, v in runner.TRACE_COUNTS.items()
+                       if v != before.get(k2, 0)}
+        exec_key = (f"chain/{algo.name}" if isinstance(algo, chain.Chain)
+                    else f"runner/{algo.name}")
+        _assert_single_compile(grid_deltas,
+                               [f"sweep-probs/{algo.name}", exec_key])
+
+        # per-problem loop (warm): each call reuses ONE compiled executor
+        def loop_call():
+            return [sweep.run_sweep(algo, p, x0, rounds, seeds=seeds,
+                                    etas=etas, eta_mode=eta_mode or "scale")
+                    for p in specs]
+
+        loop_res, _ = _walled(lambda: loop_call()[-1])  # warm the loop path
+        before_loop = dict(runner.TRACE_COUNTS)
+        loop_res, us_loop = _walled(lambda: loop_call()[-1])
+        if dict(runner.TRACE_COUNTS) != before_loop:
+            raise AssertionError(
+                "warm per-problem loop re-traced: specs as operands must "
+                "share one compile across instances")
+
+        # grid vs loop equivalence on the final grid cell
+        last = sweep.run_sweep(algo, specs[-1], x0, rounds, seeds=seeds,
+                               etas=etas, eta_mode=eta_mode or "scale")
+        np.testing.assert_allclose(
+            np.asarray(res_warm.history[-1]), np.asarray(last.history),
+            rtol=2e-4, atol=1e-6)
+
+        # legacy closure path: per-instance re-trace (the removed tax)
+        closure_probs = [problems.without_spec(problems.problem_from_spec(p))
+                         for p in specs[:closure_instances]]
+        t0 = time.perf_counter()
+        for p in closure_probs:
+            r = sweep.run_sweep(algo, p, x0, rounds, seeds=seeds, etas=etas,
+                                eta_mode=eta_mode or "scale")
+            jax.block_until_ready(r.history)
+        us_closure_per = (time.perf_counter() - t0) * 1e6 / closure_instances
+
+        speedup = us_loop / us_warm if us_warm > 0 else float("inf")
+        # the headline: the closure path pays a fresh trace PER INSTANCE;
+        # the spec grid (and the warm spec loop) pays zero
+        retrace_tax = us_closure_per / (us_warm / len(specs))
+        report["methods"][name] = {
+            "grid_cold_us": us_cold,
+            "grid_warm_us": us_warm,
+            "per_problem_loop_warm_us": us_loop,
+            "warm_speedup_grid_vs_loop": speedup,
+            "closure_path_us_per_instance": us_closure_per,
+            "retrace_tax_vs_grid_x": retrace_tax,
+            "trace_deltas_grid": grid_deltas,
+        }
+        rows.append(emit(
+            f"problem_sweep/{name}", us_warm,
+            f"problems={len(specs)};grid_vs_loop={speedup:.2f}x;"
+            f"closure_retrace_tax={retrace_tax:.0f}x"))
+
+    # multi-method stacking: SGD at several mu_avg, one compiled call
+    methods = [A.SGD(eta=0.5, k=k, mu_avg=m, name="sgd") for m in
+               (0.0, 0.5 * mu, mu)]
+    before = dict(runner.TRACE_COUNTS)
+    res_m, us_m_cold = _walled(lambda: sweep.run_method_sweep(
+        methods, specs[0], x0, rounds, seeds=seeds))
+    res_m, us_m_warm = _walled(lambda: sweep.run_method_sweep(
+        methods, specs[0], x0, rounds, seeds=seeds))
+    m_deltas = {k2: v - before.get(k2, 0)
+                for k2, v in runner.TRACE_COUNTS.items()
+                if v != before.get(k2, 0)}
+    tag = "+".join(m.name for m in methods)
+    _assert_single_compile(
+        m_deltas, [f"sweep-methods/{tag}", f"runner-methods/{tag}"])
+    report["method_stacking"] = {
+        "methods": len(methods), "cold_us": us_m_cold, "warm_us": us_m_warm,
+        "trace_deltas": m_deltas,
+    }
+    rows.append(emit(f"problem_sweep/method_stack[{len(methods)}xsgd]",
+                     us_m_warm, f"cold={us_m_cold:.0f}us"))
+
+    report["trace_counts"] = dict(runner.TRACE_COUNTS)
+    with open(os.path.join(ROOT, "BENCH_problem_sweep.json"), "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -18,9 +18,9 @@ def main(argv=None) -> None:
 
     from benchmarks import (
         ablation_selection, appj1_large_k, comm_frontier, fig2_convergence,
-        kernels_bench, lower_bound_bench, roofline, sweep_bench,
-        table1_strongly_convex, table2_general_convex, table3_nonconvex,
-        table4_pl,
+        kernels_bench, lower_bound_bench, problem_sweep, roofline,
+        sweep_bench, table1_strongly_convex, table2_general_convex,
+        table3_nonconvex, table4_pl,
     )
 
     harnesses = {
@@ -34,6 +34,7 @@ def main(argv=None) -> None:
         "ablation_selection": ablation_selection.main,  # Lemma H.2 on/off
         "comm_frontier": comm_frontier.main,  # suboptimality-vs-bits frontier
         "sweep": sweep_bench.main,  # vmapped grid vs per-call loop
+        "problem_sweep": problem_sweep.main,  # ζ×σ problem grid, one compile
         "kernels": kernels_bench.main,  # Pallas kernels
         "roofline": roofline.main,  # deliverable (g) report
     }

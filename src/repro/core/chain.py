@@ -16,9 +16,11 @@ round is a Lemma H.2 selection round (``kind``), whether a stage handoff
 and the η decay multiplier (``eta_scale``). Stage switching is a
 ``lax.switch`` over the per-stage round functions inside the scan body, so a
 whole chain — stages, selection rounds, stepsize decay — compiles exactly
-once per ``(chain, problem)``; the compiled executor is cached at module
-level (via ``runner``'s cache) and reused across calls, round budgets and the
-sweep engine's vmapped grids.
+once per ``(chain, problem STRUCTURE)``: the problem rides in as a
+``ProblemSpec`` operand (see ``repro.data.spec``), so every same-shaped
+instance — an entire ζ/σ grid — shares the compile. The executor is cached
+at module level (via ``runner``'s cache) and reused across calls, round
+budgets and the sweep engine's vmapped grids.
 
 The seed implementation Python-looped over stages with a separate jit per
 stage per call; this executor replaces that with schedule data.
@@ -169,13 +171,16 @@ class Chain:
     def executor_body(self, problem, rounds: int, comm: bool = False):
         """Unjitted single-scan chain executor.
 
-        Returns ``fn(x0, states0, key, eta_scale) -> (x_hat, history,
-        sel_flags)`` where ``states0`` is the tuple of per-stage initial
-        states (their ``.eta`` fields carry any sweep stepsize scaling),
+        Returns ``fn(spec, x0, states0, key, eta_scale) -> (x_hat, history,
+        sel_flags)`` where ``spec`` is the PROBLEM OPERAND (a ``ProblemSpec``
+        pytree; None for legacy closure problems, which the executor then
+        captures), ``states0`` is the tuple of per-stage initial states
+        (their ``.eta`` fields carry any sweep stepsize scaling),
         ``eta_scale`` is the [R] per-round η multiplier operand (see
         ``eta_schedule``) and ``sel_flags`` is a [R] bool vector whose
         entries at ``schedule.sel_indices`` record whether selection kept
-        the pre-stage anchor.
+        the pre-stage anchor. The cache key is the spec's structural
+        identity, so a ζ/σ grid of same-shaped problems shares one compile.
 
         With ``comm=True`` the signature grows ``(…, masks, comm0)`` — the
         [R, N] participation schedule and the initial ``CommState`` — and the
@@ -185,26 +190,28 @@ class Chain:
         active stage's state each round; selection rounds are billed at the
         Lemma H.2 cost (2 candidates down, 1 scalar per candidate up).
         """
-        key = ("chain-body", self._key(), id(problem), rounds, comm)
-        fn = runner_lib._cache_get(key, problem)
+        key = ("chain-body", self._key(), runner_lib.problem_key(problem),
+               rounds, comm)
+        fn = runner_lib._cache_get(key)
         if fn is not None:
             return fn
+
+        _, resolve = runner_lib._bind(problem)
 
         sched = self._schedule(rounds)
         stages = tuple(self.stages)
         n = len(stages)
-        f_star = problem.f_star if problem.f_star is not None else 0.0
         sel_s = self.selection_s if self.selection_s > 0 else problem.num_clients
         sel_k = self.selection_k
         stage_id = jnp.asarray(sched.stage_id)
         kind = jnp.asarray(sched.kind)
         hmode = jnp.asarray(sched.hmode)
 
-        def _select2(anchor, cand, k_sel):
+        def _select2(p, anchor, cand, k_sel):
             """Lemma H.2 pick between the anchor and a candidate; True = kept
             the anchor (argmin ties resolve to the anchor, as the seed did)."""
             vals = selection.empirical_values(
-                problem, [anchor, cand], k_sel, s=sel_s, k=sel_k)
+                p, [anchor, cand], k_sel, s=sel_s, k=sel_k)
             keep = vals[0] <= vals[1]
             return tm.tree_where(keep, anchor, cand), keep
 
@@ -212,25 +219,25 @@ class Chain:
             return jax.lax.switch(
                 j, [lambda s, i=i: stages[i].output(s[i]) for i in range(n)], states)
 
-        def _reinit(j, states, x_init):
+        def _reinit(p, j, states, x_init):
             """states with slot j re-initialized at x_init, base η preserved."""
 
             def branch(i):
                 def init_i(args):
                     states, x = args
-                    st = stages[i].init(problem, x)
+                    st = stages[i].init(p, x)
                     st = st._replace(eta=states[i].eta)
                     return states[:i] + (st,) + states[i + 1:]
                 return init_i
 
             return jax.lax.switch(j, [branch(i) for i in range(n)], (states, x_init))
 
-        def _round(j, states, k_round, scale):
+        def _round(p, j, states, k_round, scale):
             def branch(i):
                 def round_i(args):
                     states, k, scale = args
                     st = states[i]
-                    run = stages[i].round(problem, st._replace(eta=st.eta * scale), k)
+                    run = stages[i].round(p, st._replace(eta=st.eta * scale), k)
                     run = run._replace(eta=st.eta)
                     return states[:i] + (run,) + states[i + 1:]
                 return round_i
@@ -238,7 +245,7 @@ class Chain:
             return jax.lax.switch(j, [branch(i) for i in range(n)],
                                   (states, k_round, scale))
 
-        def _round_comm(j, states, comm_st, k_round, scale, mask):
+        def _round_comm(p, j, states, comm_st, k_round, scale, mask):
             """One stage round with the shared CommState injected into (and
             pulled back out of) the active stage's state; every branch
             returns the ``comm=None`` structure the carry uses."""
@@ -250,7 +257,7 @@ class Chain:
                     st = states[i]
                     st_in = st._replace(eta=st.eta * scale,
                                         comm=comm_st._replace(mask=mask))
-                    out = stages[i].round(problem, st_in, k)
+                    out = stages[i].round(p, st_in, k)
                     new_comm = comm_cfg.comm_state_or_error(
                         out, stages[i].name)
                     out = out._replace(eta=st.eta, comm=None)
@@ -280,7 +287,7 @@ class Chain:
                 offsets[sched.stage_id] + sched.round_slot, jnp.int32)
             return round_keys[flat_idx], sel_keys[jnp.asarray(sched.sel_stage)]
 
-        def _handoff(states, anchor, sid, hmd, k_sel):
+        def _handoff(p, states, anchor, sid, hmd, k_sel):
             def do_handoff(args):
                 states, anchor = args
                 prev_out = _output(jnp.maximum(sid - 1, 0), states)
@@ -289,14 +296,14 @@ class Chain:
                     return anchor, jnp.asarray(True)
 
                 def with_sel(_):
-                    return _select2(anchor, prev_out, k_sel)
+                    return _select2(p, anchor, prev_out, k_sel)
 
                 def take(_):
                     return prev_out, jnp.asarray(False)
 
                 x_init, kept = jax.lax.switch(
                     hmd - 1, [from_anchor, with_sel, take], None)
-                states = _reinit(sid, states, x_init)
+                states = _reinit(p, sid, states, x_init)
                 return states, x_init, kept
 
             def no_handoff(args):
@@ -308,31 +315,33 @@ class Chain:
 
         if not comm:
 
-            def executor(x0, states0, key, eta_scale):
+            def executor(spec, x0, states0, key, eta_scale):
                 from repro.core.algorithms import base as algo_base
 
+                p = resolve(spec)
                 for st in states0:
                     algo_base.audit_state(st)  # protocol check, once per trace
                 runner_lib.TRACE_COUNTS[f"chain/{self.name}"] += 1
+                f_star = runner_lib.f_star_operand(p)
                 keys_r, keys_s = _derive_keys(key)
 
                 def body(carry, xs):
                     states, anchor = carry
                     k_round, k_sel, sid, knd, hmd, scale = xs
                     states, anchor, h_kept = _handoff(
-                        states, anchor, sid, hmd, k_sel)
+                        p, states, anchor, sid, hmd, k_sel)
 
                     def sel_round(args):
                         states, anchor = args
                         cand = _output(sid, states)
-                        best, kept = _select2(anchor, cand, k_sel)
-                        sub = problem.global_loss(best) - f_star
+                        best, kept = _select2(p, anchor, cand, k_sel)
+                        sub = p.global_loss(best) - f_star
                         return states, best, sub, kept
 
                     def alg_round(args):
                         states, anchor = args
-                        states = _round(sid, states, k_round, scale)
-                        sub = problem.global_loss(_output(sid, states)) - f_star
+                        states = _round(p, sid, states, k_round, scale)
+                        sub = p.global_loss(_output(sid, states)) - f_star
                         return states, anchor, sub, jnp.asarray(False)
 
                     states, anchor, sub, s_kept = jax.lax.cond(
@@ -347,13 +356,15 @@ class Chain:
 
         else:
 
-            def executor(x0, states0, key, eta_scale, masks, comm0):
+            def executor(spec, x0, states0, key, eta_scale, masks, comm0):
                 from repro.comm import config as comm_cfg
                 from repro.core.algorithms import base as algo_base
 
+                p = resolve(spec)
                 for st in states0:
                     algo_base.audit_state(st)
                 runner_lib.TRACE_COUNTS[f"chain-comm/{self.name}"] += 1
+                f_star = runner_lib.f_star_operand(p)
                 keys_r, keys_s = _derive_keys(key)
                 d = x0.shape[0]  # comm chains are flat-params only
                 sel_up, sel_down = comm_cfg.selection_round_bits(d, sel_s)
@@ -370,20 +381,20 @@ class Chain:
                     comm_st = comm_st._replace(residual=jnp.where(
                         hmd > 0, 0.0, comm_st.residual))
                     states, anchor, h_kept = _handoff(
-                        states, anchor, sid, hmd, k_sel)
+                        p, states, anchor, sid, hmd, k_sel)
 
                     def sel_round(args):
                         states, anchor, comm_st = args
                         cand = _output(sid, states)
-                        best, kept = _select2(anchor, cand, k_sel)
-                        sub = problem.global_loss(best) - f_star
+                        best, kept = _select2(p, anchor, cand, k_sel)
+                        sub = p.global_loss(best) - f_star
                         return states, best, comm_st, sub, kept
 
                     def alg_round(args):
                         states, anchor, comm_st = args
                         states, comm_st = _round_comm(
-                            sid, states, comm_st, k_round, scale, mask)
-                        sub = problem.global_loss(_output(sid, states)) - f_star
+                            p, sid, states, comm_st, k_round, scale, mask)
+                        sub = p.global_loss(_output(sid, states)) - f_star
                         return states, anchor, comm_st, sub, jnp.asarray(False)
 
                     states, anchor, comm_st, sub, s_kept = jax.lax.cond(
@@ -411,16 +422,17 @@ class Chain:
                 x_hat = stages[-1].output(states[-1])
                 return x_hat, history, kept_flags, bits_up, bits_down
 
-        return runner_lib._cache_put(key, problem, executor)
+        return runner_lib._cache_put(key, executor)
 
     def executor(self, problem, rounds: int, comm: bool = False):
         """The jitted, module-cached chain executor."""
-        key = ("chain-jit", self._key(), id(problem), rounds, comm)
-        fn = runner_lib._cache_get(key, problem)
+        key = ("chain-jit", self._key(), runner_lib.problem_key(problem),
+               rounds, comm)
+        fn = runner_lib._cache_get(key)
         if fn is not None:
             return fn
         return runner_lib._cache_put(
-            key, problem, jax.jit(self.executor_body(problem, rounds, comm)))
+            key, jax.jit(self.executor_body(problem, rounds, comm)))
 
     def init_states(self, problem, x0, eta_scale=None):
         """Per-stage initial states; ``eta_scale`` multiplies every stage's
@@ -444,10 +456,11 @@ class Chain:
         sched = self._schedule(rounds)
         eta_arr = self.eta_schedule(rounds, decay)
         states0 = self.init_states(problem, x0, eta_scale)
+        spec = runner_lib.as_spec(problem)
         bits_up = bits_down = None
         if comm is None:
             fn = self.executor(problem, rounds)
-            x_hat, history, kept_flags = fn(x0, states0, key, eta_arr)
+            x_hat, history, kept_flags = fn(spec, x0, states0, key, eta_arr)
         else:
             from repro.comm import config as comm_cfg
 
@@ -461,7 +474,7 @@ class Chain:
             comm0 = comm.init_state(n_clients, x0.shape[0])
             fn = self.executor(problem, rounds, comm=True)
             x_hat, history, kept_flags, bits_up, bits_down = fn(
-                x0, states0, key, eta_arr, masks, comm0)
+                spec, x0, states0, key, eta_arr, masks, comm0)
         kept = np.asarray(kept_flags)
         return ChainResult(
             x_hat=x_hat,

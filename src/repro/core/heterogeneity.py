@@ -3,9 +3,20 @@
 ζ² (Assumption B.5) is a sup over x — we estimate it by maximizing over a set
 of probe points (trajectory iterates and/or random points in a ball), which
 lower-bounds the true ζ and is exact for the constructions in
-``repro.data.problems`` whose gradient differences are constant in x.
+``repro.data.spec``/``repro.data.problems`` whose gradient differences are
+constant in x.
+
+Every estimator takes a *problem* duck-typed as the oracle surface
+(``num_clients``, ``client_loss``, ``global_loss``, ``grad_oracle``) — a
+``ProblemSpec`` or a legacy ``FederatedProblem`` shim both work.
+``with_measured_heterogeneity`` is the spec-native entry point: it returns a
+NEW spec whose ζ/ζ_F constant leaves carry the measured values (specs are
+immutable pytrees; constants are data, so updating them is a leaf swap that
+does not change the executor cache key).
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +50,33 @@ def zeta_f_at(problem, x):
         return jnp.abs(problem.client_loss(x, i) - f_bar)
 
     return jnp.max(jax.vmap(one)(jnp.arange(problem.num_clients)))
+
+
+def probe_points(x_init, key, *, probes: int = 8, radius: float = 1.0):
+    """The init point plus ``probes`` random points in a ``radius`` ball —
+    the probe set the logreg builders maximize ζ/ζ_F over."""
+    dim = x_init.shape[0]
+    keys = jax.random.split(key, max(probes, 1))
+    return [x_init] + [
+        x_init + radius * jax.random.normal(k, (dim,)) / jnp.sqrt(float(dim))
+        for k in keys[:probes]
+    ]
+
+
+def with_measured_heterogeneity(spec, key, *, probes: int = 8,
+                                radius: float = 1.0):
+    """A copy of ``spec`` whose ζ/ζ_F leaves hold probe-measured values.
+
+    Lower-bounds the Assumption B.5/B.8 sups by maximizing over the init
+    point plus ``probes`` random points in a ``radius`` ball — what the
+    theory-vs-measured comparisons need to be non-trivial on real data.
+    """
+    pts = probe_points(spec.x0, key, probes=probes, radius=radius)
+    zeta = jnp.asarray(estimate_zeta(spec, pts), jnp.float32)
+    zeta_f = jnp.asarray(
+        jnp.max(jnp.stack([zeta_f_at(spec, x) for x in pts])), jnp.float32)
+    return dataclasses.replace(
+        spec, consts={**spec.consts, "zeta": zeta, "zeta_f": zeta_f})
 
 
 def estimate_sigma(problem, x, key, *, client_id=0, samples: int = 256):

@@ -5,16 +5,30 @@ plus a stepsize multiplier ``eta_scale[r]`` applied to the state's base η each
 round. Stepsize decay (the paper's "M-" variants, App. I.1) is therefore pure
 data — the same compiled executor runs constant-η and decayed-η schedules.
 
-Executors are cached at module level, keyed by ``(algo, problem, eval mode)``:
-repeated ``run`` calls with the same algorithm on the same problem never
-re-trace (the seed implementation re-jitted a fresh closure per call). The
-cache also exposes the *unjitted* executor body so ``repro.core.sweep`` can
-``vmap`` it over a seeds × stepsizes grid inside one compiled call.
+Problems are executor OPERANDS. Every executor takes a leading ``spec``
+argument (a ``repro.data.spec.ProblemSpec`` pytree — arrays only, family
+dispatch is static metadata): the cache key is the spec's *structural*
+identity (family tag + static fields + leaf shapes/dtypes), never the
+instance, so re-running any same-shaped problem — a whole ζ/σ grid of them —
+reuses ONE compile. Legacy hand-closure problems (``FederatedProblem`` with
+``spec=None``) still run: their executors close over the problem and are
+keyed by an id-reuse-safe weak token; callers pass ``spec=None``.
+
+The executor cache holds ``(key, fn)`` ONLY. Spec-path entries capture no
+problem data at all (the spec rides in as an argument), so evicting or
+caching an executor never pins client data shards; tokens for legacy
+problems are weak references.
 
 State protocol (audited in ``algorithms.base``): every algorithm state is a
 NamedTuple carrying ``.x`` (server iterate), ``.eta`` (base stepsize — the
 executor owns annealing and restores the base after every round) and ``.r``
 (round counter). ``round`` must pass ``eta`` through unchanged.
+
+``method_executor_body`` stacks SEVERAL method instances with matching state
+structure (e.g. SGD at three ``mu_avg`` values, FedAvg at two local-step
+counts) into one executor: the per-round dispatch is a ``lax.switch`` over
+the method index — an operand — so the sweep engine vmaps methods × seeds ×
+stepsizes through one compile (``core.sweep.run_method_sweep``).
 
 ``TRACE_COUNTS`` increments once per executor *trace* (a Python side effect
 inside the traced body) — tests assert single-compile behaviour with it.
@@ -23,6 +37,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
+import weakref
 from typing import Optional
 
 import jax
@@ -32,13 +48,18 @@ import jax.numpy as jnp
 # single-compile executor leaves the count unchanged on repeated calls.
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
-# (cache key) -> (problem, executor fn). The problem participates in the key
-# by id() — FederatedProblem closes over arrays and is not hashable — and is
-# held strongly in the entry so a hit can verify identity (guarding against
-# id reuse). The cache is a bounded LRU: executors close over their problem's
-# data, so unbounded growth would pin every problem ever run.
+# cache key -> executor fn. A bounded LRU; entries hold NO problem objects
+# (spec-path executors take the problem as an operand; legacy closure
+# executors capture their problem themselves, which is exactly the lifetime
+# the closure path implies).
 _EXECUTOR_CACHE: "collections.OrderedDict" = collections.OrderedDict()
 _EXECUTOR_CACHE_MAX = 128
+
+# Legacy problems are keyed by a token that is unique per live object and
+# never reused while the object is alive: ids are validated through a weak
+# reference and the table entry dies with the problem (no strong refs).
+_TOKEN_COUNTER = itertools.count()
+_PROBLEM_TOKENS: dict = {}
 
 
 @dataclasses.dataclass
@@ -60,19 +81,60 @@ def _env_key():
     return agg_ops._force_pallas_env()
 
 
-def _cache_get(key, problem):
-    hit = _EXECUTOR_CACHE.get((key, _env_key()))
-    if hit is not None:
-        cached_problem, fn = hit
-        if cached_problem is problem:
-            _EXECUTOR_CACHE.move_to_end((key, _env_key()))
-            return fn
-    return None
+def as_spec(problem):
+    """The operand form of a problem: the ProblemSpec itself, a shim's
+    ``.spec``, or None for legacy hand-closure problems."""
+    if getattr(problem, "is_problem_spec", False):
+        return problem
+    return getattr(problem, "spec", None)
 
 
-def _cache_put(key, problem, fn):
+def _problem_token(problem) -> int:
+    pid = id(problem)
+    entry = _PROBLEM_TOKENS.get(pid)
+    if entry is not None:
+        ref, token = entry
+        if ref() is problem:
+            return token
+    token = next(_TOKEN_COUNTER)
+    ref = weakref.ref(problem,
+                      lambda _, pid=pid: _PROBLEM_TOKENS.pop(pid, None))
+    _PROBLEM_TOKENS[pid] = (ref, token)
+    return token
+
+
+def problem_key(problem):
+    """The problem's contribution to an executor cache key: structural for
+    specs (shapes, never identity), a weak identity token for legacy
+    closures."""
+    spec = as_spec(problem)
+    if spec is not None:
+        return ("spec", spec.cache_key())
+    return ("closure", _problem_token(problem))
+
+
+def f_star_operand(problem):
+    """The F* the executors subtract. For specs this is the ``f_star``
+    CONSTANT LEAF (an operand — 0.0 when unknown, making histories raw
+    objective values; the explicit-fallback warning lives in
+    ``suboptimality``). For legacy problems it is the baked float."""
+    spec = as_spec(problem)
+    if spec is not None:
+        return spec.f_star_leaf
+    return problem.f_star if problem.f_star is not None else 0.0
+
+
+def _cache_get(key):
     full = (key, _env_key())
-    _EXECUTOR_CACHE[full] = (problem, fn)
+    fn = _EXECUTOR_CACHE.get(full)
+    if fn is not None:
+        _EXECUTOR_CACHE.move_to_end(full)
+    return fn
+
+
+def _cache_put(key, fn):
+    full = (key, _env_key())
+    _EXECUTOR_CACHE[full] = fn
     _EXECUTOR_CACHE.move_to_end(full)
     while len(_EXECUTOR_CACHE) > _EXECUTOR_CACHE_MAX:
         _EXECUTOR_CACHE.popitem(last=False)
@@ -84,72 +146,87 @@ def clear_executor_cache():
     _EXECUTOR_CACHE.clear()
 
 
+def _bind(problem):
+    """(spec, resolve) where ``resolve(spec_op)`` yields the problem an
+    executor body should query: the traced spec operand on the spec path, or
+    the captured legacy problem (spec_op is then None) on the closure path."""
+    spec = as_spec(problem)
+    if spec is not None:
+        return spec, (lambda spec_op: spec_op)
+    return None, (lambda spec_op: problem)
+
+
 def executor_body(algo, problem, eval_output: bool = True):
     """The unjitted single-compile executor.
 
-    Returns ``fn(state0, keys, eta_scale) -> (state, history)`` scanning all
-    rounds at once; ``keys`` is [R, 2] raw PRNG keys, ``eta_scale`` is [R]
-    multipliers on the *base* stepsize carried in ``state0.eta``.
+    Returns ``fn(spec, state0, keys, eta_scale) -> (state, history)``
+    scanning all rounds at once; ``spec`` is the problem operand (None for
+    legacy closure problems), ``keys`` is [R, 2] raw PRNG keys, ``eta_scale``
+    is [R] multipliers on the *base* stepsize carried in ``state0.eta``.
     """
-    key = ("body", algo, id(problem), eval_output)
-    fn = _cache_get(key, problem)
+    key = ("body", algo, problem_key(problem), eval_output)
+    fn = _cache_get(key)
     if fn is not None:
         return fn
 
-    f_star = problem.f_star if problem.f_star is not None else 0.0
+    _, resolve = _bind(problem)
 
-    def executor(state0, keys, eta_scale):
+    def executor(spec, state0, keys, eta_scale):
         from repro.core.algorithms import base as algo_base
 
+        p = resolve(spec)
         algo_base.audit_state(state0)  # protocol check, once per trace
         TRACE_COUNTS[f"runner/{algo.name}"] += 1  # trace-time side effect
+        f_star = f_star_operand(p)
         base_eta = state0.eta
 
         def one_round(state, xs):
             k, scale = xs
-            st = algo.round(problem, state._replace(eta=base_eta * scale), k)
+            st = algo.round(p, state._replace(eta=base_eta * scale), k)
             st = st._replace(eta=base_eta)  # executor owns annealing
             x_eval = algo.output(st) if eval_output else st.x
-            sub = problem.global_loss(x_eval) - f_star
+            sub = p.global_loss(x_eval) - f_star
             return st, sub
 
         return jax.lax.scan(one_round, state0, (keys, eta_scale))
 
-    return _cache_put(key, problem, executor)
+    return _cache_put(key, executor)
 
 
 def executor(algo, problem, eval_output: bool = True):
     """The jitted, module-cached executor (same signature as the body)."""
-    key = ("jit", algo, id(problem), eval_output)
-    fn = _cache_get(key, problem)
+    key = ("jit", algo, problem_key(problem), eval_output)
+    fn = _cache_get(key)
     if fn is not None:
         return fn
-    return _cache_put(key, problem, jax.jit(executor_body(algo, problem, eval_output)))
+    return _cache_put(key, jax.jit(executor_body(algo, problem, eval_output)))
 
 
 def comm_executor_body(algo, problem, eval_output: bool = True):
     """The comm-enabled single-compile executor.
 
-    Returns ``fn(state0, keys, eta_scale, masks) -> (state, (history,
+    Returns ``fn(spec, state0, keys, eta_scale, masks) -> (state, (history,
     bits_up, bits_down))``. ``state0`` must carry a ``CommState`` in its
     ``comm`` leaf; ``masks`` is the [R, N] participation schedule — pure scan
     data, like the keys and η multipliers, so comm config (participation
     fraction, compressor, bit-width) never re-traces this executor.
     """
-    key = ("comm-body", algo, id(problem), eval_output)
-    fn = _cache_get(key, problem)
+    key = ("comm-body", algo, problem_key(problem), eval_output)
+    fn = _cache_get(key)
     if fn is not None:
         return fn
 
-    f_star = problem.f_star if problem.f_star is not None else 0.0
+    _, resolve = _bind(problem)
 
-    def executor(state0, keys, eta_scale, masks):
+    def executor(spec, state0, keys, eta_scale, masks):
         from repro.comm import config as comm_cfg
         from repro.core.algorithms import base as algo_base
 
+        p = resolve(spec)
         algo_base.audit_state(state0)
         comm_cfg.comm_state_or_error(state0, algo.name)
         TRACE_COUNTS[f"runner-comm/{algo.name}"] += 1
+        f_star = f_star_operand(p)
         base_eta = state0.eta
 
         def one_round(state, xs):
@@ -157,26 +234,77 @@ def comm_executor_body(algo, problem, eval_output: bool = True):
             comm_in = comm_cfg.zero_round_bits(
                 state.comm._replace(mask=mask))
             st = algo.round(
-                problem, state._replace(eta=base_eta * scale, comm=comm_in), k)
+                p, state._replace(eta=base_eta * scale, comm=comm_in), k)
             comm = comm_cfg.comm_state_or_error(st, algo.name)
             st = st._replace(eta=base_eta)
             x_eval = algo.output(st) if eval_output else st.x
-            sub = problem.global_loss(x_eval) - f_star
+            sub = p.global_loss(x_eval) - f_star
             return st, (sub, comm.bits_up, comm.bits_down)
 
         return jax.lax.scan(one_round, state0, (keys, eta_scale, masks))
 
-    return _cache_put(key, problem, executor)
+    return _cache_put(key, executor)
 
 
 def comm_executor(algo, problem, eval_output: bool = True):
     """The jitted, module-cached comm executor."""
-    key = ("comm-jit", algo, id(problem), eval_output)
-    fn = _cache_get(key, problem)
+    key = ("comm-jit", algo, problem_key(problem), eval_output)
+    fn = _cache_get(key)
     if fn is not None:
         return fn
-    return _cache_put(
-        key, problem, jax.jit(comm_executor_body(algo, problem, eval_output)))
+    return _cache_put(key, jax.jit(
+        comm_executor_body(algo, problem, eval_output)))
+
+
+def method_executor_body(methods, problem, eval_output: bool = True):
+    """The multi-method stacked executor (one compile for several methods).
+
+    ``methods`` is a tuple of algorithm instances whose states share one
+    pytree structure (e.g. one class at different hyperparameters — SGD at
+    several ``mu_avg``, FedAvg at several local-step counts). Returns
+    ``fn(spec, state0, keys, eta_scale, midx) -> (state, history)`` where
+    ``midx`` selects the method via ``lax.switch`` each round — an operand,
+    so the sweep engine vmaps it alongside seeds and stepsizes.
+    """
+    methods = tuple(methods)
+    tag = "+".join(m.name for m in methods)
+    key = ("methods-body", methods, problem_key(problem), eval_output)
+    fn = _cache_get(key)
+    if fn is not None:
+        return fn
+
+    _, resolve = _bind(problem)
+
+    def executor(spec, state0, keys, eta_scale, midx):
+        from repro.core.algorithms import base as algo_base
+
+        p = resolve(spec)
+        algo_base.audit_state(state0)
+        TRACE_COUNTS[f"runner-methods/{tag}"] += 1
+        f_star = f_star_operand(p)
+        base_eta = state0.eta
+
+        def _output(st):
+            if not eval_output:
+                return st.x
+            return jax.lax.switch(
+                midx, [lambda s, m=m: m.output(s) for m in methods], st)
+
+        def one_round(state, xs):
+            k, scale = xs
+            st_in = state._replace(eta=base_eta * scale)
+            st = jax.lax.switch(
+                midx,
+                [lambda args, m=m: m.round(p, args[0], args[1])
+                 for m in methods],
+                (st_in, k))
+            st = st._replace(eta=base_eta)
+            sub = p.global_loss(_output(st)) - f_star
+            return st, sub
+
+        return jax.lax.scan(one_round, state0, (keys, eta_scale))
+
+    return _cache_put(key, executor)
 
 
 def run(algo, problem, x0, rounds: int, key, *, eval_output: bool = True,
@@ -190,6 +318,7 @@ def run(algo, problem, x0, rounds: int, key, *, eval_output: bool = True,
     overrides the config-derived [R, N] masks) and exact bits accounting in
     the result's ``bits_up``/``bits_down``.
     """
+    spec = as_spec(problem)
     state0 = algo.init_with_eta(problem, x0, eta)
     keys = jax.random.split(key, rounds)
     eta_scale = jnp.ones((rounds,), jnp.float32)
@@ -205,12 +334,12 @@ def run(algo, problem, x0, rounds: int, key, *, eval_output: bool = True,
         fn = (comm_executor if jit else comm_executor_body)(
             algo, problem, eval_output)
         state, (history, bits_up, bits_down) = fn(
-            state0, keys, eta_scale, masks)
+            spec, state0, keys, eta_scale, masks)
         return RunResult(state=state, x_hat=algo.output(state),
                          history=history, bits_up=bits_up,
                          bits_down=bits_down)
     fn = (executor if jit else executor_body)(algo, problem, eval_output)
-    state, history = fn(state0, keys, eta_scale)
+    state, history = fn(spec, state0, keys, eta_scale)
     return RunResult(state=state, x_hat=algo.output(state), history=history)
 
 
@@ -265,7 +394,7 @@ def run_with_decay(
 
     state0 = algo.init_with_eta(problem, x0, eta)
     fn = (executor if jit else executor_body)(algo, problem, True)
-    state, history = fn(state0, keys, eta_scale)
+    state, history = fn(as_spec(problem), state0, keys, eta_scale)
     # final state carries the fully-annealed stepsize, as the segment loop did
     n_applied = sum(1 for seg in segments if seg > 0)
     state = state._replace(eta=state0.eta * decay_factor**n_applied)

@@ -1,12 +1,17 @@
-"""Vmapped sweep engine: one compiled call for a seeds × stepsizes grid.
+"""Vmapped sweep engine: one compiled call for seeds × stepsizes × problems.
 
 FedChain's experiment grids (Tables 1–4, Fig. 2) repeat the same algorithm
-over seeds and stepsizes. ``run_sweep`` vmaps the single-compile executors
-from ``runner``/``chain`` over both axes and jits the whole grid, so an
-S × E sweep costs ONE trace + one device dispatch instead of S·E re-traced
-round loops. Sweep functions are cached per ``(algo-or-chain, problem,
-rounds)`` — repeated sweeps (e.g. across ζ values on the same problem
-instance) never re-trace.
+over seeds, stepsizes, heterogeneity levels ζ, noise levels σ and problem
+instances. ``run_sweep`` vmaps the single-compile executors from
+``runner``/``chain`` over all of these axes and jits the whole grid, so a
+P × S × E sweep costs ONE trace + one device dispatch instead of P·S·E
+re-traced round loops.
+
+Problems are OPERANDS (``repro.data.spec.ProblemSpec``): sweep functions are
+cached per ``(algo-or-chain, problem STRUCTURE, rounds)`` — family tag +
+shapes, never instance identity — so repeated sweeps across ζ values, σ
+values or fresh instances never re-trace, and the ``problems=`` axis batches
+a stacked spec (``spec.stack_specs``) through the same compiled cell.
 
 Stepsize semantics
 ------------------
@@ -22,6 +27,21 @@ Stepsize semantics
 Because η lives in algorithm state (the uniform state protocol of
 ``algorithms.base``), batching stepsizes is just a batched ``state.eta`` leaf
 — no algorithm code is sweep-aware.
+
+Multi-method stacking
+---------------------
+``run_method_sweep`` batches SEVERAL method instances whose states share one
+pytree structure (SGD at several ``mu_avg``, FedAvg at several local-step
+counts, mixed output modes, …) into one compiled call: the method index is
+an operand dispatched by ``lax.switch`` inside the executor
+(``runner.method_executor_body``), riding the same uniform-state protocol
+that batches η — the methods axis is just a stacked state plus an index.
+Cost model: stacking trades COMPILES for FLOPs. Because the switch index is
+batched, vmap evaluates every branch and selects, so each grid row runs all
+M methods' rounds (M× device work vs a per-method loop, which — thanks to
+structural executor caching — pays at most M compiles). Stack when traces
+dominate (many short cold-path configs); loop per method for long warm
+grids.
 
 Communication sweeps
 --------------------
@@ -51,16 +71,24 @@ from repro.core import runner as runner_lib
 
 @dataclasses.dataclass
 class SweepResult:
-    """Results over the grid; leading axes are [n_seeds, n_etas]."""
+    """Results over the grid.
 
-    history: jnp.ndarray  # [S, E, R] per-round suboptimality
-    final_sub: jnp.ndarray  # [S, E] F(x̂) − F* at the end
-    x_hat: object  # pytree, leaves [S, E, ...]
+    Leading axes are ``[n_seeds, n_etas]``; a ``problems=`` sweep prepends a
+    problem axis (``[n_problems, n_seeds, n_etas]``) and a
+    ``run_method_sweep`` prepends a method axis (``[n_methods, …]``) —
+    ``problems``/``methods`` are set accordingly.
+    """
+
+    history: jnp.ndarray  # [..., S, E, R] per-round suboptimality
+    final_sub: jnp.ndarray  # [..., S, E] F(x̂) − F* at the end
+    x_hat: object  # pytree, leaves [..., S, E, ...]
     seeds: tuple
     etas: tuple
-    selected_initial: Optional[jnp.ndarray] = None  # [S, E, n_sel] (chains)
+    selected_initial: Optional[jnp.ndarray] = None  # [..., S, E, n_sel]
     bits_up: Optional[jnp.ndarray] = None  # [S, E, R] per-round uplink bits
     bits_down: Optional[jnp.ndarray] = None  # [S, E, R] downlink bits
+    problems: Optional[tuple] = None  # problem names along the leading axis
+    methods: Optional[tuple] = None  # method names along the leading axis
 
     def cumulative_bits(self):
         """[S, E, R] total (up + down) bits through each round, float64 —
@@ -74,134 +102,209 @@ class SweepResult:
         return np.cumsum(per_round, axis=-1)
 
 
-def _sweep_fn_algo(algo, problem, rounds: int, eval_output: bool, eta_mode: str):
-    key = ("sweep-algo", algo, id(problem), rounds, eval_output, eta_mode)
-    fn = runner_lib._cache_get(key, problem)
+def _sweep_fn_algo(algo, problem, rounds: int, eval_output: bool,
+                   eta_mode: str, problem_axis: bool = False):
+    """The seeds × etas grid cell; ``problem_axis`` wraps one more vmap over
+    a stacked spec operand (+ per-problem x0) — one compiled call for the
+    whole problems × seeds × stepsizes grid."""
+    key = ("sweep-algo", algo, runner_lib.problem_key(problem), rounds,
+           eval_output, eta_mode, problem_axis)
+    fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
 
     body = runner_lib.executor_body(algo, problem, eval_output)
-    f_star = problem.f_star if problem.f_star is not None else 0.0
+    _, resolve = runner_lib._bind(problem)
+    tag = "sweep-probs" if problem_axis else "sweep"
     eta_scale = jnp.ones((rounds,), jnp.float32)
 
-    def cell(x0, key, eta):
-        runner_lib.TRACE_COUNTS[f"sweep/{algo.name}"] += 1
-        state0 = algo.init(problem, x0)
+    def cell(spec, x0, key, eta):
+        p = resolve(spec)
+        runner_lib.TRACE_COUNTS[f"{tag}/{algo.name}"] += 1
+        state0 = algo.init(p, x0)
         new_eta = (state0.eta * eta if eta_mode == "scale"
                    else jnp.asarray(eta, jnp.result_type(state0.eta)))
         state0 = state0._replace(eta=new_eta)
         keys = jax.random.split(key, rounds)
-        state, history = body(state0, keys, eta_scale)
+        state, history = body(spec, state0, keys, eta_scale)
         x_hat = algo.output(state)
-        return x_hat, history, problem.global_loss(x_hat) - f_star
+        sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
+        return x_hat, history, sub
 
-    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, 0)),
-                    in_axes=(None, 0, None))
-    return runner_lib._cache_put(key, problem, jax.jit(grid))
+    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, None, 0)),
+                    in_axes=(None, None, 0, None))
+    if problem_axis:
+        grid = jax.vmap(grid, in_axes=(0, 0, None, None))
+    return runner_lib._cache_put(key, jax.jit(grid))
 
 
 def _sweep_fn_algo_comm(algo, problem, rounds: int, eval_output: bool,
                         eta_mode: str):
-    key = ("sweep-algo-comm", algo, id(problem), rounds, eval_output, eta_mode)
-    fn = runner_lib._cache_get(key, problem)
+    key = ("sweep-algo-comm", algo, runner_lib.problem_key(problem), rounds,
+           eval_output, eta_mode)
+    fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
 
     body = runner_lib.comm_executor_body(algo, problem, eval_output)
-    f_star = problem.f_star if problem.f_star is not None else 0.0
+    _, resolve = runner_lib._bind(problem)
     eta_scale = jnp.ones((rounds,), jnp.float32)
 
-    def cell(x0, key, eta, masks, comm0):
+    def cell(spec, x0, key, eta, masks, comm0):
+        p = resolve(spec)
         runner_lib.TRACE_COUNTS[f"sweep-comm/{algo.name}"] += 1
-        state0 = algo.init(problem, x0)
+        state0 = algo.init(p, x0)
         new_eta = (state0.eta * eta if eta_mode == "scale"
                    else jnp.asarray(eta, jnp.result_type(state0.eta)))
         state0 = state0._replace(eta=new_eta, comm=comm0)
         keys = jax.random.split(key, rounds)
         state, (history, bits_up, bits_down) = body(
-            state0, keys, eta_scale, masks)
+            spec, state0, keys, eta_scale, masks)
         x_hat = algo.output(state)
-        return (x_hat, history, problem.global_loss(x_hat) - f_star,
-                bits_up, bits_down)
+        sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
+        return x_hat, history, sub, bits_up, bits_down
 
     # masks batch with the seed axis (one independent schedule per seed)
-    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, 0, None, None)),
-                    in_axes=(None, 0, None, 0, None))
-    return runner_lib._cache_put(key, problem, jax.jit(grid))
+    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, None, 0, None, None)),
+                    in_axes=(None, None, 0, None, 0, None))
+    return runner_lib._cache_put(key, jax.jit(grid))
 
 
-def _sweep_fn_chain(chain, problem, rounds: int):
-    key = ("sweep-chain", chain._key(), id(problem), rounds)
-    fn = runner_lib._cache_get(key, problem)
+def _sweep_fn_chain(chain, problem, rounds: int, problem_axis: bool = False):
+    key = ("sweep-chain", chain._key(), runner_lib.problem_key(problem),
+           rounds, problem_axis)
+    fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
 
     body = chain.executor_body(problem, rounds)
+    _, resolve = runner_lib._bind(problem)
+    tag = "sweep-probs" if problem_axis else "sweep"
     sched = chain._schedule(rounds)
     sel_idx = jnp.asarray(sched.sel_indices, jnp.int32)
-    f_star = problem.f_star if problem.f_star is not None else 0.0
 
-    def cell(x0, key, mult, eta_scale):
-        runner_lib.TRACE_COUNTS[f"sweep/{chain.name}"] += 1
-        states0 = chain.init_states(problem, x0, eta_scale=mult)
-        x_hat, history, kept = body(x0, states0, key, eta_scale)
-        return x_hat, history, problem.global_loss(x_hat) - f_star, kept[sel_idx]
+    def cell(spec, x0, key, mult, eta_scale):
+        p = resolve(spec)
+        runner_lib.TRACE_COUNTS[f"{tag}/{chain.name}"] += 1
+        states0 = chain.init_states(p, x0, eta_scale=mult)
+        x_hat, history, kept = body(spec, x0, states0, key, eta_scale)
+        sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
+        return x_hat, history, sub, kept[sel_idx]
 
-    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, 0, None)),
-                    in_axes=(None, 0, None, None))
-    return runner_lib._cache_put(key, problem, jax.jit(grid))
+    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, None, 0, None)),
+                    in_axes=(None, None, 0, None, None))
+    if problem_axis:
+        grid = jax.vmap(grid, in_axes=(0, 0, None, None, None))
+    return runner_lib._cache_put(key, jax.jit(grid))
 
 
 def _sweep_fn_chain_comm(chain, problem, rounds: int):
-    key = ("sweep-chain-comm", chain._key(), id(problem), rounds)
-    fn = runner_lib._cache_get(key, problem)
+    key = ("sweep-chain-comm", chain._key(), runner_lib.problem_key(problem),
+           rounds)
+    fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
 
     body = chain.executor_body(problem, rounds, comm=True)
+    _, resolve = runner_lib._bind(problem)
     sched = chain._schedule(rounds)
     sel_idx = jnp.asarray(sched.sel_indices, jnp.int32)
-    f_star = problem.f_star if problem.f_star is not None else 0.0
 
-    def cell(x0, key, mult, eta_scale, masks, comm0):
+    def cell(spec, x0, key, mult, eta_scale, masks, comm0):
+        p = resolve(spec)
         runner_lib.TRACE_COUNTS[f"sweep-comm/{chain.name}"] += 1
-        states0 = chain.init_states(problem, x0, eta_scale=mult)
+        states0 = chain.init_states(p, x0, eta_scale=mult)
         x_hat, history, kept, bits_up, bits_down = body(
-            x0, states0, key, eta_scale, masks, comm0)
-        return (x_hat, history, problem.global_loss(x_hat) - f_star,
-                kept[sel_idx], bits_up, bits_down)
+            spec, x0, states0, key, eta_scale, masks, comm0)
+        sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
+        return x_hat, history, sub, kept[sel_idx], bits_up, bits_down
 
-    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, 0, None, None, None)),
-                    in_axes=(None, 0, None, None, 0, None))
-    return runner_lib._cache_put(key, problem, jax.jit(grid))
+    grid = jax.vmap(
+        jax.vmap(cell, in_axes=(None, None, None, 0, None, None, None)),
+        in_axes=(None, None, 0, None, None, 0, None))
+    return runner_lib._cache_put(key, jax.jit(grid))
 
 
 def _sweep_fn_chain_decay(chain, problem, rounds: int):
-    key = ("sweep-chain-decay", chain._key(), id(problem), rounds)
-    fn = runner_lib._cache_get(key, problem)
+    key = ("sweep-chain-decay", chain._key(), runner_lib.problem_key(problem),
+           rounds)
+    fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
 
     body = chain.executor_body(problem, rounds)  # SAME executor as run_sweep
-    f_star = problem.f_star if problem.f_star is not None else 0.0
+    _, resolve = runner_lib._bind(problem)
 
-    def cell(x0, key, eta_scale):
+    def cell(spec, x0, key, eta_scale):
+        p = resolve(spec)
         runner_lib.TRACE_COUNTS[f"sweep-decay/{chain.name}"] += 1
-        states0 = chain.init_states(problem, x0)
-        x_hat, history, _ = body(x0, states0, key, eta_scale)
-        return x_hat, history, problem.global_loss(x_hat) - f_star
+        states0 = chain.init_states(p, x0)
+        x_hat, history, _ = body(spec, x0, states0, key, eta_scale)
+        sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
+        return x_hat, history, sub
 
     # axes: seeds × decay grids (eta_scale rows)
-    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, 0)),
-                    in_axes=(None, 0, None))
-    return runner_lib._cache_put(key, problem, jax.jit(grid))
+    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, None, 0)),
+                    in_axes=(None, None, 0, None))
+    return runner_lib._cache_put(key, jax.jit(grid))
+
+
+def _sweep_fn_methods(methods, problem, rounds: int, eval_output: bool):
+    tag = "+".join(m.name for m in methods)
+    key = ("sweep-methods", methods, runner_lib.problem_key(problem), rounds,
+           eval_output)
+    fn = runner_lib._cache_get(key)
+    if fn is not None:
+        return fn
+
+    body = runner_lib.method_executor_body(methods, problem, eval_output)
+    _, resolve = runner_lib._bind(problem)
+    eta_scale = jnp.ones((rounds,), jnp.float32)
+
+    def cell(spec, x0, state0, key, eta, midx):
+        p = resolve(spec)
+        runner_lib.TRACE_COUNTS[f"sweep-methods/{tag}"] += 1
+        state0 = state0._replace(eta=state0.eta * eta)  # scale semantics
+        keys = jax.random.split(key, rounds)
+        state, history = body(spec, state0, keys, eta_scale, midx)
+        x_hat = jax.lax.switch(
+            midx, [lambda s, m=m: m.output(s) for m in methods], state)
+        sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
+        return x_hat, history, sub
+
+    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, None, None, 0, None)),
+                    in_axes=(None, None, None, 0, None, None))
+    grid = jax.vmap(grid, in_axes=(None, None, 0, None, None, 0))  # methods
+    return runner_lib._cache_put(key, jax.jit(grid))
+
+
+def _as_stacked_specs(problems):
+    """Normalize the ``problems=`` argument into (stacked spec, names)."""
+    from repro.data import spec as spec_lib
+
+    if spec_lib.is_spec(problems):
+        return problems, tuple(
+            [problems.name] * spec_lib.spec_count(problems))
+    specs = []
+    for p in problems:
+        s = runner_lib.as_spec(p)
+        if s is None:
+            raise TypeError(
+                "problems= entries must be ProblemSpecs (or spec-backed "
+                "problems); legacy hand-closure problems cannot batch — "
+                "their data lives in Python closures, not operands")
+        specs.append(s)
+    names = tuple(s.name for s in specs)
+    return spec_lib.stack_specs(specs), names
 
 
 def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
               seeds: Sequence[int], etas: Sequence[float],
               eta_mode: Optional[str] = None, eval_output: bool = True,
-              decay: Optional[dict] = None, comm=None) -> SweepResult:
-    """Run every (seed, η) grid cell in one compiled, vmapped call.
+              decay: Optional[dict] = None, comm=None,
+              problems=None) -> SweepResult:
+    """Run every (seed, η) — and optionally (problem, seed, η) — grid cell
+    in one compiled, vmapped call.
 
     ``seeds`` are PRNG seeds (cell s uses ``jax.random.PRNGKey(seeds[s])``,
     so results match per-call ``runner.run``/``Chain.run`` with those keys);
@@ -209,6 +312,15 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
     ``eta_mode`` defaults to "absolute" for plain algorithms; chains only
     accept "scale" (their grid values are per-stage multipliers), so passing
     "absolute" with a chain is an error rather than a silent reinterpretation.
+
+    ``problems`` adds the problem axis: a sequence of same-family,
+    same-shaped ``ProblemSpec``s (or one pre-stacked spec from
+    ``spec.stack_specs``) — e.g. a ζ grid, a σ grid, or fresh instances.
+    The whole problems × seeds × stepsizes grid runs through ONE compiled
+    executor; results gain a leading problem axis and ``x0`` may be None
+    (each problem then starts from its own ``spec.x0``), a single point
+    (shared), or a [P, …] stack.
+
     ``comm`` (a ``repro.comm.CommConfig``) enables compressed uplinks /
     partial participation / bits accounting; seed s uses the config's mask
     schedule derived with ``fold=s`` (``runner.run(..., comm_masks=...)``
@@ -230,6 +342,45 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
     keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
     etas_arr = jnp.asarray(etas, jnp.float32)
 
+    if problems is not None:
+        if comm is not None:
+            raise NotImplementedError(
+                "comm= with a problems= axis is not wired up yet (per-seed "
+                "mask schedules × problems need a batched-CommState audit); "
+                "sweep problems without comm, or loop comm configs")
+        if decay is not None and not is_chain:
+            raise NotImplementedError(
+                "decay sweeps: wrap the algorithm in a Chain")
+        stacked, prob_names = _as_stacked_specs(problems)
+        n_probs = len(prob_names)
+        if x0 is None:
+            x0_stack = stacked.x0
+        else:
+            x0_stack = jnp.asarray(x0)
+            if x0_stack.ndim == 1:
+                x0_stack = jnp.broadcast_to(
+                    x0_stack, (n_probs,) + x0_stack.shape)
+            elif x0_stack.shape[0] != n_probs:
+                raise ValueError(
+                    f"x0 leading axis {x0_stack.shape[0]} != number of "
+                    f"problems {n_probs}")
+        if is_chain:
+            chain = algo_or_chain
+            eta_sched = chain.eta_schedule(rounds, decay)
+            fn = _sweep_fn_chain(chain, stacked, rounds, problem_axis=True)
+            x_hat, history, final, kept = fn(
+                stacked, x0_stack, keys, etas_arr, eta_sched)
+            return SweepResult(history=history, final_sub=final, x_hat=x_hat,
+                               seeds=seeds, etas=etas, selected_initial=kept,
+                               problems=prob_names)
+        fn = _sweep_fn_algo(algo_or_chain, stacked, rounds, eval_output,
+                            eta_mode, problem_axis=True)
+        x_hat, history, final = fn(stacked, x0_stack, keys, etas_arr)
+        return SweepResult(history=history, final_sub=final, x_hat=x_hat,
+                           seeds=seeds, etas=etas, problems=prob_names)
+
+    spec = runner_lib.as_spec(problem)
+
     if comm is not None:
         from repro.comm import config as comm_cfg
 
@@ -247,12 +398,12 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
                 for s in range(len(seeds))])
             fn = _sweep_fn_chain_comm(chain, problem, rounds)
             x_hat, history, final, kept, bits_up, bits_down = fn(
-                x0, keys, etas_arr, eta_sched, masks, comm0)
+                spec, x0, keys, etas_arr, eta_sched, masks, comm0)
             return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                                seeds=seeds, etas=etas, selected_initial=kept,
                                bits_up=bits_up, bits_down=bits_down)
         fn = _sweep_fn_chain(chain, problem, rounds)
-        x_hat, history, final, kept = fn(x0, keys, etas_arr, eta_sched)
+        x_hat, history, final, kept = fn(spec, x0, keys, etas_arr, eta_sched)
         return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                            seeds=seeds, etas=etas, selected_initial=kept)
 
@@ -265,14 +416,72 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
         fn = _sweep_fn_algo_comm(algo_or_chain, problem, rounds, eval_output,
                                  eta_mode)
         x_hat, history, final, bits_up, bits_down = fn(
-            x0, keys, etas_arr, masks, comm0)
+            spec, x0, keys, etas_arr, masks, comm0)
         return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                            seeds=seeds, etas=etas,
                            bits_up=bits_up, bits_down=bits_down)
     fn = _sweep_fn_algo(algo_or_chain, problem, rounds, eval_output, eta_mode)
-    x_hat, history, final = fn(x0, keys, etas_arr)
+    x_hat, history, final = fn(spec, x0, keys, etas_arr)
     return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                        seeds=seeds, etas=etas)
+
+
+def run_method_sweep(methods, problem, x0, rounds: int, *,
+                     seeds: Sequence[int], etas: Sequence[float] = (1.0,),
+                     eval_output: bool = True) -> SweepResult:
+    """Batch SEVERAL methods through one compiled methods × seeds × η call.
+
+    ``methods`` must be plain algorithms (not chains) whose states share one
+    pytree structure and leaf shapes on this problem — one class at
+    different hyperparameters is the canonical case (SGD at several
+    ``mu_avg``, FedAvg at several ``local_steps``). ``etas`` are
+    MULTIPLIERS on each method's own base stepsize ("scale" semantics: an
+    absolute grid is ambiguous across methods). Results carry the method
+    axis first (``history[m, s, e]`` matches ``runner.run(methods[m], …)``
+    cell-for-cell) and ``SweepResult.methods`` names it.
+
+    Note the cost model (module docstring): the batched ``lax.switch``
+    evaluates every method's round per grid row — ONE compile but M× the
+    warm FLOPs of a per-method sweep loop. Prefer stacking when compile
+    time dominates; prefer looping ``run_sweep`` per method for long warm
+    grids.
+    """
+    methods = tuple(methods)
+    if not methods:
+        raise ValueError("run_method_sweep needs at least one method")
+    for m in methods:
+        if isinstance(m, chain_lib.Chain):
+            raise TypeError("run_method_sweep stacks plain algorithms; "
+                            "chains batch through run_sweep directly")
+    seeds = tuple(int(s) for s in seeds)
+    etas = tuple(float(e) for e in etas)
+    if not seeds:
+        raise ValueError("run_method_sweep needs at least one seed")
+
+    states = [m.init(problem, x0) for m in methods]
+    td0 = jax.tree_util.tree_structure(states[0])
+    shapes0 = [jnp.shape(l) for l in jax.tree_util.tree_leaves(states[0])]
+    for m, st in zip(methods[1:], states[1:]):
+        td = jax.tree_util.tree_structure(st)
+        shapes = [jnp.shape(l) for l in jax.tree_util.tree_leaves(st)]
+        if td != td0 or shapes != shapes0:
+            raise TypeError(
+                f"method {m.name!r} has a state structure incompatible with "
+                f"{methods[0].name!r}: multi-method stacking needs one state "
+                f"pytree structure and leaf shapes across all methods "
+                f"(same algorithm class at different hyperparameters)")
+    state0 = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+    etas_arr = jnp.asarray(etas, jnp.float32)
+    midx = jnp.arange(len(methods), dtype=jnp.int32)
+    spec = runner_lib.as_spec(problem)
+
+    fn = _sweep_fn_methods(methods, problem, rounds, eval_output)
+    x_hat, history, final = fn(spec, x0, state0, keys, etas_arr, midx)
+    return SweepResult(history=history, final_sub=final, x_hat=x_hat,
+                       seeds=seeds, etas=etas,
+                       methods=tuple(m.name for m in methods))
 
 
 def run_decay_sweep(chain, problem, x0, rounds: int, *,
@@ -298,13 +507,16 @@ def run_decay_sweep(chain, problem, x0, rounds: int, *,
                                     "decay_factor": f})
         for f in factors])
     fn = _sweep_fn_chain_decay(chain, problem, rounds)
-    x_hat, history, final = fn(x0, keys, eta_rows)
+    x_hat, history, final = fn(runner_lib.as_spec(problem), x0, keys,
+                               eta_rows)
     return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                        seeds=seeds, etas=factors)
 
 
 def best_cell(result: SweepResult):
-    """(seed_idx, eta_idx) of the lowest finite final suboptimality.
+    """Grid index of the lowest finite final suboptimality —
+    ``(seed_idx, eta_idx)``, with a leading problem/method index when the
+    sweep had one.
 
     Raises if every cell diverged — callers must not mistake a nan/inf run
     for a tuned result.

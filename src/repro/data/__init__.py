@@ -1,4 +1,8 @@
-"""Federated data substrate: problems, partitioners, synthetic datasets."""
-from repro.data import partition, problems, synthetic_vision, tokens
+"""Federated data substrate: problem specs, partitioners, synthetic datasets.
 
-__all__ = ["partition", "problems", "synthetic_vision", "tokens"]
+``spec`` (ProblemSpec — problems as executor operands) is the primary
+problem API; ``problems`` keeps the legacy closure interface as a shim.
+"""
+from repro.data import partition, problems, spec, synthetic_vision, tokens
+
+__all__ = ["partition", "problems", "spec", "synthetic_vision", "tokens"]

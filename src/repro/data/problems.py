@@ -1,15 +1,29 @@
-"""Federated optimization problems with controllable heterogeneity.
+"""Federated optimization problems — the legacy closure API over ProblemSpec.
 
-The paper's setting (§2): ``F(x) = (1/N) Σ_i F_i(x)`` with
+The paper's setting (§2): ``F(x) = (1/N) Σ_i F_i(x)`` with β-smooth client
+objectives (Assumption B.4), heterogeneity ζ² = max_i sup_x ||∇F − ∇F_i||²
+(B.5), stochastic gradient/value oracles with variance σ²/σ_F² (B.6/B.7) and
+function-value deviation ζ_F (B.8). Every problem exposes *exact* constants
+(μ, β, ζ, Δ, D, F*), which lets tests and benchmarks compare measured
+suboptimality against the executable rate bounds in ``repro.core.theory``.
 
-  * β-smooth client objectives (Assumption B.4),
-  * heterogeneity ζ² = max_i sup_x ||∇F(x) − ∇F_i(x)||² (Assumption B.5),
-  * stochastic gradient oracle with variance ≤ σ² (B.6),
-  * stochastic function-value oracle with variance ≤ σ_F² and deviation ζ_F (B.7/B.8).
+API status — **``repro.data.spec.ProblemSpec`` is the primary problem API**.
+A spec is a pytree of arrays (curvature, client offsets, data shards, and
+the constants as leaves) whose oracles dispatch through a static family
+table, so the single-compile executors in ``core.runner``/``core.chain``/
+``core.sweep`` take the problem as an OPERAND: any same-shaped instance
+reuses one compile, and ``run_sweep(problems=...)`` vmaps a whole
+ζ × σ × instance grid through one compiled call (see
+``examples/problem_sweep.py``).
 
-Every problem here exposes *exact* problem constants (μ, β, ζ, Δ, D, F*), which
-is what lets the tests and benchmarks compare measured suboptimality against
-the executable rate bounds in ``repro.core.theory``.
+``FederatedProblem`` remains as a thin deprecation shim: the builders here
+(``quadratic_problem``/``perturbed_problem``/``logreg_problem``/…) construct
+a spec and wrap it — the shim's callables ARE the spec's family oracles, so
+shim-built and spec-built runs are bit-exact (tested in
+``tests/test_problem_spec.py``). Executors unwrap the ``.spec`` attribute
+and run the operand path; a hand-built ``FederatedProblem`` with custom
+closures (no spec — e.g. ``data.vision_problem``) still works through the
+legacy per-instance executor path.
 
 Two constructions give exact ζ control:
 
@@ -22,17 +36,36 @@ Two constructions give exact ζ control:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import tree_math as tm
+from repro.data.spec import (  # re-exported: spec is the primary API
+    ProblemSpec, general_convex_spec, logreg_spec, perturbed_spec, pl_spec,
+    quadratic_spec, register_base, solve_logreg_optimum, stack_specs,
+)
+
+__all__ = [
+    "FederatedProblem", "ProblemSpec", "problem_from_spec", "without_spec",
+    "quadratic_problem", "perturbed_problem", "general_convex_problem",
+    "pl_problem", "logreg_problem", "quadratic_spec", "perturbed_spec",
+    "general_convex_spec", "pl_spec", "logreg_spec", "stack_specs",
+    "register_base", "solve_logreg_optimum",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class FederatedProblem:
-    """A federated optimization problem (static; close arrays over callables).
+    """Deprecation shim: a federated problem as closures over arrays.
+
+    Prefer ``ProblemSpec`` (``repro.data.spec``) — executors treat specs as
+    operands and never re-trace per instance. Shims built by the module
+    builders carry their spec in ``.spec`` and get the operand path
+    automatically; ``spec=None`` marks a legacy hand-closure problem, which
+    executors compile per instance (identity-keyed, weakly referenced).
 
     Oracles follow the paper's client query model: one call = one stochastic
     sample; algorithms average K calls per round (Algo 7 ``Grad``).
@@ -56,6 +89,7 @@ class FederatedProblem:
     f_star: Optional[float] = None  # F(x*) if known
     x_star: Optional[jnp.ndarray] = None  # a global optimum if known
     name: str = "problem"
+    spec: Optional[ProblemSpec] = None  # the operand form (None = legacy)
 
     # convenience ----------------------------------------------------------
     def kappa(self):
@@ -63,7 +97,13 @@ class FederatedProblem:
 
     def suboptimality(self, params):
         f = self.global_loss(params)
-        return f - (self.f_star if self.f_star is not None else 0.0)
+        if self.f_star is None:
+            warnings.warn(
+                f"problem {self.name!r} has no known F*: suboptimality() "
+                f"returns the RAW objective F(x) (F* treated as 0). Solve or "
+                f"supply f_star for true gaps.", stacklevel=2)
+            return f
+        return f - self.f_star
 
     def global_grad(self, params):
         return jax.grad(self.global_loss)(params)
@@ -79,19 +119,45 @@ class FederatedProblem:
         return float(tm.tree_sq_norm(tm.tree_sub(x0, self.x_star)))
 
 
-# ---------------------------------------------------------------------------
-# Quadratic problems: F_i(x) = 0.5 x^T A x - b_i^T x   (shared curvature)
-# ---------------------------------------------------------------------------
+def problem_from_spec(spec: ProblemSpec, *, name: Optional[str] = None
+                      ) -> FederatedProblem:
+    """Wrap a spec in the legacy ``FederatedProblem`` interface.
 
-def _spread_directions(key, num_clients, dim):
-    """Unit-norm directions u_i with Σ u_i = 0 and max ||u_i|| = 1."""
-    u = jax.random.normal(key, (num_clients, dim))
-    u = u - jnp.mean(u, axis=0, keepdims=True)
-    # normalize so the largest has norm exactly 1
-    norms = jnp.linalg.norm(u, axis=1)
-    u = u / jnp.maximum(jnp.max(norms), 1e-12)
-    return u
+    The callables are the spec's own family oracles (bound methods capturing
+    the spec), so any code path — shim closures or spec operands — runs the
+    identical math. Executors unwrap ``.spec`` and use the operand path.
+    """
+    f_star = float(spec.consts["f_star"]) if spec.f_star_known else None
+    return FederatedProblem(
+        num_clients=spec.num_clients,
+        grad_oracle=spec.grad_oracle,
+        value_oracle=spec.value_oracle,
+        client_loss=spec.client_loss,
+        global_loss=spec.global_loss,
+        init_params=spec.init_params,
+        mu=float(spec.consts["mu"]),
+        beta=float(spec.consts["beta"]),
+        zeta=float(spec.consts["zeta"]),
+        zeta_f=float(spec.consts["zeta_f"]),
+        sigma=float(spec.consts["sigma"]),
+        sigma_f=float(spec.consts["sigma_f"]),
+        f_star=f_star,
+        x_star=spec.x_star if spec.x_star_known else None,
+        name=name or spec.name,
+        spec=spec,
+    )
 
+
+def without_spec(problem: FederatedProblem) -> FederatedProblem:
+    """The problem with its spec detached — executors then take the legacy
+    per-instance closure path. Exists for the spec↔closure equivalence tests
+    and as an escape hatch while the closure path is deprecated."""
+    return dataclasses.replace(problem, spec=None)
+
+
+# ---------------------------------------------------------------------------
+# builders (legacy signatures, spec-backed)
+# ---------------------------------------------------------------------------
 
 def quadratic_problem(
     key,
@@ -106,7 +172,7 @@ def quadratic_problem(
     init_scale: float = 5.0,
     curvature_spread: float = 0.0,
 ) -> FederatedProblem:
-    """Strongly convex federated quadratic with *exact* ζ.
+    """Strongly convex federated quadratic with *exact* ζ (spec-backed shim).
 
     Shared A = diag(eigs in [μ, β]); b_i = b̄ + ζ·u_i, Σu_i = 0, max||u_i|| = 1
     ⇒ ∇F_i(x) − ∇F(x) = ζ·u_i  (independent of x) ⇒ ζ² exactly Assumption B.5.
@@ -118,86 +184,17 @@ def quadratic_problem(
     Def. 5.3 (ζ, c)-heterogeneity) and the reported ``zeta`` is the value at
     radius ``init_scale`` around x*.
     """
-    k_eig, k_b, k_u, k_c, k_x0 = jax.random.split(key, 5)
-    eigs = jnp.linspace(mu, beta, dim)
-    b_bar = jax.random.normal(k_b, (dim,))
-    u = _spread_directions(k_u, num_clients, dim)
-    b = b_bar[None, :] + zeta * u  # [N, dim]
+    spec = quadratic_spec(
+        key, num_clients=num_clients, dim=dim, mu=mu, beta=beta, zeta=zeta,
+        sigma=sigma, sigma_f=sigma_f, init_scale=init_scale,
+        curvature_spread=curvature_spread)
+    return problem_from_spec(
+        spec, name=f"quadratic(mu={mu},beta={beta},zeta={zeta})")
 
-    if curvature_spread > 0:
-        d_i = _spread_directions(k_c, num_clients, dim)  # Σ = 0, max-norm 1
-        scale_i = jnp.clip(1.0 + curvature_spread * d_i, 0.2, 2.0)
-        a_i = eigs[None, :] * scale_i  # [N, dim]
-        a_bar = jnp.mean(a_i, axis=0)
-    else:
-        a_i = jnp.broadcast_to(eigs[None, :], (num_clients, dim))
-        a_bar = eigs
-
-    x_star = b_bar / a_bar
-    f_star = float(0.5 * jnp.sum(a_bar * x_star**2) - jnp.dot(b_bar, x_star))
-
-    def client_loss(x, i):
-        return 0.5 * jnp.sum(a_i[i] * x**2) - jnp.dot(b[i], x)
-
-    def global_loss(x):
-        return 0.5 * jnp.sum(a_bar * x**2) - jnp.dot(b_bar, x)
-
-    def grad_oracle(x, i, rng):
-        g = a_i[i] * x - b[i]
-        if sigma > 0:
-            g = g + (sigma / jnp.sqrt(dim)) * jax.random.normal(rng, (dim,))
-        return g
-
-    def value_oracle(x, i, rng):
-        v = client_loss(x, i)
-        if sigma_f > 0:
-            v = v + sigma_f * jax.random.normal(rng, ())
-        return v
-
-    x0_dir = jax.random.normal(k_x0, (dim,))
-    x0_base = x_star + init_scale * x0_dir / jnp.linalg.norm(x0_dir)
-
-    def init_params(rng):
-        del rng
-        return x0_base
-
-    # ζ_F: sup_x |F_i - F| = sup |⟨b̄-b_i, x⟩| unbounded; report on the unit
-    # D-ball around x*: ζ_F ≈ ζ·(D + ||x*||) — used only as a scale hint.
-    zeta_f = float(zeta * (init_scale + jnp.linalg.norm(x_star)))
-
-    zeta_eff = zeta
-    if curvature_spread > 0:
-        # ζ at radius init_scale around x* (Def. 5.3 style)
-        radius = init_scale + float(jnp.linalg.norm(x_star))
-        spread_norm = float(jnp.max(jnp.linalg.norm(a_i - a_bar[None], axis=1)))
-        zeta_eff = zeta + spread_norm * radius
-
-    return FederatedProblem(
-        num_clients=num_clients,
-        grad_oracle=grad_oracle,
-        value_oracle=value_oracle,
-        client_loss=client_loss,
-        global_loss=global_loss,
-        init_params=init_params,
-        mu=mu,
-        beta=beta,
-        zeta=zeta_eff,
-        zeta_f=zeta_f,
-        sigma=sigma,
-        sigma_f=sigma_f,
-        f_star=f_star,
-        x_star=x_star,
-        name=f"quadratic(mu={mu},beta={beta},zeta={zeta})",
-    )
-
-
-# ---------------------------------------------------------------------------
-# Linear-perturbation problems: F_i = F + <delta_i, x>, Σ delta_i = 0
-# ---------------------------------------------------------------------------
 
 def perturbed_problem(
     key,
-    base_loss: Callable,
+    base_loss,
     *,
     dim: int,
     num_clients: int = 8,
@@ -213,71 +210,20 @@ def perturbed_problem(
 ) -> FederatedProblem:
     """F_i(x) = base(x) + ζ⟨u_i, x⟩ with Σu_i=0 ⇒ global F == base exactly.
 
-    Lets us build *general convex* (μ=0) and *PL nonconvex* federated problems
-    with exact heterogeneity: ∇F_i − ∇F = ζ·u_i.
+    ``base_loss`` may be a registered base id (str) or a plain function
+    (auto-registered into the spec family table — see ``spec.base_id_for``).
     """
-    k_u, k_x0 = jax.random.split(key)
-    u = _spread_directions(k_u, num_clients, dim)
-
-    def client_loss(x, i):
-        return base_loss(x) + zeta * jnp.dot(u[i], x)
-
-    def global_loss(x):
-        return base_loss(x)
-
-    base_grad = jax.grad(base_loss)
-
-    def grad_oracle(x, i, rng):
-        g = base_grad(x) + zeta * u[i]
-        if sigma > 0:
-            g = g + (sigma / jnp.sqrt(dim)) * jax.random.normal(rng, (dim,))
-        return g
-
-    def value_oracle(x, i, rng):
-        v = client_loss(x, i)
-        if sigma_f > 0:
-            v = v + sigma_f * jax.random.normal(rng, ())
-        return v
-
-    x0_dir = jax.random.normal(k_x0, (dim,))
-    x0_base = init_scale * x0_dir / jnp.linalg.norm(x0_dir)
-    if x_star is not None:
-        x0_base = x_star + x0_base
-
-    def init_params(rng):
-        del rng
-        return x0_base
-
-    return FederatedProblem(
-        num_clients=num_clients,
-        grad_oracle=grad_oracle,
-        value_oracle=value_oracle,
-        client_loss=client_loss,
-        global_loss=global_loss,
-        init_params=init_params,
-        mu=mu,
-        beta=beta,
-        zeta=zeta,
-        sigma=sigma,
-        sigma_f=sigma_f,
-        f_star=f_star,
-        x_star=x_star,
-        name=name,
-    )
+    spec = perturbed_spec(
+        key, base_loss, dim=dim, num_clients=num_clients, mu=mu, beta=beta,
+        zeta=zeta, sigma=sigma, sigma_f=sigma_f, f_star=f_star,
+        x_star=x_star, init_scale=init_scale, name=name)
+    return problem_from_spec(spec, name=name)
 
 
 def general_convex_problem(key, **kw):
     """Smooth general-convex base: log-cosh (1-smooth, not strongly convex)."""
-    dim = kw.pop("dim", 16)
-
-    def base(x):
-        # logcosh is 1-smooth, convex, minimized at 0 with value 0
-        return jnp.sum(jnp.log(jnp.cosh(x)))
-
-    return perturbed_problem(
-        key, base, dim=dim, mu=0.0, beta=1.0, f_star=0.0,
-        x_star=jnp.zeros((dim,)), name="general_convex(logcosh)", **kw,
-    )
+    spec = general_convex_spec(key, **kw)
+    return problem_from_spec(spec, name="general_convex(logcosh)")
 
 
 def pl_problem(key, **kw):
@@ -285,20 +231,9 @@ def pl_problem(key, **kw):
 
     Classic PL-but-nonconvex example; PL constant μ = 1/32, smoothness β = 8.
     """
-    dim = kw.pop("dim", 8)
+    spec = pl_spec(key, **kw)
+    return problem_from_spec(spec, name="pl(x^2+3sin^2)")
 
-    def base(x):
-        return jnp.sum(x**2 + 3.0 * jnp.sin(x) ** 2)
-
-    return perturbed_problem(
-        key, base, dim=dim, mu=1.0 / 32.0, beta=8.0, f_star=0.0,
-        x_star=jnp.zeros((dim,)), name="pl(x^2+3sin^2)", **kw,
-    )
-
-
-# ---------------------------------------------------------------------------
-# Federated regularized logistic regression (paper §6 / App I.1)
-# ---------------------------------------------------------------------------
 
 def logreg_problem(
     key,
@@ -311,83 +246,21 @@ def logreg_problem(
     estimate_zeta: bool = False,
     zeta_probes: int = 8,
     zeta_probe_radius: float = 1.0,
+    solve_f_star: bool = True,
 ) -> FederatedProblem:
     """Federated L2-regularized logistic regression on pre-partitioned data.
 
     One oracle call = one minibatch of ``oracle_batch_frac`` of the client's
     local data (the paper's convex experiments use 1% minibatches).
 
-    ``estimate_zeta=True`` measures the heterogeneity constants via
-    ``core.heterogeneity`` instead of reporting the vacuous ζ = 0: ζ (and
-    ζ_F) are maximized over the init point plus ``zeta_probes`` random
-    points in a ``zeta_probe_radius`` ball around it (``key`` seeds the
-    probes) — a lower bound on the Assumption B.5 sup, which is what the
-    theory-vs-measured comparisons need to be non-trivial on real data.
+    ``solve_f_star`` (default True) populates F*/x* via a high-precision
+    float64 Newton solve, so suboptimality reporting is a true gap instead of
+    the raw loss. ``estimate_zeta=True`` measures ζ/ζ_F via
+    ``core.heterogeneity`` probes around the init point (``key`` seeds them).
     """
-    num_clients, n_per, dim = features.shape
-    batch = max(1, int(round(oracle_batch_frac * n_per)))
-
-    def _loss_on(w, X, y):
-        logits = X @ w
-        # numerically stable BCE-with-logits
-        per = jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
-        return jnp.mean(per) + 0.5 * l2 * jnp.sum(w**2)
-
-    def client_loss(w, i):
-        return _loss_on(w, features[i], labels[i])
-
-    def global_loss(w):
-        losses = jax.vmap(lambda X, y: _loss_on(w, X, y))(features, labels)
-        return jnp.mean(losses)
-
-    def _batch(i, rng):
-        idx = jax.random.randint(rng, (batch,), 0, n_per)
-        return features[i][idx], labels[i][idx]
-
-    def grad_oracle(w, i, rng):
-        X, y = _batch(i, rng)
-        return jax.grad(_loss_on)(w, X, y)
-
-    def value_oracle(w, i, rng):
-        X, y = _batch(i, rng)
-        v = _loss_on(w, X, y)
-        if sigma_f > 0:
-            v = v + sigma_f * jax.random.normal(rng, ())
-        return v
-
-    def init_params(rng):
-        del rng
-        return jnp.zeros((dim,))  # paper initializes at 0 (App I.1)
-
-    # β of logreg ≤ 0.25·max||x||² + l2 ; report a sound bound
-    beta = float(0.25 * jnp.max(jnp.sum(features**2, axis=-1)) + l2)
-
-    problem = FederatedProblem(
-        num_clients=num_clients,
-        grad_oracle=grad_oracle,
-        value_oracle=value_oracle,
-        client_loss=client_loss,
-        global_loss=global_loss,
-        init_params=init_params,
-        mu=l2,
-        beta=beta,
-        zeta=0.0,  # vacuous unless estimate_zeta is set
-        sigma_f=sigma_f,
-        f_star=None,
-        name=f"logreg(l2={l2})",
-    )
-    if estimate_zeta:
-        from repro.core import heterogeneity
-
-        x_init = init_params(None)
-        keys = jax.random.split(key, max(zeta_probes, 1))
-        probes = [x_init] + [
-            x_init + zeta_probe_radius * jax.random.normal(k, (dim,))
-            / jnp.sqrt(float(dim))
-            for k in keys[:zeta_probes]
-        ]
-        zeta = float(heterogeneity.estimate_zeta(problem, probes))
-        zeta_f = float(max(float(heterogeneity.zeta_f_at(problem, x))
-                           for x in probes))
-        problem = dataclasses.replace(problem, zeta=zeta, zeta_f=zeta_f)
-    return problem
+    spec = logreg_spec(
+        key, features=features, labels=labels, l2=l2,
+        oracle_batch_frac=oracle_batch_frac, sigma_f=sigma_f,
+        estimate_zeta=estimate_zeta, zeta_probes=zeta_probes,
+        zeta_probe_radius=zeta_probe_radius, solve_f_star=solve_f_star)
+    return problem_from_spec(spec, name=f"logreg(l2={l2})")
