@@ -1,0 +1,169 @@
+"""Bench regression gate: warm-path timings vs the committed baselines.
+
+Re-runs the sweep and problem-sweep smokes (``benchmarks/sweep_bench.py``,
+``benchmarks/problem_sweep.py`` — both rewrite their ``BENCH_*.json``) and
+fails if any WARM-path metric regresses more than ``--threshold`` (default
+2.5×) against the baselines committed at the repo root. Cold/compile times
+are machine- and cache-noisy, so only warm metrics gate:
+
+* ``BENCH_sweep.json``:          ``methods[*].sweep_warm_s``
+* ``BENCH_problem_sweep.json``:  ``methods[*].grid_warm_us``,
+                                 ``method_stacking.warm_us``,
+                                 ``comm_problems.warm_us``
+
+The warm metrics are tens of milliseconds, where a noisy-neighbor scheduler
+blip alone can exceed the threshold — so each harness runs ``--samples``
+times (default 2) and the per-metric MINIMUM gates (the minimum of a warm
+timing estimates the true cost; the mean estimates the machine's load).
+
+Re-trace discipline is part of the gate: ``problem_sweep`` raises internally
+if any executor traces more than once across its grids, and this script
+re-runs one warm sweep afterwards and fails if ``runner.TRACE_COUNTS`` moved
+at all (warm re-trace count must be exactly 0).
+
+The baseline files are restored afterwards (the gate must be idempotent —
+it compares against the COMMITTED numbers, not its own output); pass
+``--keep-new`` to keep the fresh results on disk instead, e.g. when
+intentionally re-baselining.
+
+  PYTHONPATH=src python -m benchmarks.check_regression [--threshold X]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.core import runner
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+SWEEP_JSON = os.path.join(ROOT, "BENCH_sweep.json")
+PROBLEM_JSON = os.path.join(ROOT, "BENCH_problem_sweep.json")
+
+
+def _load(path):
+    with open(path) as f:
+        raw = f.read()
+    return raw, json.loads(raw)
+
+
+def _warm_metrics_sweep(doc):
+    return {f"sweep/{m}/sweep_warm_s": v["sweep_warm_s"]
+            for m, v in doc["methods"].items()}
+
+
+def _warm_metrics_problem(doc):
+    out = {f"problem_sweep/{m}/grid_warm_us": v["grid_warm_us"]
+           for m, v in doc["methods"].items()}
+    if "method_stacking" in doc:
+        out["problem_sweep/method_stacking/warm_us"] = (
+            doc["method_stacking"]["warm_us"])
+    if "comm_problems" in doc:
+        out["problem_sweep/comm_problems/warm_us"] = (
+            doc["comm_problems"]["warm_us"])
+    return out
+
+
+def _compare(base, fresh, threshold):
+    failures, rows = [], []
+    for key, base_v in sorted(base.items()):
+        fresh_v = fresh.get(key)
+        if fresh_v is None:
+            # a metric vanished from the harness output — that's a harness
+            # change, surface it rather than silently shrinking the gate
+            failures.append(f"{key}: missing from fresh run")
+            continue
+        ratio = fresh_v / base_v if base_v > 0 else float("inf")
+        status = "OK" if ratio <= threshold else "REGRESSED"
+        rows.append(f"{status:9s} {key}: base={base_v:.4g} "
+                    f"fresh={fresh_v:.4g} ratio={ratio:.2f}x")
+        if ratio > threshold:
+            failures.append(
+                f"{key}: {ratio:.2f}x slower than baseline "
+                f"(threshold {threshold}x)")
+    return failures, rows
+
+
+def _assert_zero_warm_retrace():
+    """One more warm sweep after everything compiled: TRACE_COUNTS must not
+    move by a single trace."""
+    import jax
+
+    from repro.core import algorithms as A, sweep
+    from repro.data import problems
+
+    p = problems.quadratic_spec(jax.random.PRNGKey(0), num_clients=8, dim=16,
+                                mu=0.1, beta=1.0, zeta=1.0, sigma=0.2)
+    algo = A.SGD(eta=0.5, k=16, mu_avg=0.1)
+    run = lambda: sweep.run_sweep(  # noqa: E731
+        algo, p, p.x0, 10, seeds=(0, 1), etas=(0.5, 1.0), eta_mode="scale")
+    run()  # compile (or reuse problem_sweep's compile)
+    before = dict(runner.TRACE_COUNTS)
+    run()
+    after = dict(runner.TRACE_COUNTS)
+    if after != before:
+        moved = {k: after[k] - before.get(k, 0) for k in after
+                 if after[k] != before.get(k, 0)}
+        raise AssertionError(
+            f"warm re-run re-traced executors (re-trace count must stay "
+            f"exactly 0): {moved}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float, default=2.5,
+                    help="max allowed warm-path slowdown vs baseline")
+    ap.add_argument("--samples", type=int, default=2,
+                    help="harness runs per gate; the per-metric minimum "
+                    "gates (damps scheduler noise on shared runners)")
+    ap.add_argument("--keep-new", action="store_true",
+                    help="keep the freshly-recorded BENCH files on disk "
+                    "(re-baselining) instead of restoring the committed ones")
+    args = ap.parse_args(argv)
+
+    missing = [p for p in (SWEEP_JSON, PROBLEM_JSON) if not os.path.exists(p)]
+    if missing:
+        print(f"no committed baseline(s): {missing}", file=sys.stderr)
+        sys.exit(2)
+    sweep_raw, sweep_base = _load(SWEEP_JSON)
+    prob_raw, prob_base = _load(PROBLEM_JSON)
+    base = {**_warm_metrics_sweep(sweep_base),
+            **_warm_metrics_problem(prob_base)}
+
+    from benchmarks import problem_sweep, sweep_bench
+
+    fresh: dict = {}
+    try:
+        for _ in range(max(1, args.samples)):
+            # each sample must pay its own cold trace: problem_sweep asserts
+            # EXACTLY one compile per executor, which a warm module-level
+            # cache from the previous sample would turn into zero
+            runner.clear_executor_cache()
+            sweep_bench.main(quick=True)
+            problem_sweep.main(quick=True)  # raises on any grid re-trace
+            _, sweep_fresh = _load(SWEEP_JSON)
+            _, prob_fresh = _load(PROBLEM_JSON)
+            sample = {**_warm_metrics_sweep(sweep_fresh),
+                      **_warm_metrics_problem(prob_fresh)}
+            fresh = {k: min(v, fresh.get(k, v)) for k, v in sample.items()}
+        _assert_zero_warm_retrace()
+    finally:
+        if not args.keep_new:
+            with open(SWEEP_JSON, "w") as f:
+                f.write(sweep_raw)
+            with open(PROBLEM_JSON, "w") as f:
+                f.write(prob_raw)
+    failures, rows = _compare(base, fresh, args.threshold)
+    print("\n".join(rows))
+    if failures:
+        print("\nbench-gate FAILED:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        sys.exit(1)
+    print(f"\nbench-gate OK: {len(rows)} warm metrics within "
+          f"{args.threshold}x of baseline, 0 warm re-traces")
+
+
+if __name__ == "__main__":
+    main()

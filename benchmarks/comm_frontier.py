@@ -10,7 +10,10 @@ in bits). Everything lands in ``BENCH_comm.json`` at the repo root.
 
 All methods share compiled executors: comm config is operand data, so the
 whole frontier (compressors × participation × methods) costs one trace per
-(algorithm, problem) pair.
+(algorithm, problem) pair. The ``problems_axis`` section rides the bits
+frontier over a whole ζ heterogeneity grid in ONE compiled call —
+``run_sweep(problems=..., comm=...)`` with per-(problem, seed) mask
+schedules — and asserts the single compile via ``runner.TRACE_COUNTS``.
 """
 from __future__ import annotations
 
@@ -20,9 +23,9 @@ import os
 import jax
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import assert_single_compile, emit, timed, trace_deltas
 from repro.comm import CommConfig
-from repro.core import algorithms as A, chain, sweep
+from repro.core import algorithms as A, chain, runner, sweep
 from repro.data import problems
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -109,6 +112,49 @@ def main(quick: bool = True):
         rows.append(emit(f"comm/{name}", us,
                          f"sub={final:.3e};bits={total_bits:.3e};"
                          f"bits_to_target={to_s}"))
+
+    # -- comm on the problems axis: the ζ grid through ONE compiled call ----
+    zetas = (0.2, 1.0, 5.0)
+    specs = [build(zeta=z) for z in zetas]
+    cfg = CommConfig(compressor="qsgd", qsgd_bits=4, participation=0.5)
+    frontier_methods = {
+        "sgd": A.SGD(eta=0.5, k=32, mu_avg=float(p.mu), name="sgd"),
+        "fedavg->sgd": chain.fedchain(
+            A.FedAvg.from_k(32, eta=0.5),
+            A.SGD(eta=0.5, k=32, mu_avg=float(p.mu)),
+            selection_k=32, name="fedavg->sgd"),
+    }
+    report["problems_axis"] = {
+        "zetas": list(zetas),
+        "config": cfg.name,
+        "methods": {},
+    }
+    for name, algo in frontier_methods.items():
+        before = dict(runner.TRACE_COUNTS)
+        res, us = timed(lambda a=algo: sweep.run_sweep(
+            a, None, x0, rounds, seeds=seeds, etas=(1.0,), eta_mode="scale",
+            comm=cfg, problems=specs))
+        deltas = trace_deltas(before)
+        # warm second call (timed warms before timing) must add nothing;
+        # the cold call exactly one trace — comm config AND problem
+        # instances are operands
+        assert_single_compile(deltas, [f"sweep-comm-probs/{algo.name}"],
+                              what="comm problems axis")
+        per_zeta = {}
+        for pi, z in enumerate(zetas):
+            med = np.median(np.asarray(res.history)[pi, :, 0, :], axis=0)
+            cum = np.median(res.cumulative_bits()[pi, :, 0, :], axis=0)
+            per_zeta[f"zeta={z}"] = {
+                "final_sub": float(med[-1]),
+                "total_bits": float(cum[-1]),
+                "bits_to_target": _bits_to_target(cum, med, target),
+            }
+        report["problems_axis"]["methods"][name] = {
+            "us_per_grid": us, "trace_deltas": deltas, "per_zeta": per_zeta}
+        rows.append(emit(
+            f"comm/problems_axis/{name}", us,
+            ";".join(f"z={z}:sub={v['final_sub']:.2e}"
+                     for z, v in zip(zetas, per_zeta.values()))))
 
     with open(os.path.join(ROOT, "BENCH_comm.json"), "w") as f:
         json.dump(report, f, indent=2)

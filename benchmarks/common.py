@@ -39,3 +39,31 @@ def emit(name: str, us_per_call: float, derived) -> str:
     row = f"{name},{us_per_call:.1f},{derived}"
     print(row)
     return row
+
+
+def walled(fn):
+    """(result, wall_us) of one call, blocking on the result's ``history``
+    (or the result itself) so compile + compute are both inside the wall."""
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(getattr(out, "history", out))
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def trace_deltas(before: dict) -> dict:
+    """TRACE_COUNTS movement since the ``before`` snapshot (only nonzero)."""
+    from repro.core import runner
+
+    return {k: v - before.get(k, 0) for k, v in runner.TRACE_COUNTS.items()
+            if v != before.get(k, 0)}
+
+
+def assert_single_compile(deltas: dict, keys, what: str = "grid") -> None:
+    """Every named executor must have traced EXACTLY once across the grid —
+    the single-compile contract the sweep harnesses (and their CI legs)
+    enforce."""
+    for k in keys:
+        if deltas.get(k, 0) != 1:
+            raise AssertionError(
+                f"executor {k!r} traced {deltas.get(k, 0)} times across the "
+                f"{what} (expected exactly 1): counts={deltas}")

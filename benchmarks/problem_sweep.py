@@ -11,10 +11,13 @@ executors take problems as operands, so
       redesign removes, measured here for contrast.
 
 Also demos multi-method stacking (SGD at several ``mu_avg`` through one
-``lax.switch``-dispatched executor). Asserts ``runner.TRACE_COUNTS`` stays
-at one compile per executor across the whole grid — the CI ``problem-sweep``
-leg runs this in miniature and fails on any re-trace. Everything lands in
-``BENCH_problem_sweep.json`` at the repo root.
+``lax.switch``-dispatched executor) and the comm × problems composition:
+``run_sweep(problems=..., comm=...)`` runs the bits-accounted QSGD +
+partial-participation frontier over the SAME ζ × σ grid in one compile
+(per-(problem, seed) mask schedules are scan data). Asserts
+``runner.TRACE_COUNTS`` stays at one compile per executor across the whole
+grid — the CI ``problem-sweep`` leg runs this in miniature and fails on any
+re-trace. Everything lands in ``BENCH_problem_sweep.json`` at the repo root.
 """
 from __future__ import annotations
 
@@ -25,7 +28,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import assert_single_compile, emit, trace_deltas, walled
 from repro.core import algorithms as A, chain, runner, sweep
 from repro.data import problems
 
@@ -40,21 +43,6 @@ def build_grid(zetas, sigmas):
             zeta=z, sigma=s, sigma_f=0.05)
         for z in zetas for s in sigmas
     ], [f"zeta={z},sigma={s}" for z in zetas for s in sigmas]
-
-
-def _walled(fn):
-    t0 = time.perf_counter()
-    out = fn()
-    jax.block_until_ready(getattr(out, "history", out))
-    return out, (time.perf_counter() - t0) * 1e6
-
-
-def _assert_single_compile(deltas, keys):
-    for k in keys:
-        if deltas.get(k, 0) != 1:
-            raise AssertionError(
-                f"executor {k!r} traced {deltas.get(k, 0)} times across the "
-                f"problem grid (expected exactly 1): counts={deltas}")
 
 
 def main(quick: bool = True):
@@ -90,15 +78,14 @@ def main(quick: bool = True):
                 algo, None, x0, rounds, seeds=seeds, etas=etas,
                 eta_mode=eta_mode or "scale", problems=specs)
 
-        res_cold, us_cold = _walled(grid_call)
-        res_warm, us_warm = _walled(grid_call)
-        grid_deltas = {k2: v - before.get(k2, 0)
-                       for k2, v in runner.TRACE_COUNTS.items()
-                       if v != before.get(k2, 0)}
+        res_cold, us_cold = walled(grid_call)
+        res_warm, us_warm = walled(grid_call)
+        grid_deltas = trace_deltas(before)
         exec_key = (f"chain/{algo.name}" if isinstance(algo, chain.Chain)
                     else f"runner/{algo.name}")
-        _assert_single_compile(grid_deltas,
-                               [f"sweep-probs/{algo.name}", exec_key])
+        assert_single_compile(grid_deltas,
+                              [f"sweep-probs/{algo.name}", exec_key],
+                              what="problem grid")
 
         # per-problem loop (warm): each call reuses ONE compiled executor
         def loop_call():
@@ -106,9 +93,9 @@ def main(quick: bool = True):
                                     etas=etas, eta_mode=eta_mode or "scale")
                     for p in specs]
 
-        loop_res, _ = _walled(lambda: loop_call()[-1])  # warm the loop path
+        loop_res, _ = walled(lambda: loop_call()[-1])  # warm the loop path
         before_loop = dict(runner.TRACE_COUNTS)
-        loop_res, us_loop = _walled(lambda: loop_call()[-1])
+        loop_res, us_loop = walled(lambda: loop_call()[-1])
         if dict(runner.TRACE_COUNTS) != before_loop:
             raise AssertionError(
                 "warm per-problem loop re-traced: specs as operands must "
@@ -153,22 +140,47 @@ def main(quick: bool = True):
     methods = [A.SGD(eta=0.5, k=k, mu_avg=m, name="sgd") for m in
                (0.0, 0.5 * mu, mu)]
     before = dict(runner.TRACE_COUNTS)
-    res_m, us_m_cold = _walled(lambda: sweep.run_method_sweep(
+    res_m, us_m_cold = walled(lambda: sweep.run_method_sweep(
         methods, specs[0], x0, rounds, seeds=seeds))
-    res_m, us_m_warm = _walled(lambda: sweep.run_method_sweep(
+    res_m, us_m_warm = walled(lambda: sweep.run_method_sweep(
         methods, specs[0], x0, rounds, seeds=seeds))
-    m_deltas = {k2: v - before.get(k2, 0)
-                for k2, v in runner.TRACE_COUNTS.items()
-                if v != before.get(k2, 0)}
+    m_deltas = trace_deltas(before)
     tag = "+".join(m.name for m in methods)
-    _assert_single_compile(
-        m_deltas, [f"sweep-methods/{tag}", f"runner-methods/{tag}"])
+    assert_single_compile(
+        m_deltas, [f"sweep-methods/{tag}", f"runner-methods/{tag}"],
+        what="method stack")
     report["method_stacking"] = {
         "methods": len(methods), "cold_us": us_m_cold, "warm_us": us_m_warm,
         "trace_deltas": m_deltas,
     }
     rows.append(emit(f"problem_sweep/method_stack[{len(methods)}xsgd]",
                      us_m_warm, f"cold={us_m_cold:.0f}us"))
+
+    # comm × problems: the bits-accounted frontier rides the ζ × σ grid in
+    # one compile (the PR-2 → PR-3 gap this engine closes)
+    from repro.comm import CommConfig
+
+    cfg = CommConfig(compressor="qsgd", qsgd_bits=4, participation=0.5)
+    before = dict(runner.TRACE_COUNTS)
+
+    def comm_grid_call():
+        return sweep.run_sweep(sgd, None, x0, rounds, seeds=seeds, etas=etas,
+                               eta_mode="scale", problems=specs, comm=cfg)
+
+    res_cc, us_cc_cold = walled(comm_grid_call)
+    res_cc, us_cc_warm = walled(comm_grid_call)
+    cc_deltas = trace_deltas(before)
+    assert_single_compile(
+        cc_deltas, [f"sweep-comm-probs/{sgd.name}",
+                    f"runner-comm/{sgd.name}"], what="comm problem grid")
+    total_bits = float(np.asarray(res_cc.cumulative_bits())[..., -1].sum())
+    report["comm_problems"] = {
+        "config": cfg.name, "cold_us": us_cc_cold, "warm_us": us_cc_warm,
+        "trace_deltas": cc_deltas, "grid_total_bits": total_bits,
+    }
+    rows.append(emit(
+        f"problem_sweep/comm[{cfg.name}]", us_cc_warm,
+        f"problems={len(specs)};total_bits={total_bits:.3e}"))
 
     report["trace_counts"] = dict(runner.TRACE_COUNTS)
     with open(os.path.join(ROOT, "BENCH_problem_sweep.json"), "w") as f:

@@ -20,13 +20,14 @@ def main(argv=None) -> None:
         ablation_selection, appj1_large_k, comm_frontier, fig2_convergence,
         kernels_bench, lower_bound_bench, problem_sweep, roofline,
         sweep_bench, table1_strongly_convex, table2_general_convex,
-        table3_nonconvex, table4_pl,
+        table3_nonconvex, table3_vision, table4_pl,
     )
 
     harnesses = {
         "table1": table1_strongly_convex.main,  # Table 1 (strongly convex)
         "table2": table2_general_convex.main,  # Table 2 (general convex)
-        "table3": table3_nonconvex.main,  # Table 3 (nonconvex accuracy)
+        "table3": table3_nonconvex.main,  # Table 3 (per-call tuning loop)
+        "table3_vision": table3_vision.main,  # Table 3 on the sweep engine
         "table4": table4_pl.main,  # Table 4 (PL)
         "fig2": fig2_convergence.main,  # Figure 2 (heterogeneity sweep)
         "lower_bound": lower_bound_bench.main,  # Thm 5.4 / App G
@@ -39,6 +40,13 @@ def main(argv=None) -> None:
         "roofline": roofline.main,  # deliverable (g) report
     }
     only = [s for s in args.only.split(",") if s]
+    unknown = sorted(set(only) - set(harnesses))
+    if unknown:
+        # a typo'd --only used to match nothing and exit 0 — a CI leg would
+        # then pass without running anything
+        print(f"unknown benchmark name(s): {', '.join(unknown)}\n"
+              f"valid names: {', '.join(sorted(harnesses))}", file=sys.stderr)
+        sys.exit(2)
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in harnesses.items():

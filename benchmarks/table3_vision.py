@@ -1,0 +1,167 @@
+"""Paper Table 3 on the sweep engine — the vision family as a problems axis.
+
+The nonconvex vision experiment (synthetic prototype images, MLP classifier,
+"X% homogeneous" partition) used to run per-call: pytree params kept it off
+the vmapped sweep engine. With the ``vision`` ProblemSpec family the whole
+heterogeneity grid — every ``homogeneous_frac`` × seeds × stepsizes — runs
+through ONE compiled executor per method (asserted via
+``runner.TRACE_COUNTS``), and the comm subsystem rides along leaf-wise:
+the QSGD + partial-participation leg reports exact bits next to accuracy.
+
+Mirrors the paper's protocol (App. I.2): stepsizes are tuned on a small
+grid; the tuned configuration's accuracy is reported per heterogeneity
+level. Everything lands in ``BENCH_table3.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import assert_single_compile, emit, trace_deltas, walled
+from repro.comm import CommConfig
+from repro.core import algorithms as A, chain, runner, sweep
+from repro.data.vision_problem import vision_accuracy, vision_spec
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def build_grid(fracs, *, num_clients, per_class, side, hidden, batch):
+    """Same-arch vision specs over the homogeneous-fraction grid (only ARRAY
+    leaves vary, so the stack shares one treedef/compiled executor)."""
+    return [
+        vision_spec(
+            jax.random.PRNGKey(0), num_clients=num_clients,
+            homogeneous_frac=f, num_classes=2 * num_clients,
+            per_class=per_class, side=side, hidden=hidden, batch=batch)
+        for f in fracs
+    ]
+
+
+def _tuned_accuracies(res, specs, seeds, etas):
+    """Per-problem: tune η by median-over-seeds accuracy; return the tuned
+    accuracy (and the winning η) for each heterogeneity level."""
+    out = []
+    for pi, spec in enumerate(specs):
+        acc_fn = vision_accuracy(spec)
+        acc = np.zeros((len(seeds), len(etas)))
+        for si in range(len(seeds)):
+            for ei in range(len(etas)):
+                params = jax.tree.map(lambda l: l[pi, si, ei], res.x_hat)
+                acc[si, ei] = float(acc_fn(params))
+        med = np.median(acc, axis=0)  # [E]
+        best = int(np.argmax(med))
+        out.append({"acc": float(med[best]), "eta": float(etas[best])})
+    return out
+
+
+def main(quick: bool = True):
+    rounds = 30 if quick else 120
+    num_clients = 5
+    per_class = 40 if quick else 150
+    side = 8 if quick else 14
+    hidden = 16 if quick else 64
+    batch = 16 if quick else 32
+    fracs = (0.1, 0.5, 0.9)
+    seeds = (0, 1)
+    etas = (0.2, 0.5)
+    chain_mults = (0.5, 1.0)
+    s = 3  # sampled clients per round (paper: partial participation)
+
+    specs = build_grid(fracs, num_clients=num_clients, per_class=per_class,
+                       side=side, hidden=hidden, batch=batch)
+
+    sgd = A.SGD(eta=0.5, k=20, output_mode="last", s=s)
+    fedavg = A.FedAvg(eta=0.5, local_steps=5, inner_batch=4, s=s)
+    scaffold = A.Scaffold(eta=0.3, local_steps=5, inner_batch=4, s=s)
+    methods = {
+        "sgd": (sgd, etas, "absolute"),
+        "fedavg": (fedavg, etas, "absolute"),
+        "scaffold": (scaffold, etas, "absolute"),
+        "fedavg->sgd": (chain.fedchain(
+            fedavg, sgd, selection_k=20, selection_s=s,
+            name="fedavg->sgd"), chain_mults, "scale"),
+        "scaffold->sgd": (chain.fedchain(
+            scaffold, sgd, selection_k=20, selection_s=s,
+            name="scaffold->sgd"), chain_mults, "scale"),
+    }
+
+    rows = []
+    report = {
+        "grid": {"fracs": list(fracs), "num_clients": num_clients,
+                 "arch": list(specs[0].arch), "per_class": per_class,
+                 "rounds": rounds, "seeds": list(seeds)},
+        "methods": {},
+    }
+    for name, (algo, grid_etas, mode) in methods.items():
+        is_chain = isinstance(algo, chain.Chain)
+        before = dict(runner.TRACE_COUNTS)
+
+        def grid_call(a=algo, ge=grid_etas, m=mode):
+            return sweep.run_sweep(
+                a, None, None, rounds, seeds=seeds, etas=ge,
+                eta_mode=m if not isinstance(a, chain.Chain) else None,
+                problems=specs)
+
+        res, us_cold = walled(grid_call)
+        res, us_warm = walled(grid_call)
+        deltas = trace_deltas(before)
+        exec_key = (f"chain/{algo.name}" if is_chain
+                    else f"runner/{algo.name}")
+        assert_single_compile(deltas, [f"sweep-probs/{algo.name}", exec_key],
+                              what="vision grid")
+
+        tuned = _tuned_accuracies(res, specs, seeds, grid_etas)
+        report["methods"][name] = {
+            "grid_cold_us": us_cold, "grid_warm_us": us_warm,
+            "trace_deltas": deltas,
+            "per_frac": {f"hom={f}": t for f, t in zip(fracs, tuned)},
+        }
+        accs = ";".join(f"hom={f}:acc={t['acc']:.4f}"
+                        for f, t in zip(fracs, tuned))
+        rows.append(emit(f"table3_vision/{name}", us_warm, accs))
+
+    # comm on the vision problems axis: QSGD(4) uplinks + 60% participation,
+    # bits accounted leaf-wise over the MLP pytree — one compiled executor
+    # for the whole heterogeneity grid (partial participation now lives in
+    # the comm mask schedule, so the algorithm's own s must be 0)
+    cfg = CommConfig(compressor="qsgd", qsgd_bits=4, participation=0.6)
+    comm_sgd = A.SGD(eta=0.5, k=20, output_mode="last", name="sgd")
+    before = dict(runner.TRACE_COUNTS)
+
+    def comm_call():
+        return sweep.run_sweep(comm_sgd, None, None, rounds, seeds=seeds,
+                               etas=etas, eta_mode="absolute", problems=specs,
+                               comm=cfg)
+
+    res_c, _ = walled(comm_call)
+    res_c, us_comm = walled(comm_call)
+    deltas = trace_deltas(before)
+    assert_single_compile(
+        deltas, ["sweep-comm-probs/sgd", "runner-comm/sgd"],
+        what="vision comm grid")
+    tuned_c = _tuned_accuracies(res_c, specs, seeds, etas)
+    total_bits = np.asarray(res_c.cumulative_bits())[..., -1]  # [P, S, E]
+    report["comm_qsgd4_part60"] = {
+        "uplink_bits_per_client_per_round": cfg.uplink_bits(specs[0].x0),
+        "trace_deltas": deltas,
+        "per_frac": {
+            f"hom={f}": {**t, "median_total_bits": float(
+                np.median(total_bits[pi]))}
+            for pi, (f, t) in enumerate(zip(fracs, tuned_c))},
+    }
+    rows.append(emit(
+        "table3_vision/sgd+qsgd4+part60", us_comm,
+        ";".join(f"hom={f}:acc={t['acc']:.4f}"
+                 for f, t in zip(fracs, tuned_c))))
+
+    report["trace_counts"] = dict(runner.TRACE_COUNTS)
+    with open(os.path.join(ROOT, "BENCH_table3.json"), "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

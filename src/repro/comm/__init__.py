@@ -25,22 +25,33 @@ Compression is simulated as a quantize→dequantize round trip: algorithms see
 the server-side reconstruction of each client's uplink, while the bits that
 WOULD have crossed the wire are accounted in closed form.
 
-Bits-accounting model
----------------------
-Let d be the (flat) parameter dimension, S_r = Σ mask_r the number of
-participating clients in round r, and ⌈log₂d⌉ the index width. Per
-participating client and uplinked vector:
+Parameters are arbitrary pytrees, handled LEAF-WISE: every operator ravels
+each leaf [S, ...] to [S, d_leaf] rows at the kernel boundary (compress
+switch, error-feedback residual tables, masked Pallas aggregation) and
+unravels after, so the flat [D] theory problems — the single-leaf case —
+stay bitwise identical to the pre-pytree implementation while vision MLPs
+(``data.vision_problem``) ride the same compiled executors.
 
-* identity:  ``32·d``                       (full-precision float32)
-* QSGD(b):   ``32 + d·(b+1)``               (ℓ₂ norm + sign and b-bit level
-                                             per coordinate)
-* top-k/rand-k: ``k·(32 + ⌈log₂ d⌉)``        (float32 value + index per
-                                             retained coordinate)
+Bits-accounting model (leaf-wise)
+---------------------------------
+Let d₁…d_L be the per-leaf parameter dims (one entry, d, for flat vectors),
+S_r = Σ mask_r the number of participating clients in round r, and
+⌈log₂d_l⌉ the per-leaf index width. Per participating client and uplinked
+parameter pytree, bits are the SUM over leaves of the per-leaf closed form:
 
-Downlinks are uncompressed: ``32·d`` per broadcast vector per participant
-(SCAFFOLD broadcasts x and the server variate: 2 vectors). A Lemma H.2
-selection round costs ``2·32·d`` down and ``2·32`` up per sampled client
-(both candidates broadcast; one scalar empirical value returned each).
+* identity:  ``Σ_l 32·d_l``                  (full-precision float32)
+* QSGD(b):   ``Σ_l 32 + d_l·(b+1)``          (one ℓ₂ norm per LEAF + sign and
+                                              b-bit level per coordinate —
+                                              quantization is leaf-wise)
+* top-k/rand-k: ``Σ_l k·(32 + ⌈log₂ d_l⌉)``  (k coordinates retained per
+                                              LEAF, float32 value + index
+                                              each)
+
+Downlinks are uncompressed: ``32·Σ_l d_l`` per broadcast pytree per
+participant (SCAFFOLD broadcasts x and the server variate: 2 pytrees). A
+Lemma H.2 selection round costs ``2·32·Σ_l d_l`` down and ``2·32`` up per
+sampled client (both candidates broadcast; one scalar empirical value
+returned each).
 ``CommState.bits_up``/``bits_down`` meter ONE round at a time (executors
 zero them each scan step and emit them as the per-round [R] meters);
 cumulative totals are summed in float64 outside the scan
@@ -54,6 +65,7 @@ from repro.comm.compressors import (
     COMP_TOPK,
     CommParams,
     compress_rows,
+    compress_tree,
 )
 from repro.comm.config import (
     CommConfig,
@@ -62,18 +74,22 @@ from repro.comm.config import (
     comm_key,
     downlink_bits_per_client,
     ef_enabled,
+    leaf_dims,
     masked_keep,
     participation_scale,
     selection_round_bits,
+    total_dim,
     uplink,
     uplink_bits_per_client,
+    uplink_bits_per_client_tree,
 )
 
 __all__ = [
     "COMP_IDENTITY", "COMP_QSGD", "COMP_TOPK", "COMP_RANDK",
     "CommParams", "CommConfig", "CommState",
-    "compress_rows", "uplink", "account_round", "comm_key",
+    "compress_rows", "compress_tree", "uplink", "account_round", "comm_key",
     "participation_scale", "masked_keep", "ef_enabled",
-    "uplink_bits_per_client", "downlink_bits_per_client",
-    "selection_round_bits",
+    "leaf_dims", "total_dim",
+    "uplink_bits_per_client", "uplink_bits_per_client_tree",
+    "downlink_bits_per_client", "selection_round_bits",
 ]

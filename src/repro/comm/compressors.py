@@ -20,6 +20,13 @@ Branch semantics (all return the server-side dequantized reconstruction):
 
 k and b are traced scalars: top-k/rand-k use rank masks (``ranks < k``)
 rather than dynamic slicing, so a sparsity grid reuses one compile.
+
+``compress_tree`` is the pytree entry point: each leaf [S, ...] is flattened
+to [S, d_leaf] rows at the kernel boundary, compressed independently (QSGD
+norms, top-k ranks and rand-k subsets are PER LEAF), and unflattened. A
+single-leaf pytree — the flat [D] theory problems — uses the caller's key
+unsplit, so flat-path trajectories are bitwise identical to the pre-pytree
+implementation; multi-leaf pytrees derive one independent key per leaf.
 """
 from __future__ import annotations
 
@@ -88,3 +95,22 @@ def compress_rows(vec, key, params: CommParams):
 
     return jax.lax.switch(
         params.comp_id, [_identity, _qsgd, _topk, _randk], vec, key)
+
+
+def compress_tree(tree, key, params: CommParams):
+    """Leaf-wise quantize→dequantize of a pytree of per-client rows.
+
+    Every leaf is [S, ...] (row i = one client's slice); each is raveled to
+    [S, d_leaf] at the kernel boundary (``tree_math.tree_ravel_rows``),
+    pushed through ``compress_rows`` and unraveled back. Keys: the caller's
+    key verbatim for a single leaf (flat-path bit-exactness),
+    ``split(key, n_leaves)`` otherwise.
+    """
+    from repro.core import tree_math as tm
+
+    rows, treedef = jax.tree.flatten(tm.tree_ravel_rows(tree))
+    keys = [key] if len(rows) == 1 else list(
+        jax.random.split(key, len(rows)))
+    comp = jax.tree.unflatten(
+        treedef, [compress_rows(x, k, params) for x, k in zip(rows, keys)])
+    return tm.tree_unravel_rows(comp, tree)

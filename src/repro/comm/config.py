@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.comm import compressors
 from repro.comm.compressors import COMP_IDENTITY, COMP_QSGD, CommParams
+from repro.core import tree_math as tm
 
 # fold_in tag deriving the comm PRNG stream from a round key WITHOUT
 # disturbing the key splits the algorithms already perform (bit-exactness of
@@ -26,11 +27,14 @@ _COMM_KEY_TAG = 0x636D
 class CommState(NamedTuple):
     """The optional ``comm`` leaf of the uniform state protocol.
 
-    All fields are arrays (operand data). ``mask`` is the CURRENT round's
-    participation mask — the executor overwrites it each scan step from the
-    precomputed schedule. ``residual`` is the per-client error-feedback table:
-    ``[N, D]`` when EF is on, ``[N, 0]`` when off (the shape is the trace-time
-    EF flag — see ``ef_enabled``).
+    All fields are arrays or pytrees of arrays (operand data). ``mask`` is
+    the CURRENT round's participation mask — the executor overwrites it each
+    scan step from the precomputed schedule. ``residual`` is the per-client
+    error-feedback table, mirroring the PARAMETER pytree leaf-for-leaf with a
+    leading client axis: a ``[N, D]`` array for flat params, a pytree of
+    ``[N, *leaf.shape]`` tables for pytree params (vision MLPs), and a single
+    empty ``[N, 0]`` array when EF is off (residual element count is the
+    trace-time EF flag — see ``ef_enabled``).
 
     ``bits_up``/``bits_down`` meter the CURRENT round only: executors zero
     them at round start, ``account_round`` (and the chain's selection
@@ -43,7 +47,7 @@ class CommState(NamedTuple):
 
     params: CommParams
     mask: jnp.ndarray  # [N] float32 ∈ {0, 1}
-    residual: jnp.ndarray  # [N, D] or [N, 0]
+    residual: object  # params-shaped pytree of [N, ...] tables, or [N, 0]
     bits_up: jnp.ndarray  # float32 scalar, THIS round's uplink bits
     bits_down: jnp.ndarray  # float32 scalar, THIS round's downlink bits
 
@@ -55,8 +59,25 @@ def zero_round_bits(comm: CommState) -> CommState:
 
 
 def ef_enabled(comm: CommState) -> bool:
-    """Trace-time error-feedback flag, encoded in the residual table shape."""
-    return comm.residual.shape[1] > 0
+    """Trace-time error-feedback flag, encoded in the residual table shapes
+    (an EF-off state carries one empty [N, 0] table; shapes are static)."""
+    return tm.tree_size(comm.residual) > 0
+
+
+def leaf_dims(x) -> tuple:
+    """Per-leaf element counts of a parameter pytree — the shape signature
+    bits accounting sums closed forms over. Accepts an int (a flat dimension
+    ``d``), a tuple of per-leaf dims, or any params pytree."""
+    if isinstance(x, int):
+        return (x,)
+    if isinstance(x, (tuple, list)) and all(isinstance(d, int) for d in x):
+        return tuple(x)
+    return tm.tree_leaf_dims(x)
+
+
+def total_dim(x) -> int:
+    """Total parameter count of ``x`` (sum over leaves; static)."""
+    return sum(leaf_dims(x))
 
 
 def comm_key(key):
@@ -75,7 +96,12 @@ def participation_scale(mask, cids):
 
 
 def uplink_bits_per_client(params: CommParams, d: int):
-    """Closed-form uplink bits for ONE compressed [d] vector (traced scalar)."""
+    """Closed-form uplink bits for ONE compressed [d] LEAF (traced scalar).
+
+    QSGD bills one ℓ₂-norm float per leaf (compression is leaf-wise);
+    top-k/rand-k retain k coordinates per leaf, each addressed by a
+    ⌈log₂ d_leaf⌉-bit index.
+    """
     idx_bits = float(max(1, math.ceil(math.log2(d)))) if d > 1 else 1.0
     k = params.spars_k.astype(jnp.float32)
     return jnp.select(
@@ -85,62 +111,79 @@ def uplink_bits_per_client(params: CommParams, d: int):
     )
 
 
-def downlink_bits_per_client(d: int):
-    """Downlinks are uncompressed float32 broadcasts."""
-    return 32.0 * d
+def uplink_bits_per_client_tree(params: CommParams, dims):
+    """Uplink bits of one compressed parameter PYTREE per client: the sum of
+    per-leaf closed forms. ``dims`` is an int, a tuple of leaf dims, or a
+    params pytree (see ``leaf_dims``); a flat [D] vector reduces to the
+    single-leaf closed form exactly."""
+    return sum(uplink_bits_per_client(params, d) for d in leaf_dims(dims))
 
 
-def selection_round_bits(d: int, s_sel: int):
+def downlink_bits_per_client(dims):
+    """Downlinks are uncompressed float32 broadcasts of the whole pytree."""
+    return 32.0 * total_dim(dims)
+
+
+def selection_round_bits(dims, s_sel: int):
     """(uplink, downlink) bits of one Lemma H.2 two-candidate selection."""
-    return 2.0 * 32.0 * s_sel, 2.0 * 32.0 * d * s_sel
+    return 2.0 * 32.0 * s_sel, 2.0 * 32.0 * total_dim(dims) * s_sel
 
 
-def account_round(comm: CommState, d: int, *, up_vectors: int,
+def account_round(comm: CommState, dims, *, up_vectors: int,
                   down_vectors: int) -> CommState:
     """Accumulate one round's bits: S_r participants, ``up_vectors``
-    compressed uplink vectors and ``down_vectors`` broadcast vectors each."""
+    compressed uplink pytrees and ``down_vectors`` broadcast pytrees each.
+    ``dims`` is the parameter pytree itself (or its int/tuple dims)."""
     s_r = jnp.sum(comm.mask.astype(jnp.float32))
-    up = s_r * up_vectors * uplink_bits_per_client(comm.params, d)
-    down = s_r * down_vectors * downlink_bits_per_client(d)
+    up = s_r * up_vectors * uplink_bits_per_client_tree(comm.params, dims)
+    down = s_r * down_vectors * downlink_bits_per_client(dims)
     return comm._replace(bits_up=comm.bits_up + up,
                          bits_down=comm.bits_down + down)
 
 
 def uplink(comm: CommState, payload, cids, key, *, ref=None,
            use_ef: bool = True):
-    """Compress one batch of per-client uplink vectors.
+    """Compress one batch of per-client uplink pytrees.
 
-    ``payload`` is [S, D] (row i = client ``cids[i]``'s transmission);
-    ``ref`` is an optional reference point (the broadcast iterate) — when
-    given, the *delta* payload − ref is compressed and the reconstruction
-    ref + C(Δ) returned, which is the standard wire format for local-update
-    methods. Identity compression short-circuits to the payload itself
-    (bitwise), whatever the reference. Error feedback adds the client's
-    residual before compression and stores the quantization error after —
-    participants only (masked-out clients neither transmit nor consume
-    residual). Returns ``(reconstruction [S, D], updated CommState)``.
+    ``payload`` is a pytree whose leaves are [S, ...] (row i = client
+    ``cids[i]``'s transmission); a flat [S, D] array is the single-leaf case
+    and reproduces the pre-pytree implementation bitwise. ``ref`` is an
+    optional reference pytree (the broadcast iterate) — when given, the
+    *delta* payload − ref is compressed and the reconstruction ref + C(Δ)
+    returned, which is the standard wire format for local-update methods.
+    Identity compression short-circuits to the payload itself (bitwise),
+    whatever the reference. Error feedback adds the client's residual (a
+    params-shaped table pytree) before compression and stores the
+    quantization error after — participants only (masked-out clients neither
+    transmit nor consume residual). Returns ``(reconstruction, CommState)``.
     """
     params = comm.params
-    delta = payload - ref if ref is not None else payload
+    delta = tm.tree_sub(payload, ref) if ref is not None else payload
 
     ef = ef_enabled(comm) and use_ef
     if ef:
-        res = comm.residual[cids]
-        delta_in = delta + res
+        res = jax.tree.map(lambda t: t[cids], comm.residual)
+        delta_in = tm.tree_add(delta, res)
     else:
         delta_in = delta
 
-    comp = compressors.compress_rows(delta_in, key, params)
+    comp = compressors.compress_tree(delta_in, key, params)
 
     if ef:
-        m = comm.mask[cids].astype(jnp.float32)[:, None]
-        new_res = m * (delta_in - comp) + (1.0 - m) * res
-        comm = comm._replace(residual=comm.residual.at[cids].set(new_res))
+        m = comm.mask[cids].astype(jnp.float32)
+        mb = tm.tree_bcast_rows(m, delta_in)  # [S, 1, …, 1] per leaf
+        new_res = jax.tree.map(
+            lambda mm, di, co, rs: mm * (di - co) + (1.0 - mm) * rs,
+            mb, delta_in, comp, res)
+        comm = comm._replace(residual=jax.tree.map(
+            lambda t, v: t.at[cids].set(v), comm.residual, new_res))
 
-    recon = ref + comp if ref is not None else comp
+    recon = tm.tree_add(ref, comp) if ref is not None else comp
     # identity returns the payload itself: ref + (payload − ref) round-trips
     # through float addition, but the wire carried the exact payload.
-    out = jnp.where(params.comp_id == COMP_IDENTITY, payload, recon)
+    out = jax.tree.map(
+        lambda pl, rc: jnp.where(params.comp_id == COMP_IDENTITY, pl, rc),
+        payload, recon)
     return out, comm
 
 
@@ -215,45 +258,52 @@ class CommConfig:
 
         return jax.vmap(one_round)(jax.random.split(key, rounds))
 
-    def init_state(self, num_clients: int, dim: int) -> CommState:
-        if self.compressor in ("topk", "randk") and self.spars_k > dim:
+    def init_state(self, num_clients: int, params_or_dim) -> CommState:
+        """Initial ``CommState`` for ``num_clients`` clients over the given
+        parameter layout: an int (flat dimension d — the legacy signature) or
+        the parameter pytree itself, whose leaf shapes size the per-client
+        error-feedback residual tables."""
+        template = (jnp.zeros((params_or_dim,), jnp.float32)
+                    if isinstance(params_or_dim, int) else params_or_dim)
+        dims = leaf_dims(template)
+        if self.compressor in ("topk", "randk") and self.spars_k > min(dims):
             raise ValueError(
                 f"spars_k={self.spars_k} exceeds the parameter dimension "
-                f"{dim}: the sparsifier would keep everything while billing "
-                f"MORE than the identity compressor — use identity (or a "
-                f"smaller k) instead")
-        res_d = dim if self.error_feedback else 0
+                f"{min(dims)} (smallest leaf of {dims}): the sparsifier "
+                f"would keep everything while billing MORE than the identity "
+                f"compressor — use identity (or a smaller k) instead")
+        if self.error_feedback:
+            residual = jax.tree.map(
+                lambda l: jnp.zeros((num_clients,) + jnp.shape(l),
+                                    jnp.float32), template)
+        else:
+            residual = jnp.zeros((num_clients, 0), jnp.float32)
         return CommState(
             params=self.params(),
             mask=jnp.ones((num_clients,), jnp.float32),
-            residual=jnp.zeros((num_clients, res_d), jnp.float32),
+            residual=residual,
             bits_up=jnp.asarray(0.0, jnp.float32),
             bits_down=jnp.asarray(0.0, jnp.float32),
         )
 
-    def uplink_bits(self, d: int) -> float:
-        """Bits per client per uplinked vector — evaluates the SAME closed
-        form the executors bill (``uplink_bits_per_client``), so reports can
-        never desynchronize from the in-scan accounting."""
-        return float(uplink_bits_per_client(self.params(), d))
-
-
-def require_flat(x0, what: str = "comm"):
-    """The comm subsystem operates on flat [D] parameter vectors (residual
-    tables, compress kernels, masked aggregation are all [N, D]-shaped)."""
-    if not (isinstance(x0, jax.Array) and x0.ndim == 1):
-        raise NotImplementedError(
-            f"{what} requires flat [D] parameter vectors; got a pytree/"
-            f"non-vector — extend the batched-state audit before enabling "
-            f"comm on pytree models (see ROADMAP)")
-    return x0
+    def uplink_bits(self, dims) -> float:
+        """Bits per client per uplinked pytree (int dim, tuple of leaf dims,
+        or params pytree) — evaluates the SAME closed form the executors bill
+        (``uplink_bits_per_client_tree``), so reports can never
+        desynchronize from the in-scan accounting."""
+        return float(uplink_bits_per_client_tree(self.params(), dims))
 
 
 def masked_keep(mask_rows, new, old):
     """Participants take the new value; masked-out clients keep the old —
     the table-update convention every comm-aware algorithm shares (a bitwise
-    no-op selecting ``new`` under full participation)."""
-    return jnp.where(mask_rows[:, None] > 0, new, old)
+    no-op selecting ``new`` under full participation). ``new``/``old`` are
+    pytrees with [S, ...] leaves; the [S] mask broadcasts leaf-wise."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(
+            mask_rows.reshape(mask_rows.shape + (1,) * (n.ndim - 1)) > 0,
+            n, o),
+        new, old)
 
 
 def reject_algo_participation(algo_s: int, algo_name: str):

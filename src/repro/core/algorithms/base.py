@@ -59,25 +59,35 @@ def flat_params(x) -> bool:
     return isinstance(x, jax.Array) and x.ndim == 1
 
 
+def weighted_client_mean(stacked, weight_scale):
+    """meanᵢ(wᵢ·tᵢ) over the leading client axis, leaf-wise through the
+    Pallas ``weighted_mean_over_clients`` kernel: each leaf [S, ...] is
+    raveled to [S, d_leaf] rows at the kernel boundary
+    (``tree_math.tree_ravel_rows``) and unraveled after — a flat [S, D]
+    array is the single-leaf no-op-reshape case."""
+    from repro.kernels.compress import ops as compress_ops
+
+    means = jax.tree.map(
+        lambda rows: compress_ops.weighted_mean_over_clients(
+            rows, weight_scale),
+        tm.tree_ravel_rows(stacked))
+    return jax.tree.map(lambda m, t: m.reshape(t.shape[1:]), means, stacked)
+
+
 def client_mean(x, stacked, weight_scale=None):
     """Mean over the leading client axis of ``stacked``, routed through the
     Pallas ``mean_over_clients`` kernel when params are flat vectors (``x`` is
     the server iterate used only to pick the layout).
 
     ``weight_scale`` [S] (comm partial participation) switches to the masked
-    aggregate meanᵢ(wᵢ·tᵢ); callers pass ``m_i·S/Σm`` so masked-out clients
-    drop out and the result is the participant mean. Under full participation
-    every wᵢ is exactly 1.0, keeping the result bitwise equal to the plain
-    mean."""
+    aggregate meanᵢ(wᵢ·tᵢ) — leaf-wise on pytree params; callers pass
+    ``m_i·S/Σm`` so masked-out clients drop out and the result is the
+    participant mean. Under full participation every wᵢ is exactly 1.0,
+    keeping the result bitwise equal to the plain mean."""
     from repro.kernels.aggregate import ops as agg_ops
 
     if weight_scale is not None:
-        from repro.kernels.compress import ops as compress_ops
-
-        if not flat_params(x):
-            raise NotImplementedError(
-                "weight_scale (comm) aggregation needs flat [D] params")
-        return compress_ops.weighted_mean_over_clients(stacked, weight_scale)
+        return weighted_client_mean(stacked, weight_scale)
     if flat_params(x):
         return agg_ops.mean_over_clients(stacked)
     return tm.tree_mean_leading(stacked)
@@ -92,7 +102,9 @@ def fused_server_step(x, g_per, eta, *, c_i=None, c_mean=None,
     the traced stepsize reaches the kernel as data while ``lr`` stays static.
     ``c_i``/``c_mean`` default to zero (plain gradient averaging, Algo 2).
     ``weight_scale`` [S] rescales per-client weights (comm participation
-    masks, exactly 1.0 per client under full participation).
+    masks, exactly 1.0 per client under full participation); on pytree
+    params the masked mean runs leaf-wise through the weighted-aggregate
+    kernel (``weighted_client_mean``).
     """
     from repro.kernels.aggregate import ops as agg_ops
 
@@ -105,8 +117,12 @@ def fused_server_step(x, g_per, eta, *, c_i=None, c_mean=None,
         c = jnp.zeros_like(x) if c_mean is None else eta * c_mean
         return agg_ops.chain_aggregate(x, g_per, ci, c, weights=w, lr=1.0)
     if weight_scale is not None:
-        raise NotImplementedError(
-            "weight_scale (comm) server steps need flat [D] params")
+        diff = (g_per if c_i is None
+                else jax.tree.map(jnp.subtract, g_per, c_i))
+        g = weighted_client_mean(diff, weight_scale)
+        if c_mean is not None:
+            g = tm.tree_add(g, c_mean)
+        return tm.tree_axpy(-eta, g, x)
     if c_i is None:
         g = tm.tree_mean_leading(g_per)
     else:

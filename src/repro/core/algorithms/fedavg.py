@@ -81,7 +81,7 @@ class FedAvg(base.FederatedAlgorithm):
             scale = comm_lib.participation_scale(comm.mask, cids)
             y_mean = base.client_mean(state.x, y_hat, weight_scale=scale)
             comm = comm_lib.account_round(
-                comm, state.x.shape[0], up_vectors=1, down_vectors=1)
+                comm, state.x, up_vectors=1, down_vectors=1)
         else:
             y_mean = base.client_mean(state.x, y_final)
         x = tm.tree_lerp(self.server_lr, state.x, y_mean)

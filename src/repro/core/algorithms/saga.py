@@ -135,7 +135,7 @@ class SAGA(base.FederatedAlgorithm):
             from repro import comm as comm_lib
 
             comm = comm_lib.account_round(
-                comm, state.x.shape[0],
+                comm, state.x,
                 up_vectors=1 if self.option == "I" else 2, down_vectors=1)
 
         decay = jnp.clip(jnp.asarray(1.0 - state.eta * self.mu_avg), 0.0, 1.0)

@@ -97,7 +97,7 @@ class Scaffold(base.FederatedAlgorithm):
             y_mean = base.client_mean(state.x, y_final, weight_scale=scale)
             ci_new = comm_cfg.masked_keep(m, ci_new, c_i)
             comm = comm_lib.account_round(
-                comm, state.x.shape[0], up_vectors=2, down_vectors=2)
+                comm, state.x, up_vectors=2, down_vectors=2)
         else:
             y_mean = base.client_mean(state.x, y_final)
         x = tm.tree_lerp(self.server_lr, state.x, y_mean)

@@ -73,7 +73,7 @@ class SGD(base.FederatedAlgorithm):
             x = base.fused_server_step(state.x, g_hat, state.eta,
                                        weight_scale=scale)
             comm = comm_lib.account_round(
-                comm, state.x.shape[0], up_vectors=1, down_vectors=1)
+                comm, state.x, up_vectors=1, down_vectors=1)
         else:
             s = self.participation(problem)
             cids = base.sample_clients(k_sample, problem.num_clients, s)

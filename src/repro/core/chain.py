@@ -366,8 +366,9 @@ class Chain:
                 runner_lib.TRACE_COUNTS[f"chain-comm/{self.name}"] += 1
                 f_star = runner_lib.f_star_operand(p)
                 keys_r, keys_s = _derive_keys(key)
-                d = x0.shape[0]  # comm chains are flat-params only
-                sel_up, sel_down = comm_cfg.selection_round_bits(d, sel_s)
+                # selection broadcasts the whole parameter pytree (leaf dims
+                # are static under trace)
+                sel_up, sel_down = comm_cfg.selection_round_bits(x0, sel_s)
 
                 def body(carry, xs):
                     states, anchor, comm_st = carry
@@ -378,8 +379,9 @@ class Chain:
                     # different semantics (iterate deltas vs gradients), and
                     # the residual mass may belong to a trajectory selection
                     # just discarded
-                    comm_st = comm_st._replace(residual=jnp.where(
-                        hmd > 0, 0.0, comm_st.residual))
+                    comm_st = comm_st._replace(residual=jax.tree.map(
+                        lambda r: jnp.where(hmd > 0, 0.0, r),
+                        comm_st.residual))
                     states, anchor, h_kept = _handoff(
                         p, states, anchor, sid, hmd, k_sel)
 
@@ -464,14 +466,13 @@ class Chain:
         else:
             from repro.comm import config as comm_cfg
 
-            comm_cfg.require_flat(x0)
             for stage, st in zip(self.stages, states0):
                 comm_cfg.require_comm_leaf(st, stage.name)
             n_clients = problem.num_clients
             masks = (comm.round_masks(len(sched.stage_id), n_clients)
                      if comm_masks is None
                      else jnp.asarray(comm_masks, jnp.float32))
-            comm0 = comm.init_state(n_clients, x0.shape[0])
+            comm0 = comm.init_state(n_clients, x0)
             fn = self.executor(problem, rounds, comm=True)
             x_hat, history, kept_flags, bits_up, bits_down = fn(
                 spec, x0, states0, key, eta_arr, masks, comm0)

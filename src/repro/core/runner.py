@@ -325,12 +325,11 @@ def run(algo, problem, x0, rounds: int, key, *, eval_output: bool = True,
     if comm is not None:
         from repro.comm import config as comm_cfg
 
-        comm_cfg.require_flat(x0)
         comm_cfg.require_comm_leaf(state0, algo.name)
         n = problem.num_clients
         masks = (comm.round_masks(rounds, n) if comm_masks is None
                  else jnp.asarray(comm_masks, jnp.float32))
-        state0 = state0._replace(comm=comm.init_state(n, x0.shape[0]))
+        state0 = state0._replace(comm=comm.init_state(n, x0))
         fn = (comm_executor if jit else comm_executor_body)(
             algo, problem, eval_output)
         state, (history, bits_up, bits_down) = fn(

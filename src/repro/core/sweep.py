@@ -51,7 +51,12 @@ participation masks (one independent [R, N] schedule per seed) ride the scan
 as data, and ``SweepResult.bits_up``/``bits_down`` record the exact per-round
 wire cost — the suboptimality-vs-bits frontier. All comm knobs are operands:
 switching compressor, bit-width or participation fraction reuses the same
-compiled grid (``runner.TRACE_COUNTS`` stays flat).
+compiled grid (``runner.TRACE_COUNTS`` stays flat). Comm composes with the
+``problems=`` axis — mask schedules batch per (problem, seed) cell (fold
+p·S + s of the config's mask seed) and the ``CommState`` rides the vmapped
+state like any other leaf, so a bits-accounted ζ×σ frontier over a whole
+problem grid is still ONE compile. Parameters may be arbitrary pytrees
+(vision MLPs): the comm layer operates leaf-wise (``repro.comm``).
 
 Decay sweeps: stepsize-decay multipliers are an executor *operand* (PR-2),
 so ``run_decay_sweep`` batches a ``decay_factor`` grid through one compile
@@ -67,6 +72,7 @@ import jax.numpy as jnp
 
 from repro.core import chain as chain_lib
 from repro.core import runner as runner_lib
+from repro.core import tree_math as tm
 
 
 @dataclasses.dataclass
@@ -139,20 +145,21 @@ def _sweep_fn_algo(algo, problem, rounds: int, eval_output: bool,
 
 
 def _sweep_fn_algo_comm(algo, problem, rounds: int, eval_output: bool,
-                        eta_mode: str):
+                        eta_mode: str, problem_axis: bool = False):
     key = ("sweep-algo-comm", algo, runner_lib.problem_key(problem), rounds,
-           eval_output, eta_mode)
+           eval_output, eta_mode, problem_axis)
     fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
 
     body = runner_lib.comm_executor_body(algo, problem, eval_output)
     _, resolve = runner_lib._bind(problem)
+    tag = "sweep-comm-probs" if problem_axis else "sweep-comm"
     eta_scale = jnp.ones((rounds,), jnp.float32)
 
     def cell(spec, x0, key, eta, masks, comm0):
         p = resolve(spec)
-        runner_lib.TRACE_COUNTS[f"sweep-comm/{algo.name}"] += 1
+        runner_lib.TRACE_COUNTS[f"{tag}/{algo.name}"] += 1
         state0 = algo.init(p, x0)
         new_eta = (state0.eta * eta if eta_mode == "scale"
                    else jnp.asarray(eta, jnp.result_type(state0.eta)))
@@ -164,9 +171,13 @@ def _sweep_fn_algo_comm(algo, problem, rounds: int, eval_output: bool,
         sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
         return x_hat, history, sub, bits_up, bits_down
 
-    # masks batch with the seed axis (one independent schedule per seed)
+    # masks batch with the seed axis (one independent schedule per seed) and,
+    # with a problems axis, per problem as well ([P, S, R, N] schedules); the
+    # initial CommState is identical across the grid (zeros) so it broadcasts
     grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, None, 0, None, None)),
                     in_axes=(None, None, 0, None, 0, None))
+    if problem_axis:
+        grid = jax.vmap(grid, in_axes=(0, 0, None, None, 0, None))
     return runner_lib._cache_put(key, jax.jit(grid))
 
 
@@ -198,21 +209,23 @@ def _sweep_fn_chain(chain, problem, rounds: int, problem_axis: bool = False):
     return runner_lib._cache_put(key, jax.jit(grid))
 
 
-def _sweep_fn_chain_comm(chain, problem, rounds: int):
+def _sweep_fn_chain_comm(chain, problem, rounds: int,
+                         problem_axis: bool = False):
     key = ("sweep-chain-comm", chain._key(), runner_lib.problem_key(problem),
-           rounds)
+           rounds, problem_axis)
     fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
 
     body = chain.executor_body(problem, rounds, comm=True)
     _, resolve = runner_lib._bind(problem)
+    tag = "sweep-comm-probs" if problem_axis else "sweep-comm"
     sched = chain._schedule(rounds)
     sel_idx = jnp.asarray(sched.sel_indices, jnp.int32)
 
     def cell(spec, x0, key, mult, eta_scale, masks, comm0):
         p = resolve(spec)
-        runner_lib.TRACE_COUNTS[f"sweep-comm/{chain.name}"] += 1
+        runner_lib.TRACE_COUNTS[f"{tag}/{chain.name}"] += 1
         states0 = chain.init_states(p, x0, eta_scale=mult)
         x_hat, history, kept, bits_up, bits_down = body(
             spec, x0, states0, key, eta_scale, masks, comm0)
@@ -222,6 +235,9 @@ def _sweep_fn_chain_comm(chain, problem, rounds: int):
     grid = jax.vmap(
         jax.vmap(cell, in_axes=(None, None, None, 0, None, None, None)),
         in_axes=(None, None, 0, None, None, 0, None))
+    if problem_axis:
+        grid = jax.vmap(grid,
+                        in_axes=(0, 0, None, None, None, 0, None))
     return runner_lib._cache_put(key, jax.jit(grid))
 
 
@@ -324,7 +340,9 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
     ``comm`` (a ``repro.comm.CommConfig``) enables compressed uplinks /
     partial participation / bits accounting; seed s uses the config's mask
     schedule derived with ``fold=s`` (``runner.run(..., comm_masks=...)``
-    reproduces any single cell).
+    reproduces any single cell). With a ``problems=`` axis, cell (p, s)
+    uses ``fold=p*len(seeds)+s`` — independent schedules per problem AND
+    seed, still reproducible per cell.
     """
     is_chain = isinstance(algo_or_chain, chain_lib.Chain)
     if eta_mode is None:
@@ -343,11 +361,6 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
     etas_arr = jnp.asarray(etas, jnp.float32)
 
     if problems is not None:
-        if comm is not None:
-            raise NotImplementedError(
-                "comm= with a problems= axis is not wired up yet (per-seed "
-                "mask schedules × problems need a batched-CommState audit); "
-                "sweep problems without comm, or loop comm configs")
         if decay is not None and not is_chain:
             raise NotImplementedError(
                 "decay sweeps: wrap the algorithm in a Chain")
@@ -356,23 +369,67 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
         if x0 is None:
             x0_stack = stacked.x0
         else:
-            x0_stack = jnp.asarray(x0)
-            if x0_stack.ndim == 1:
-                x0_stack = jnp.broadcast_to(
-                    x0_stack, (n_probs,) + x0_stack.shape)
-            elif x0_stack.shape[0] != n_probs:
-                raise ValueError(
-                    f"x0 leading axis {x0_stack.shape[0]} != number of "
-                    f"problems {n_probs}")
+            # array-likes (incl. sequences of same-shape vectors, the legacy
+            # input) keep the historical semantics: a [D] point is shared, a
+            # [P, ...] stack is per-problem; anything asarray can't coerce —
+            # a dict / ragged-tuple params PYTREE (vision MLPs) — is a
+            # shared UNBATCHED point broadcast along the problem axis (pass
+            # None to use each spec's own x0)
+            try:
+                x0_stack = jnp.asarray(x0)
+            except (TypeError, ValueError):
+                x0_stack = tm.tree_broadcast_leading(x0, n_probs)
+            else:
+                if x0_stack.ndim == 1:
+                    x0_stack = jnp.broadcast_to(
+                        x0_stack, (n_probs,) + x0_stack.shape)
+                elif x0_stack.shape[0] != n_probs:
+                    raise ValueError(
+                        f"x0 leading axis {x0_stack.shape[0]} != number of "
+                        f"problems {n_probs}")
+        if comm is not None:
+            n_clients = stacked.num_clients
+            n_sched = (len(algo_or_chain._schedule(rounds).stage_id)
+                       if is_chain else rounds)
+            # one independent [R, N] schedule per (problem, seed) cell:
+            # cell (p, s) uses the config's fold p·len(seeds) + s, so
+            # runner.run(..., comm_masks=round_masks(R, N, fold=p*S+s))
+            # reproduces it
+            masks = jnp.stack([
+                jnp.stack([
+                    comm.round_masks(n_sched, n_clients,
+                                     fold=p * len(seeds) + s)
+                    for s in range(len(seeds))])
+                for p in range(n_probs)])
+            comm0 = comm.init_state(n_clients, tm.tree_index(x0_stack, 0))
         if is_chain:
             chain = algo_or_chain
             eta_sched = chain.eta_schedule(rounds, decay)
+            if comm is not None:
+                fn = _sweep_fn_chain_comm(chain, stacked, rounds,
+                                          problem_axis=True)
+                x_hat, history, final, kept, bits_up, bits_down = fn(
+                    stacked, x0_stack, keys, etas_arr, eta_sched, masks,
+                    comm0)
+                return SweepResult(history=history, final_sub=final,
+                                   x_hat=x_hat, seeds=seeds, etas=etas,
+                                   selected_initial=kept, bits_up=bits_up,
+                                   bits_down=bits_down, problems=prob_names)
             fn = _sweep_fn_chain(chain, stacked, rounds, problem_axis=True)
             x_hat, history, final, kept = fn(
                 stacked, x0_stack, keys, etas_arr, eta_sched)
             return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                                seeds=seeds, etas=etas, selected_initial=kept,
                                problems=prob_names)
+        if comm is not None:
+            fn = _sweep_fn_algo_comm(algo_or_chain, stacked, rounds,
+                                     eval_output, eta_mode,
+                                     problem_axis=True)
+            x_hat, history, final, bits_up, bits_down = fn(
+                stacked, x0_stack, keys, etas_arr, masks, comm0)
+            return SweepResult(history=history, final_sub=final, x_hat=x_hat,
+                               seeds=seeds, etas=etas, bits_up=bits_up,
+                               bits_down=bits_down, problems=prob_names)
         fn = _sweep_fn_algo(algo_or_chain, stacked, rounds, eval_output,
                             eta_mode, problem_axis=True)
         x_hat, history, final = fn(stacked, x0_stack, keys, etas_arr)
@@ -382,11 +439,8 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
     spec = runner_lib.as_spec(problem)
 
     if comm is not None:
-        from repro.comm import config as comm_cfg
-
-        comm_cfg.require_flat(x0)
         n_clients = problem.num_clients
-        comm0 = comm.init_state(n_clients, x0.shape[0])
+        comm0 = comm.init_state(n_clients, x0)
 
     if is_chain:
         chain = algo_or_chain

@@ -96,6 +96,34 @@ def tree_size(a):
     return sum(x.size for x in jax.tree.leaves(a))
 
 
+def tree_leaf_dims(a):
+    """Per-leaf element counts (static): the shape signature the leaf-wise
+    comm subsystem bills bits over — ``(D,)`` for a flat vector."""
+    return tuple(int(x.size) for x in jax.tree.leaves(a))
+
+
+def tree_ravel_rows(a):
+    """Flatten each leaf [S, ...] to [S, d_leaf] (kernel-boundary layout).
+
+    A no-op reshape on already-2D leaves, so flat-[D] comm paths stay
+    bitwise identical to the pre-pytree implementation.
+    """
+    return jax.tree.map(lambda x: x.reshape(x.shape[0], -1), a)
+
+
+def tree_unravel_rows(a2d, template):
+    """Inverse of ``tree_ravel_rows``: reshape [S, d_leaf] leaves back to the
+    template's [S, ...] leaf shapes."""
+    return jax.tree.map(lambda x, t: x.reshape(t.shape), a2d, template)
+
+
+def tree_bcast_rows(rows, a):
+    """Broadcast a per-row vector [S] against every leaf [S, ...] of ``a`` —
+    returns a pytree of [S, 1, …, 1]-shaped views aligned leaf-by-leaf."""
+    return jax.tree.map(
+        lambda x: rows.reshape(rows.shape + (1,) * (x.ndim - 1)), a)
+
+
 def tree_cast(a, dtype):
     return jax.tree.map(lambda x: x.astype(dtype), a)
 

@@ -5,10 +5,25 @@ is a registered JAX pytree whose *dynamic* content is arrays only — curvature
 ``A``, client offsets ``b_i``/``δ_i``, data shards ``X, y``, and the paper's
 constants (μ, β, ζ, ζ_F, σ, σ_F, F*) as array leaves — plus a small *static*
 part (the family tag, client/dimension counts, the minibatch size, the
-perturbation-base id). Oracles are dispatched through one family table keyed
-by the static tag (``lax.switch``-style: the dispatch is resolved at trace
-time because the tag is pytree metadata, so there is exactly one branch per
-family, never one per instance).
+perturbation-base id, the vision family's layer widths). Oracles are
+dispatched through one family table keyed by the static tag
+(``lax.switch``-style: the dispatch is resolved at trace time because the
+tag is pytree metadata, so there is exactly one branch per family, never one
+per instance).
+
+The family table (see ``FAMILIES``):
+
+  * ``quadratic`` — strongly convex federated quadratic, exact ζ; flat [D]
+    params (data: per-client curvature/offsets).
+  * ``perturbed`` — F_i = base(x) + ζ⟨u_i, x⟩ over a registered base id
+    (general convex / PL); flat [D] params.
+  * ``logreg``    — L2 logistic regression on data shards; flat [D] params.
+  * ``vision``    — nonconvex MLP classification on synthetic image shards
+    (paper Table 3): params are a PYTREE of layer weights/biases whose
+    widths live in the static ``arch`` metadata, so the whole
+    "X% homogeneous" heterogeneity grid (``data.vision_problem``) shares one
+    compiled executor and batches through ``run_sweep(problems=...)`` —
+    including ``comm=`` (the comm layer is leaf-wise).
 
 Why: the executors in ``core.runner``/``core.chain``/``core.sweep`` compile
 once per cache key. With the legacy closure problems (``data.problems``),
@@ -57,6 +72,7 @@ from repro.core import tree_math as tm
 FAMILY_QUADRATIC = "quadratic"
 FAMILY_PERTURBED = "perturbed"
 FAMILY_LOGREG = "logreg"
+FAMILY_VISION = "vision"
 
 CONST_KEYS = ("mu", "beta", "zeta", "zeta_f", "sigma", "sigma_f", "f_star")
 
@@ -235,6 +251,66 @@ def _logreg_value(spec, w, i, key):
     return v + spec.sigma_f * jax.random.normal(key, ())
 
 
+# -- vision: nonconvex MLP classification on synthetic image shards ---------
+#
+# The Table 3 family: parameters are a PYTREE (layer weights/biases, the
+# layer widths recorded in the static ``arch`` metadata), client data are
+# image shards from ``data.synthetic_vision`` partitioned with the paper's
+# "X% homogeneous" scheme. μ doubles as the L2 weight (like logreg);
+# softmax cross-entropy + L2 is the objective. The forward pass derives its
+# depth from the params pytree structure — static under trace, so one
+# compiled executor serves every same-arch instance (a whole
+# heterogeneity grid).
+
+def _vision_apply(params, x):
+    n = len(params) // 2
+    h = x
+    for i in range(n):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def _vision_loss_on(spec, params, X, y):
+    logits = _vision_apply(params, X)
+    ls = jax.nn.log_softmax(logits)
+    nll = -jnp.mean(jnp.take_along_axis(ls, y[:, None], axis=1))
+    reg = 0.5 * spec.mu * sum(jnp.sum(p**2) for p in jax.tree.leaves(params))
+    return nll + reg
+
+
+def _vision_client_loss(spec, params, i):
+    d = spec.data
+    return _vision_loss_on(spec, params, d["features"][i], d["labels"][i])
+
+
+def _vision_global_loss(spec, params):
+    d = spec.data
+    losses = jax.vmap(
+        lambda X, y: _vision_loss_on(spec, params, X, y)
+    )(d["features"], d["labels"])
+    return jnp.mean(losses)
+
+
+def _vision_batch(spec, i, key):
+    d = spec.data
+    n_per = d["features"].shape[1]
+    idx = jax.random.randint(key, (spec.batch,), 0, n_per)
+    return d["features"][i][idx], d["labels"][i][idx]
+
+
+def _vision_grad(spec, params, i, key):
+    X, y = _vision_batch(spec, i, key)
+    return jax.grad(_vision_loss_on, argnums=1)(spec, params, X, y)
+
+
+def _vision_value(spec, params, i, key):
+    X, y = _vision_batch(spec, i, key)
+    v = _vision_loss_on(spec, params, X, y)
+    return v + spec.sigma_f * jax.random.normal(key, ())
+
+
 FAMILIES: dict = {
     FAMILY_QUADRATIC: _Family(_quad_grad, _quad_value,
                               _quad_client_loss, _quad_global_loss),
@@ -242,6 +318,8 @@ FAMILIES: dict = {
                               _pert_client_loss, _pert_global_loss),
     FAMILY_LOGREG: _Family(_logreg_grad, _logreg_value,
                            _logreg_client_loss, _logreg_global_loss),
+    FAMILY_VISION: _Family(_vision_grad, _vision_value,
+                           _vision_client_loss, _vision_global_loss),
 }
 
 
@@ -263,7 +341,9 @@ class ProblemSpec:
 
     Static (pytree metadata — part of every executor cache key):
       ``family`` / ``num_clients`` / ``dim`` / ``base_id`` / ``batch`` /
-      ``f_star_known`` / ``x_star_known`` / ``name``.
+      ``arch`` (layer widths of the vision family's MLP — input, hidden…,
+      classes; ``()`` elsewhere) / ``f_star_known`` / ``x_star_known`` /
+      ``name``.
 
     The same spec type serves unbatched instances and stacked grids: a spec
     produced by ``stack_specs`` simply has a leading axis on every leaf.
@@ -275,6 +355,7 @@ class ProblemSpec:
     dim: int
     base_id: str = ""
     batch: int = 0
+    arch: tuple = ()
     f_star_known: bool = False
     x_star_known: bool = False
     name: str = "spec"
@@ -384,7 +465,7 @@ class ProblemSpec:
 jax.tree_util.register_dataclass(
     ProblemSpec,
     data_fields=["data", "consts", "x0", "x_star"],
-    meta_fields=["family", "num_clients", "dim", "base_id", "batch",
+    meta_fields=["family", "num_clients", "dim", "base_id", "batch", "arch",
                  "f_star_known", "x_star_known", "name"],
 )
 

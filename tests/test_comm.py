@@ -203,10 +203,23 @@ def test_partial_participation_converges(quad, x0):
 
 # ------------------------- guard rails --------------------------------------
 
-def test_comm_rejects_pytree_params(quad):
-    with pytest.raises(NotImplementedError, match="flat"):
-        runner.run(A.SGD(eta=0.1), quad, {"w": jnp.zeros((4, 4))}, 3,
-                   jax.random.PRNGKey(0), comm=CommConfig())
+def test_comm_accepts_pytree_state_layout():
+    """Pytree params are first-class comm citizens now (the flat-[D] guard
+    is gone): init_state sizes per-leaf EF residual tables from the params
+    pytree and bits helpers sum leaf-wise closed forms. End-to-end pytree
+    runs live in tests/test_comm_pytree.py (vision family)."""
+    from repro.comm import config as comm_cfg
+
+    params = {"w": jnp.zeros((4, 3)), "b": jnp.zeros((3,))}
+    st = CommConfig(error_feedback=True).init_state(5, params)
+    assert jax.tree.leaves(st.residual)[0].shape[0] == 5
+    assert {l.shape for l in jax.tree.leaves(st.residual)} == {
+        (5, 3), (5, 4, 3)}
+    assert comm_cfg.leaf_dims(params) == (3, 12)  # dict order: b, w
+    assert comm_cfg.total_dim(params) == 15
+    st_off = CommConfig().init_state(5, params)
+    assert not comm_cfg.ef_enabled(st_off)
+    assert comm_cfg.ef_enabled(st)
 
 
 def test_comm_unaware_algorithm_raises(quad, x0):

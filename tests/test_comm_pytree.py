@@ -1,0 +1,278 @@
+"""Pytree comm: leaf-wise bits accounting, vision-family equivalence, and
+the comm × problems sweep axis.
+
+The PR-4 guarantees on top of the PR-2 comm contract:
+
+(a) bits accounting over MULTI-LEAF parameter pytrees equals the sum of
+    per-leaf closed forms (QSGD bills one norm per leaf; top-k/rand-k keep
+    k coordinates per leaf with per-leaf index widths) — checked both
+    against the helper closed forms and against the bits an actual run
+    bills;
+(b) identity compression + full participation on the vision family is
+    bit-exact with the plain executors AND with the legacy
+    ``make_vision_problem`` closure path (``problems.without_spec``);
+(c) ``run_sweep(problems=..., comm=...)`` compiles each executor exactly
+    once across a ζ×σ problem grid with QSGD + partial participation
+    (``TRACE_COUNTS``-asserted) and every cell is reproducible per-call via
+    the documented ``fold = p·S + s`` mask schedule;
+(d) error-feedback residual tables mirror the parameter pytree leaf-for-leaf
+    and masked-out clients keep their residuals.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig, CommParams, uplink_bits_per_client
+from repro.comm import config as comm_cfg
+from repro.comm.compressors import COMP_IDS
+from repro.core import algorithms as A, chain, runner, sweep
+from repro.data import problems
+from repro.data.vision_problem import (
+    make_vision_problem, vision_accuracy, vision_spec,
+)
+
+N_CLIENTS = 4
+
+
+@pytest.fixture(scope="module")
+def vspec():
+    return vision_spec(
+        jax.random.PRNGKey(0), num_clients=N_CLIENTS,
+        num_classes=2 * N_CLIENTS, per_class=16, side=6, hidden=8, batch=4)
+
+
+@pytest.fixture(scope="module")
+def leaf_d(vspec):
+    return comm_cfg.leaf_dims(vspec.x0)
+
+
+# -------------------- (a) leaf-wise bits closed forms -----------------------
+
+def _py_closed_form(comp, d, bits=4, k=2):
+    """The per-leaf closed forms, recomputed independently in Python."""
+    if comp == "identity":
+        return 32.0 * d
+    if comp == "qsgd":
+        return 32.0 + d * (bits + 1.0)
+    idx = float(max(1, math.ceil(math.log2(d)))) if d > 1 else 1.0
+    return k * (32.0 + idx)
+
+
+@pytest.mark.parametrize("comp", ["identity", "qsgd", "topk", "randk"])
+def test_tree_bits_equal_sum_of_leaf_closed_forms(comp, leaf_d):
+    params = CommParams(
+        comp_id=jnp.asarray(COMP_IDS[comp], jnp.int32),
+        qsgd_bits=jnp.asarray(4.0, jnp.float32),
+        spars_k=jnp.asarray(2, jnp.int32))
+    tree_bits = float(
+        comm_cfg.uplink_bits_per_client_tree(params, leaf_d))
+    expect = sum(_py_closed_form(comp, d) for d in leaf_d)
+    assert tree_bits == expect
+    # ...and the single-leaf helper agrees per leaf
+    per_leaf = [float(uplink_bits_per_client(params, d)) for d in leaf_d]
+    assert tree_bits == sum(per_leaf)
+
+
+def test_billed_bits_match_leaf_sum_on_vision(vspec, leaf_d):
+    """The bits an actual pytree run bills equal N·Σ_leaf closed_form."""
+    algo = A.SGD(eta=0.1, k=2, output_mode="last")
+    total_d = sum(leaf_d)
+    cases = [
+        (CommConfig(), sum(_py_closed_form("identity", d) for d in leaf_d)),
+        (CommConfig(compressor="qsgd", qsgd_bits=4),
+         sum(_py_closed_form("qsgd", d) for d in leaf_d)),
+        (CommConfig(compressor="randk", spars_k=2, participation=0.5),
+         sum(_py_closed_form("randk", d) for d in leaf_d)),
+        (CommConfig(compressor="topk", spars_k=2),
+         sum(_py_closed_form("topk", d) for d in leaf_d)),
+    ]
+    for cfg, per_client in cases:
+        res = runner.run(algo, vspec, vspec.x0, 3, jax.random.PRNGKey(0),
+                         comm=cfg)
+        s_r = cfg.clients_per_round(N_CLIENTS)
+        np.testing.assert_array_equal(
+            np.asarray(res.bits_up), np.full(3, float(s_r * per_client)),
+            err_msg=cfg.name)
+        np.testing.assert_array_equal(
+            np.asarray(res.bits_down),
+            np.full(3, float(s_r * 32 * total_d)), err_msg=cfg.name)
+        assert cfg.uplink_bits(vspec.x0) == per_client
+
+
+def test_scaffold_vision_bills_two_pytrees_each_way(vspec, leaf_d):
+    res = runner.run(A.Scaffold(eta=0.1, local_steps=2, inner_batch=2),
+                     vspec, vspec.x0, 2, jax.random.PRNGKey(0),
+                     comm=CommConfig())
+    total = float(N_CLIENTS * 2 * 32 * sum(leaf_d))
+    np.testing.assert_array_equal(np.asarray(res.bits_up), np.full(2, total))
+    np.testing.assert_array_equal(np.asarray(res.bits_down),
+                                  np.full(2, total))
+
+
+def test_chain_selection_bits_use_total_pytree_dim(vspec, leaf_d):
+    ch = chain.fedchain(
+        A.FedAvg(eta=0.1, local_steps=2, inner_batch=2),
+        A.SGD(eta=0.1, k=2, output_mode="last"), selection_k=2,
+        name="vis-bits-chain")
+    res = ch.run(vspec, vspec.x0, 8, jax.random.PRNGKey(0),
+                 comm=CommConfig())
+    sel = res.switch_rounds[0] - 1
+    assert np.asarray(res.bits_up)[sel] == 2 * 32 * N_CLIENTS
+    assert np.asarray(res.bits_down)[sel] == (
+        2 * 32 * sum(leaf_d) * N_CLIENTS)
+
+
+# -------------------- (b) vision identity bit-exactness ---------------------
+
+@pytest.mark.parametrize("name", ["sgd", "fedavg", "scaffold"])
+def test_vision_identity_full_participation_bitexact(vspec, name):
+    algo = {
+        "sgd": A.SGD(eta=0.1, k=2, output_mode="last"),
+        "fedavg": A.FedAvg(eta=0.1, local_steps=2, inner_batch=2),
+        "scaffold": A.Scaffold(eta=0.1, local_steps=2, inner_batch=2),
+    }[name]
+    plain = runner.run(algo, vspec, vspec.x0, 6, jax.random.PRNGKey(3))
+    comm = runner.run(algo, vspec, vspec.x0, 6, jax.random.PRNGKey(3),
+                      comm=CommConfig())
+    assert np.array_equal(np.asarray(plain.history), np.asarray(comm.history))
+    for a, b in zip(jax.tree.leaves(plain.x_hat), jax.tree.leaves(comm.x_hat)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_vision_spec_bitexact_vs_legacy_closure_path():
+    """The spec operand path reproduces the legacy ``make_vision_problem``
+    closure path bit-for-bit (identity comm included)."""
+    problem, accuracy, init = make_vision_problem(
+        jax.random.PRNGKey(0), num_clients=N_CLIENTS,
+        num_classes=2 * N_CLIENTS, per_class=16, side=6, hidden=8, batch=4)
+    legacy = problems.without_spec(problem)
+    x0 = problem.spec.x0
+    algo = A.SGD(eta=0.1, k=2, output_mode="last")
+    r_spec = runner.run(algo, problem.spec, x0, 6, jax.random.PRNGKey(3))
+    r_legacy = runner.run(algo, legacy, x0, 6, jax.random.PRNGKey(3))
+    assert np.array_equal(np.asarray(r_spec.history),
+                          np.asarray(r_legacy.history))
+    r_comm = runner.run(algo, legacy, x0, 6, jax.random.PRNGKey(3),
+                        comm=CommConfig())
+    assert np.array_equal(np.asarray(r_spec.history),
+                          np.asarray(r_comm.history))
+    assert 0.0 <= float(accuracy(r_spec.x_hat)) <= 1.0
+
+
+# -------------------- (c) comm × problems axis ------------------------------
+
+def test_comm_problems_axis_single_compile_and_per_cell_repro():
+    specs = [problems.quadratic_spec(
+        jax.random.PRNGKey(0), num_clients=8, dim=16, mu=0.1, beta=1.0,
+        zeta=z, sigma=s, sigma_f=0.05)
+        for z in (0.2, 1.0) for s in (0.0, 0.2)]
+    x0 = specs[0].x0
+    cfg = CommConfig(compressor="qsgd", qsgd_bits=4, participation=0.5)
+    algo = A.SGD(eta=0.4, k=4, mu_avg=0.1, name="cxp-sgd")
+    seeds, etas = (0, 1), (0.3, 0.5)
+    before = dict(runner.TRACE_COUNTS)
+    res = sweep.run_sweep(algo, None, x0, 8, seeds=seeds, etas=etas,
+                          problems=specs, comm=cfg)
+    deltas = {k: v - before.get(k, 0)
+              for k, v in runner.TRACE_COUNTS.items()
+              if v != before.get(k, 0)}
+    assert deltas == {"sweep-comm-probs/cxp-sgd": 1, "runner-comm/cxp-sgd": 1}
+    assert res.bits_up.shape == (4, 2, 2, 8)
+    assert res.problems == tuple(s.name for s in specs)
+    # switching compressor / participation must not add a compile
+    for other in [CommConfig(), CommConfig(compressor="randk", spars_k=4)]:
+        sweep.run_sweep(algo, None, x0, 8, seeds=seeds, etas=etas,
+                        problems=specs, comm=other)
+    assert {k: v - before.get(k, 0)
+            for k, v in runner.TRACE_COUNTS.items()
+            if v != before.get(k, 0)} == deltas
+    # per-cell reproducibility: cell (p, s) uses mask fold p·S + s
+    pi, si, ei = 3, 1, 0
+    rr = runner.run(algo, specs[pi], x0, 8, jax.random.PRNGKey(seeds[si]),
+                    eta=etas[ei], comm=cfg,
+                    comm_masks=cfg.round_masks(8, 8,
+                                               fold=pi * len(seeds) + si))
+    np.testing.assert_array_equal(np.asarray(res.bits_up[pi, si, ei]),
+                                  np.asarray(rr.bits_up))
+    np.testing.assert_allclose(np.asarray(res.history[pi, si, ei]),
+                               np.asarray(rr.history), rtol=2e-4, atol=1e-6)
+
+
+def test_vision_comm_problems_axis(vspec):
+    """Table 3's heterogeneity grid rides the comm sweep in one compile."""
+    specs = [vision_spec(
+        jax.random.PRNGKey(0), num_clients=N_CLIENTS,
+        num_classes=2 * N_CLIENTS, per_class=16, side=6, hidden=8, batch=4,
+        homogeneous_frac=f) for f in (0.25, 0.75)]
+    algo = A.SGD(eta=0.2, k=2, output_mode="last", name="cxp-vis-sgd")
+    cfg = CommConfig(compressor="qsgd", qsgd_bits=4, participation=0.5)
+    before = dict(runner.TRACE_COUNTS)
+    res = sweep.run_sweep(algo, None, None, 5, seeds=(0, 1), etas=(0.1, 0.2),
+                          problems=specs, comm=cfg)
+    deltas = {k: v - before.get(k, 0)
+              for k, v in runner.TRACE_COUNTS.items()
+              if v != before.get(k, 0)}
+    assert deltas == {"sweep-comm-probs/cxp-vis-sgd": 1,
+                      "runner-comm/cxp-vis-sgd": 1}
+    h = np.asarray(res.history)
+    assert h.shape == (2, 2, 2, 5) and np.isfinite(h).all()
+    acc = vision_accuracy(specs[0])(
+        jax.tree.map(lambda l: l[0, 0, 0], res.x_hat))
+    assert 0.0 <= float(acc) <= 1.0
+
+
+# -------------------- (d) error-feedback residual pytrees -------------------
+
+def test_ef_residual_mirrors_param_pytree(vspec):
+    cfg = CommConfig(compressor="topk", spars_k=2, error_feedback=True,
+                     participation=0.5)
+    res = runner.run(A.SGD(eta=0.1, k=2, output_mode="last"), vspec,
+                     vspec.x0, 4, jax.random.PRNGKey(0), comm=cfg)
+    residual = res.state.comm.residual
+    assert (jax.tree_util.tree_structure(residual)
+            == jax.tree_util.tree_structure(vspec.x0))
+    for r, p in zip(jax.tree.leaves(residual), jax.tree.leaves(vspec.x0)):
+        assert r.shape == (N_CLIENTS,) + p.shape
+    # EF residuals are nonzero once a lossy compressor ran
+    assert any(float(jnp.abs(r).sum()) > 0 for r in jax.tree.leaves(residual))
+    assert np.isfinite(np.asarray(res.history)).all()
+
+
+def test_spars_k_validated_against_smallest_leaf(vspec):
+    # smallest vision leaf is the hidden bias (8 entries here)
+    small = min(comm_cfg.leaf_dims(vspec.x0))
+    with pytest.raises(ValueError, match="exceeds the parameter dimension"):
+        CommConfig(compressor="topk", spars_k=small + 1).init_state(
+            N_CLIENTS, vspec.x0)
+
+
+# -------------------- hypothesis: leaf-sum property -------------------------
+
+def test_hypothesis_leaf_partition_bits_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(dims=st.lists(st.integers(1, 4096), min_size=1, max_size=6),
+           comp=st.sampled_from(["identity", "qsgd", "topk", "randk"]),
+           bits=st.integers(1, 8), k=st.integers(1, 8))
+    @settings(max_examples=40, deadline=None)
+    def check(dims, comp, bits, k):
+        params = CommParams(
+            comp_id=jnp.asarray(COMP_IDS[comp], jnp.int32),
+            qsgd_bits=jnp.asarray(float(bits), jnp.float32),
+            spars_k=jnp.asarray(k, jnp.int32))
+        tree_bits = float(
+            comm_cfg.uplink_bits_per_client_tree(params, tuple(dims)))
+        expect = sum(
+            _py_closed_form(comp, d, bits=bits, k=k) for d in dims)
+        assert tree_bits == pytest.approx(expect, rel=1e-6)
+        # a single-leaf "pytree" degenerates to the flat closed form
+        flat = float(uplink_bits_per_client(params, dims[0]))
+        single = float(
+            comm_cfg.uplink_bits_per_client_tree(params, (dims[0],)))
+        assert flat == single
+
+    check()
