@@ -10,6 +10,9 @@ are machine- and cache-noisy, so only warm metrics gate:
 * ``BENCH_problem_sweep.json``:  ``methods[*].grid_warm_us``,
                                  ``method_stacking.warm_us``,
                                  ``comm_problems.warm_us``
+* ``BENCH_dist.json`` (with ``--dist``): ``devices[*].warm_s`` — the
+  sharded sweep's warm path per device count (the harness itself asserts
+  bitwise parity, single-trace, and zero warm re-traces before timing)
 
 The warm metrics are tens of milliseconds, where a noisy-neighbor scheduler
 blip alone can exceed the threshold — so each harness runs ``--samples``
@@ -40,6 +43,7 @@ from repro.core import runner
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 SWEEP_JSON = os.path.join(ROOT, "BENCH_sweep.json")
 PROBLEM_JSON = os.path.join(ROOT, "BENCH_problem_sweep.json")
+DIST_JSON = os.path.join(ROOT, "BENCH_dist.json")
 
 
 def _load(path):
@@ -51,6 +55,14 @@ def _load(path):
 def _warm_metrics_sweep(doc):
     return {f"sweep/{m}/sweep_warm_s": v["sweep_warm_s"]
             for m, v in doc["methods"].items()}
+
+
+def _warm_metrics_dist(doc):
+    """Warm sharded-sweep timings per device count. The dist harness runs
+    its own correctness gate in-process (bitwise parity + single trace +
+    zero warm re-traces), so timing regressions are all this compares."""
+    return {f"dist/devices={d}/warm_s": v["warm_s"]
+            for d, v in doc["devices"].items()}
 
 
 def _warm_metrics_problem(doc):
@@ -120,9 +132,16 @@ def main(argv=None) -> None:
     ap.add_argument("--keep-new", action="store_true",
                     help="keep the freshly-recorded BENCH files on disk "
                     "(re-baselining) instead of restoring the committed ones")
+    ap.add_argument("--dist", action="store_true",
+                    help="ALSO gate the sharded-sweep timings against the "
+                    "committed BENCH_dist.json (spawns 1/2/4/8-device "
+                    "subprocess workers — needs nothing from the parent's "
+                    "device count)")
     args = ap.parse_args(argv)
 
-    missing = [p for p in (SWEEP_JSON, PROBLEM_JSON) if not os.path.exists(p)]
+    baselines = [SWEEP_JSON, PROBLEM_JSON] + ([DIST_JSON] if args.dist
+                                              else [])
+    missing = [p for p in baselines if not os.path.exists(p)]
     if missing:
         print(f"no committed baseline(s): {missing}", file=sys.stderr)
         sys.exit(2)
@@ -130,6 +149,10 @@ def main(argv=None) -> None:
     prob_raw, prob_base = _load(PROBLEM_JSON)
     base = {**_warm_metrics_sweep(sweep_base),
             **_warm_metrics_problem(prob_base)}
+    dist_raw = None
+    if args.dist:
+        dist_raw, dist_base = _load(DIST_JSON)
+        base.update(_warm_metrics_dist(dist_base))
 
     from benchmarks import problem_sweep, sweep_bench
 
@@ -146,6 +169,12 @@ def main(argv=None) -> None:
             _, prob_fresh = _load(PROBLEM_JSON)
             sample = {**_warm_metrics_sweep(sweep_fresh),
                       **_warm_metrics_problem(prob_fresh)}
+            if args.dist:
+                from benchmarks import dist_scaling
+
+                dist_scaling.main(quick=True)  # asserts its own invariants
+                _, dist_fresh = _load(DIST_JSON)
+                sample.update(_warm_metrics_dist(dist_fresh))
             fresh = {k: min(v, fresh.get(k, v)) for k, v in sample.items()}
         _assert_zero_warm_retrace()
     finally:
@@ -154,6 +183,9 @@ def main(argv=None) -> None:
                 f.write(sweep_raw)
             with open(PROBLEM_JSON, "w") as f:
                 f.write(prob_raw)
+            if dist_raw is not None:
+                with open(DIST_JSON, "w") as f:
+                    f.write(dist_raw)
     failures, rows = _compare(base, fresh, args.threshold)
     print("\n".join(rows))
     if failures:

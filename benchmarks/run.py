@@ -2,25 +2,53 @@
 roofline/kernel reports. Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
+                                          [--devices N]
+
+``--devices N`` forces N fake XLA host devices (CPU) BEFORE the first JAX
+import, so the sharded sweep paths (``repro.dist``) are runnable on
+CPU-only machines and CI; harnesses pick the debug mesh up via
+``repro.dist.auto_grid_mesh``.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
+
+
+def _force_host_devices(n: int) -> None:
+    """Set the XLA device-count flag — only valid before JAX initializes."""
+    if "jax" in sys.modules:
+        print("--devices must be handled before JAX is imported; run via "
+              "`python -m benchmarks.run`, not from a live JAX process",
+              file=sys.stderr)
+        sys.exit(2)
+    flags = os.environ.get("XLA_FLAGS", "")
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={n}".strip())
+    os.environ["JAX_PLATFORMS"] = "cpu"  # host devices are a CPU feature
+    # literal name of repro.dist.mesh.DEVICES_ENV — importing it here would
+    # initialize JAX before the flag lands
+    os.environ["REPRO_DIST_DEVICES"] = str(n)
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale rounds")
     ap.add_argument("--only", default="", help="comma-separated harness names")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N fake XLA host devices (before JAX import) "
+                    "so sharded benchmarks run on CPU-only machines")
     args = ap.parse_args(argv)
+    if args.devices:
+        _force_host_devices(args.devices)
 
     from benchmarks import (
-        ablation_selection, appj1_large_k, comm_frontier, fig2_convergence,
-        kernels_bench, lower_bound_bench, problem_sweep, roofline,
-        sweep_bench, table1_strongly_convex, table2_general_convex,
-        table3_nonconvex, table3_vision, table4_pl,
+        ablation_selection, appj1_large_k, comm_frontier, dist_scaling,
+        fig2_convergence, kernels_bench, lower_bound_bench, problem_sweep,
+        roofline, sweep_bench, table1_strongly_convex,
+        table2_general_convex, table3_nonconvex, table3_vision, table4_pl,
     )
 
     harnesses = {
@@ -34,6 +62,7 @@ def main(argv=None) -> None:
         "appj1": appj1_large_k.main,  # App J.1 (large K)
         "ablation_selection": ablation_selection.main,  # Lemma H.2 on/off
         "comm_frontier": comm_frontier.main,  # suboptimality-vs-bits frontier
+        "dist_scaling": dist_scaling.main,  # sharded sweep, 1/2/4/8 devices
         "sweep": sweep_bench.main,  # vmapped grid vs per-call loop
         "problem_sweep": problem_sweep.main,  # ζ×σ problem grid, one compile
         "kernels": kernels_bench.main,  # Pallas kernels

@@ -157,6 +157,57 @@ def main(quick: bool = True):
         ";".join(f"hom={f}:acc={t['acc']:.4f}"
                  for f, t in zip(fracs, tuned_c))))
 
+    # local_fraction tuning axis (App. I.2): the chain's round split is a
+    # stacked schedule OPERAND (core.sweep.run_fraction_sweep), so the whole
+    # fraction grid rides ONE compiled executor — and on a multi-device host
+    # (benchmarks/run.py --devices N) the seeds × fractions cells shard over
+    # the grid mesh axis via repro.dist (bitwise identical either way)
+    from repro.dist import auto_grid_mesh
+
+    mesh = auto_grid_mesh()
+    fractions = (0.25, 0.5, 0.75)
+    frac_chain = chain.fedchain(
+        A.FedAvg(eta=0.5, local_steps=5, inner_batch=4),
+        A.SGD(eta=0.5, k=20, output_mode="last"),
+        selection_k=20, selection_s=s, name="fedavg->sgd-frac")
+    mid_spec = specs[len(specs) // 2]
+    before = dict(runner.TRACE_COUNTS)
+
+    def frac_call():
+        return sweep.run_fraction_sweep(
+            frac_chain, mid_spec, None, rounds, seeds=seeds,
+            fractions=fractions, mesh=mesh)
+
+    res_f, _ = walled(frac_call)
+    res_f, us_frac = walled(frac_call)
+    deltas = trace_deltas(before)
+    frac_tag = ("dist-frac" if mesh is not None else "sweep-frac")
+    assert_single_compile(
+        deltas, [f"{frac_tag}/{frac_chain.name}",
+                 f"chain-frac/{frac_chain.name}"],
+        what="local_fraction grid")
+
+    acc_fn = vision_accuracy(mid_spec)
+    acc = np.zeros((len(seeds), len(fractions)))
+    for si in range(len(seeds)):
+        for fi in range(len(fractions)):
+            params = jax.tree.map(lambda l: l[si, fi], res_f.x_hat)
+            acc[si, fi] = float(acc_fn(params))
+    med = np.median(acc, axis=0)
+    best = int(np.argmax(med))
+    report["local_fraction"] = {
+        "fractions": list(fractions),
+        "sharded_over_devices": (0 if mesh is None
+                                 else len(jax.devices())),
+        "trace_deltas": deltas,
+        "per_fraction_median_acc": {
+            f"frac={f}": float(m) for f, m in zip(fractions, med)},
+        "tuned": {"fraction": fractions[best], "acc": float(med[best])},
+    }
+    rows.append(emit(
+        "table3_vision/fedavg->sgd+frac_axis", us_frac,
+        ";".join(f"frac={f}:acc={m:.4f}" for f, m in zip(fractions, med))))
+
     report["trace_counts"] = dict(runner.TRACE_COUNTS)
     with open(os.path.join(ROOT, "BENCH_table3.json"), "w") as f:
         json.dump(report, f, indent=2)

@@ -1,10 +1,12 @@
 """FedChain core: the paper's contribution as a composable JAX module."""
 from repro.core import algorithms, chain, heterogeneity, lower_bound, runner, selection, sweep, theory, tree_math
 from repro.core.chain import Chain, fedchain
-from repro.core.sweep import SweepResult, run_method_sweep, run_sweep
+from repro.core.sweep import (
+    SweepResult, run_fraction_sweep, run_method_sweep, run_sweep,
+)
 
 __all__ = [
     "algorithms", "chain", "heterogeneity", "lower_bound", "runner",
     "selection", "sweep", "theory", "tree_math", "Chain", "fedchain",
-    "SweepResult", "run_method_sweep", "run_sweep",
+    "SweepResult", "run_fraction_sweep", "run_method_sweep", "run_sweep",
 ]

@@ -132,17 +132,49 @@ def fused_server_step(x, g_per, eta, *, c_i=None, c_mean=None,
 
 
 def sample_clients(key, num_clients: int, s: int):
-    """S of N uniformly without replacement (paper §2)."""
-    return jax.random.choice(key, num_clients, (s,), replace=False)
+    """S of N uniformly without replacement (paper §2).
+
+    Implemented as an integer-only Fisher–Yates partial shuffle rather than
+    ``jax.random.choice(replace=False)`` (or any argsort-of-randoms): the
+    sort-based samplers fuse with the downstream client-data gathers, and
+    XLA's single-device and multi-device (SPMD) pipelines lower that fusion
+    DIFFERENTLY — the sampled permutation itself then changes between the
+    vmapped and device-sharded sweep engines. Integer swaps admit no such
+    rewrite, so the draw is bitwise identical under every pipeline, which
+    the sharded grid engine (``repro.dist``) relies on for bit-exact
+    equality with the single-device path.
+    """
+    if not 0 < s <= num_clients:
+        # jax.random.choice(replace=False) used to reject this at trace
+        # time; the partial shuffle below would silently clamp instead
+        raise ValueError(
+            f"cannot sample {s} of {num_clients} clients without "
+            f"replacement")
+    idx = jnp.arange(num_clients, dtype=jnp.int32)
+    keys = jax.random.split(key, s)
+
+    def swap(i, idx):
+        j = jax.random.randint(keys[i], (), i, num_clients, dtype=jnp.int32)
+        vi = idx[i]
+        vj = idx[j]
+        return idx.at[i].set(vj).at[j].set(vi)
+
+    idx = jax.lax.fori_loop(0, s, swap, idx)
+    return idx[:s]
 
 
-def grad_k(problem, x, client_ids, key, k: int):
+def grad_k(problem, x, client_ids, key, k: int, *, keys=None):
     """Algo 7 ``Grad``: per-client average of K stochastic gradients at x.
 
-    Returns a pytree whose leaves have a leading [S] axis.
+    Returns a pytree whose leaves have a leading [S] axis. ``keys``
+    optionally supplies the [S, k, 2] per-query key rows directly (the
+    derivation below, precomputed) — the client-sharded round
+    (``repro.dist.client_axis``) passes each shard its rows so the oracle
+    streams match the single-device round exactly.
     """
     s = client_ids.shape[0]
-    keys = jax.random.split(key, s * k).reshape(s, k, -1)
+    if keys is None:
+        keys = jax.random.split(key, s * k).reshape(s, k, -1)
 
     def per_client(cid, ks):
         gs = jax.vmap(lambda kk: problem.grad_oracle(x, cid, kk))(ks)

@@ -92,6 +92,14 @@ class Chain:
                 self.selection_k, self.select_between_stages,
                 self.selection_costs_round, self.name)
 
+    def _fraction_free_key(self):
+        """Cache key WITHOUT the round fractions — the fraction-sweep
+        executor takes the whole per-round schedule as operands, so chains
+        differing only in ``fractions`` share one compile."""
+        return (tuple(self.stages), self.selection_s, self.selection_k,
+                self.select_between_stages, self.selection_costs_round,
+                self.name)
+
     def budgets(self, rounds: int):
         assert len(self.stages) == len(self.fractions)
         budgets = [max(1, int(round(f * rounds))) for f in self.fractions]
@@ -166,46 +174,52 @@ class Chain:
         ], np.float32)
         return jnp.asarray(out)
 
-    # -- executor ----------------------------------------------------------
+    def schedule_len(self, rounds: int) -> int:
+        """Rounds the executor actually scans (algorithm + costed selection
+        rounds). Constant across ``fractions`` for a fixed stage count —
+        what lets a local-fraction grid ride one executor as operands."""
+        return len(self._schedule(rounds).stage_id)
 
-    def executor_body(self, problem, rounds: int, comm: bool = False):
-        """Unjitted single-scan chain executor.
+    def _derive_keys(self, sched: _Schedule, key):
+        """Per-round and per-selection key streams for one schedule.
 
-        Returns ``fn(spec, x0, states0, key, eta_scale) -> (x_hat, history,
-        sel_flags)`` where ``spec`` is the PROBLEM OPERAND (a ``ProblemSpec``
-        pytree; None for legacy closure problems, which the executor then
-        captures), ``states0`` is the tuple of per-stage initial states
-        (their ``.eta`` fields carry any sweep stepsize scaling),
-        ``eta_scale`` is the [R] per-round η multiplier operand (see
-        ``eta_schedule``) and ``sel_flags`` is a [R] bool vector whose
-        entries at ``schedule.sel_indices`` record whether selection kept
-        the pre-stage anchor. The cache key is the spec's structural
-        identity, so a ζ/σ grid of same-shaped problems shares one compile.
-
-        With ``comm=True`` the signature grows ``(…, masks, comm0)`` — the
-        [R, N] participation schedule and the initial ``CommState`` — and the
-        executor returns ``(x_hat, history, sel_flags, bits_up, bits_down)``.
-        One ``CommState`` is carried through the whole chain (residuals and
-        bit meters persist across stage handoffs) and injected into the
-        active stage's state each round; selection rounds are billed at the
-        Lemma H.2 cost (2 candidates down, 1 scalar per candidate up).
+        Mirrors the seed's derivation: split(key, 2N), stage i's rounds use
+        split(keys[2i], budget_i), selections after stage i use keys[2i+1].
+        (With decay the seed split stage keys segment-wise; here rounds
+        always split once per stage, so decayed-chain streams differ from
+        pre-executor results — equivalent in distribution, not bit-for-bit.)
+        Pure jax ops: the executors call it on a traced key, the fraction
+        sweep calls it host-side per (fraction, seed) so the streams become
+        operands — bit-exact with ``Chain.run`` either way.
         """
-        key = ("chain-body", self._key(), runner_lib.problem_key(problem),
-               rounds, comm)
-        fn = runner_lib._cache_get(key)
-        if fn is not None:
-            return fn
+        n = len(self.stages)
+        stage_keys = jax.random.split(key, 2 * n)
+        round_keys = jnp.concatenate([
+            jax.random.split(stage_keys[2 * i], b)
+            for i, b in enumerate(sched.budgets)
+        ])
+        sel_keys = jnp.stack([stage_keys[2 * i + 1] for i in range(n)])
 
-        _, resolve = runner_lib._bind(problem)
+        # round_keys is indexed per stage block; build the flat [R] view
+        offsets = np.concatenate([[0], np.cumsum(sched.budgets)[:-1]])
+        flat_idx = jnp.asarray(
+            offsets[sched.stage_id] + sched.round_slot, jnp.int32)
+        return round_keys[flat_idx], sel_keys[jnp.asarray(sched.sel_stage)]
 
-        sched = self._schedule(rounds)
+    def _round_ops(self, problem):
+        """The per-round building blocks every chain executor shares:
+        selection, stage output/reinit/round dispatch, and the handoff
+        transition. All take the resolved problem ``p`` first; stage
+        dispatch is a ``lax.switch`` over the static stage tuple, so these
+        are schedule-agnostic (the fraction-sweep executor reuses them with
+        the schedule as operands)."""
+        import types
+
         stages = tuple(self.stages)
         n = len(stages)
-        sel_s = self.selection_s if self.selection_s > 0 else problem.num_clients
+        sel_s = (self.selection_s if self.selection_s > 0
+                 else problem.num_clients)
         sel_k = self.selection_k
-        stage_id = jnp.asarray(sched.stage_id)
-        kind = jnp.asarray(sched.kind)
-        hmode = jnp.asarray(sched.hmode)
 
         def _select2(p, anchor, cand, k_sel):
             """Lemma H.2 pick between the anchor and a candidate; True = kept
@@ -217,7 +231,8 @@ class Chain:
 
         def _output(j, states):
             return jax.lax.switch(
-                j, [lambda s, i=i: stages[i].output(s[i]) for i in range(n)], states)
+                j, [lambda s, i=i: stages[i].output(s[i]) for i in range(n)],
+                states)
 
         def _reinit(p, j, states, x_init):
             """states with slot j re-initialized at x_init, base η preserved."""
@@ -230,7 +245,8 @@ class Chain:
                     return states[:i] + (st,) + states[i + 1:]
                 return init_i
 
-            return jax.lax.switch(j, [branch(i) for i in range(n)], (states, x_init))
+            return jax.lax.switch(j, [branch(i) for i in range(n)],
+                                  (states, x_init))
 
         def _round(p, j, states, k_round, scale):
             def branch(i):
@@ -267,26 +283,6 @@ class Chain:
             return jax.lax.switch(j, [branch(i) for i in range(n)],
                                   (states, comm_st, k_round, scale, mask))
 
-        def _derive_keys(key):
-            # Per-round keys mirror the seed's derivation: split(key, 2N),
-            # stage i's rounds use split(keys[2i], budget_i), selections after
-            # stage i use keys[2i+1]. (With decay the seed split stage keys
-            # segment-wise; here rounds always split once per stage, so
-            # decayed-chain streams differ from pre-executor results —
-            # equivalent in distribution, not bit-for-bit.)
-            stage_keys = jax.random.split(key, 2 * n)
-            round_keys = jnp.concatenate([
-                jax.random.split(stage_keys[2 * i], b)
-                for i, b in enumerate(sched.budgets)
-            ])
-            sel_keys = jnp.stack([stage_keys[2 * i + 1] for i in range(n)])
-
-            # round_keys is indexed per stage block; build the flat [R] view
-            offsets = np.concatenate([[0], np.cumsum(sched.budgets)[:-1]])
-            flat_idx = jnp.asarray(
-                offsets[sched.stage_id] + sched.round_slot, jnp.int32)
-            return round_keys[flat_idx], sel_keys[jnp.asarray(sched.sel_stage)]
-
         def _handoff(p, states, anchor, sid, hmd, k_sel):
             def do_handoff(args):
                 states, anchor = args
@@ -313,6 +309,82 @@ class Chain:
             return jax.lax.cond(
                 hmd > 0, do_handoff, no_handoff, (states, anchor))
 
+        return types.SimpleNamespace(
+            select2=_select2, output=_output, reinit=_reinit, round=_round,
+            round_comm=_round_comm, handoff=_handoff)
+
+    def _plain_scan_body(self, ops, p, f_star):
+        """The non-comm per-round scan body over operand schedule rows
+        ``(k_round, k_sel, sid, knd, hmd, scale)`` — shared by the fixed-
+        schedule executor and the fraction-sweep (schedule-as-operand)
+        executor."""
+
+        def body(carry, xs):
+            states, anchor = carry
+            k_round, k_sel, sid, knd, hmd, scale = xs
+            states, anchor, h_kept = ops.handoff(
+                p, states, anchor, sid, hmd, k_sel)
+
+            def sel_round(args):
+                states, anchor = args
+                cand = ops.output(sid, states)
+                best, kept = ops.select2(p, anchor, cand, k_sel)
+                sub = p.global_loss(best) - f_star
+                return states, best, sub, kept
+
+            def alg_round(args):
+                states, anchor = args
+                states = ops.round(p, sid, states, k_round, scale)
+                sub = p.global_loss(ops.output(sid, states)) - f_star
+                return states, anchor, sub, jnp.asarray(False)
+
+            states, anchor, sub, s_kept = jax.lax.cond(
+                knd == 1, sel_round, alg_round, (states, anchor))
+            return (states, anchor), (sub, h_kept | s_kept)
+
+        return body
+
+    # -- executor ----------------------------------------------------------
+
+    def executor_body(self, problem, rounds: int, comm: bool = False):
+        """Unjitted single-scan chain executor.
+
+        Returns ``fn(spec, x0, states0, key, eta_scale) -> (x_hat, history,
+        sel_flags)`` where ``spec`` is the PROBLEM OPERAND (a ``ProblemSpec``
+        pytree; None for legacy closure problems, which the executor then
+        captures), ``states0`` is the tuple of per-stage initial states
+        (their ``.eta`` fields carry any sweep stepsize scaling),
+        ``eta_scale`` is the [R] per-round η multiplier operand (see
+        ``eta_schedule``) and ``sel_flags`` is a [R] bool vector whose
+        entries at ``schedule.sel_indices`` record whether selection kept
+        the pre-stage anchor. The cache key is the spec's structural
+        identity, so a ζ/σ grid of same-shaped problems shares one compile.
+
+        With ``comm=True`` the signature grows ``(…, masks, comm0)`` — the
+        [R, N] participation schedule and the initial ``CommState`` — and the
+        executor returns ``(x_hat, history, sel_flags, bits_up, bits_down)``.
+        One ``CommState`` is carried through the whole chain (residuals and
+        bit meters persist across stage handoffs) and injected into the
+        active stage's state each round; selection rounds are billed at the
+        Lemma H.2 cost (2 candidates down, 1 scalar per candidate up).
+        """
+        key = ("chain-body", self._key(), runner_lib.problem_key(problem),
+               rounds, comm)
+        fn = runner_lib._cache_get(key)
+        if fn is not None:
+            return fn
+
+        _, resolve = runner_lib._bind(problem)
+
+        sched = self._schedule(rounds)
+        stages = tuple(self.stages)
+        ops = self._round_ops(problem)
+        sel_s = (self.selection_s if self.selection_s > 0
+                 else problem.num_clients)
+        stage_id = jnp.asarray(sched.stage_id)
+        kind = jnp.asarray(sched.kind)
+        hmode = jnp.asarray(sched.hmode)
+
         if not comm:
 
             def executor(spec, x0, states0, key, eta_scale):
@@ -323,33 +395,10 @@ class Chain:
                     algo_base.audit_state(st)  # protocol check, once per trace
                 runner_lib.TRACE_COUNTS[f"chain/{self.name}"] += 1
                 f_star = runner_lib.f_star_operand(p)
-                keys_r, keys_s = _derive_keys(key)
-
-                def body(carry, xs):
-                    states, anchor = carry
-                    k_round, k_sel, sid, knd, hmd, scale = xs
-                    states, anchor, h_kept = _handoff(
-                        p, states, anchor, sid, hmd, k_sel)
-
-                    def sel_round(args):
-                        states, anchor = args
-                        cand = _output(sid, states)
-                        best, kept = _select2(p, anchor, cand, k_sel)
-                        sub = p.global_loss(best) - f_star
-                        return states, best, sub, kept
-
-                    def alg_round(args):
-                        states, anchor = args
-                        states = _round(p, sid, states, k_round, scale)
-                        sub = p.global_loss(_output(sid, states)) - f_star
-                        return states, anchor, sub, jnp.asarray(False)
-
-                    states, anchor, sub, s_kept = jax.lax.cond(
-                        knd == 1, sel_round, alg_round, (states, anchor))
-                    return (states, anchor), (sub, h_kept | s_kept)
+                keys_r, keys_s = self._derive_keys(sched, key)
 
                 (states, _), (history, kept_flags) = jax.lax.scan(
-                    body, (states0, x0),
+                    self._plain_scan_body(ops, p, f_star), (states0, x0),
                     (keys_r, keys_s, stage_id, kind, hmode, eta_scale))
                 x_hat = stages[-1].output(states[-1])
                 return x_hat, history, kept_flags
@@ -365,7 +414,7 @@ class Chain:
                     algo_base.audit_state(st)
                 runner_lib.TRACE_COUNTS[f"chain-comm/{self.name}"] += 1
                 f_star = runner_lib.f_star_operand(p)
-                keys_r, keys_s = _derive_keys(key)
+                keys_r, keys_s = self._derive_keys(sched, key)
                 # selection broadcasts the whole parameter pytree (leaf dims
                 # are static under trace)
                 sel_up, sel_down = comm_cfg.selection_round_bits(x0, sel_s)
@@ -382,21 +431,21 @@ class Chain:
                     comm_st = comm_st._replace(residual=jax.tree.map(
                         lambda r: jnp.where(hmd > 0, 0.0, r),
                         comm_st.residual))
-                    states, anchor, h_kept = _handoff(
+                    states, anchor, h_kept = ops.handoff(
                         p, states, anchor, sid, hmd, k_sel)
 
                     def sel_round(args):
                         states, anchor, comm_st = args
-                        cand = _output(sid, states)
-                        best, kept = _select2(p, anchor, cand, k_sel)
+                        cand = ops.output(sid, states)
+                        best, kept = ops.select2(p, anchor, cand, k_sel)
                         sub = p.global_loss(best) - f_star
                         return states, best, comm_st, sub, kept
 
                     def alg_round(args):
                         states, anchor, comm_st = args
-                        states, comm_st = _round_comm(
+                        states, comm_st = ops.round_comm(
                             p, sid, states, comm_st, k_round, scale, mask)
-                        sub = p.global_loss(_output(sid, states)) - f_star
+                        sub = p.global_loss(ops.output(sid, states)) - f_star
                         return states, anchor, comm_st, sub, jnp.asarray(False)
 
                     states, anchor, comm_st, sub, s_kept = jax.lax.cond(
@@ -435,6 +484,68 @@ class Chain:
             return fn
         return runner_lib._cache_put(
             key, jax.jit(self.executor_body(problem, rounds, comm)))
+
+    def fraction_executor_body(self, problem, rounds: int):
+        """The schedule-as-OPERAND chain executor (local-fraction sweeps).
+
+        ``executor_body`` bakes this chain's ``fractions`` into the trace
+        twice: the per-stage key derivation and the selection-row indices.
+        This variant instead takes the whole per-round schedule as data —
+
+          ``fn(spec, x0, states0, keys_r, keys_s, stage_id, kind, hmode,
+          eta_scale) -> (x_hat, history, kept_flags)``
+
+        with ``keys_r``/``keys_s`` the [R, 2] precomputed key streams
+        (``_derive_keys`` run host-side) and ``stage_id``/``kind``/``hmode``
+        the [R] rows of ``_schedule``. The App. I.2 ``local_fraction``
+        tuning grid then rides ONE compile: every fraction of a fixed stage
+        tuple has the same schedule LENGTH (``schedule_len``), so a stacked
+        fraction axis is just more operand rows — and each row replays the
+        exact key streams ``Chain.run``'s executor derives in-trace for the
+        corresponding per-fraction chain. Cache key:
+        ``_fraction_free_key`` — chains differing only in ``fractions``
+        share the compile.
+        """
+        key = ("chain-frac-body", self._fraction_free_key(),
+               runner_lib.problem_key(problem), rounds)
+        fn = runner_lib._cache_get(key)
+        if fn is not None:
+            return fn
+
+        _, resolve = runner_lib._bind(problem)
+        stages = tuple(self.stages)
+        ops = self._round_ops(problem)
+
+        def executor(spec, x0, states0, keys_r, keys_s, stage_id, kind,
+                     hmode, eta_scale):
+            from repro.core.algorithms import base as algo_base
+
+            p = resolve(spec)
+            for st in states0:
+                algo_base.audit_state(st)
+            runner_lib.TRACE_COUNTS[f"chain-frac/{self.name}"] += 1
+            f_star = runner_lib.f_star_operand(p)
+
+            (states, _), (history, kept_flags) = jax.lax.scan(
+                self._plain_scan_body(ops, p, f_star), (states0, x0),
+                (keys_r, keys_s, stage_id, kind, hmode, eta_scale))
+            x_hat = stages[-1].output(states[-1])
+            return x_hat, history, kept_flags
+
+        return runner_lib._cache_put(key, executor)
+
+    def with_local_fraction(self, fraction: float) -> "Chain":
+        """This chain with its FIRST stage's round share set to ``fraction``
+        (two-stage chains only — the paper's Algo 1 tuning knob)."""
+        if len(self.stages) != 2:
+            raise ValueError(
+                f"local_fraction is the two-stage FedChain knob; this chain "
+                f"has {len(self.stages)} stages")
+        if not 0.0 < fraction < 1.0:
+            raise ValueError(f"local_fraction must be in (0, 1), "
+                             f"got {fraction}")
+        return dataclasses.replace(
+            self, fractions=(fraction, 1.0 - fraction))
 
     def init_states(self, problem, x0, eta_scale=None):
         """Per-stage initial states; ``eta_scale`` multiplies every stage's

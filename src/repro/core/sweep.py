@@ -60,7 +60,21 @@ problem grid is still ONE compile. Parameters may be arbitrary pytrees
 
 Decay sweeps: stepsize-decay multipliers are an executor *operand* (PR-2),
 so ``run_decay_sweep`` batches a ``decay_factor`` grid through one compile
-of the same chain executor ``run_sweep`` uses.
+of the same chain executor ``run_sweep`` uses. Local-fraction sweeps
+(``run_fraction_sweep``) go further: the chain's whole per-round schedule —
+stage assignment, selection placement, key streams — is an operand
+(``Chain.fraction_executor_body``), so the App. I.2 tuning grid rides one
+compile too.
+
+Device sharding
+---------------
+Grid cells are built by the ``make_*_cell`` factories below and batched two
+ways from the same cells: the vmapped engine here (a flattened problems ×
+seeds cells axis × a dense stepsize axis), or sharded over a ``('grid',)``
+device mesh via ``run_sweep(..., mesh=...)`` / ``run_fraction_sweep(...,
+mesh=...)`` (``repro.dist.grid``), which partitions the identical cell
+stacks across devices with ``shard_map`` — bitwise the same results, one
+compile either way.
 """
 from __future__ import annotations
 
@@ -69,6 +83,7 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import chain as chain_lib
 from repro.core import runner as runner_lib
@@ -99,8 +114,6 @@ class SweepResult:
     def cumulative_bits(self):
         """[S, E, R] total (up + down) bits through each round, float64 —
         the x-axis of a cost-vs-accuracy frontier."""
-        import numpy as np
-
         if self.bits_up is None:
             raise ValueError("not a comm sweep: no bits were accounted")
         per_round = (np.asarray(self.bits_up, np.float64)
@@ -108,20 +121,18 @@ class SweepResult:
         return np.cumsum(per_round, axis=-1)
 
 
-def _sweep_fn_algo(algo, problem, rounds: int, eval_output: bool,
-                   eta_mode: str, problem_axis: bool = False):
-    """The seeds × etas grid cell; ``problem_axis`` wraps one more vmap over
-    a stacked spec operand (+ per-problem x0) — one compiled call for the
-    whole problems × seeds × stepsizes grid."""
-    key = ("sweep-algo", algo, runner_lib.problem_key(problem), rounds,
-           eval_output, eta_mode, problem_axis)
-    fn = runner_lib._cache_get(key)
-    if fn is not None:
-        return fn
+def make_algo_cell(algo, problem, rounds: int, eval_output: bool,
+                   eta_mode: str, tag: str):
+    """ONE grid cell of a plain-algorithm sweep: ``cell(spec, x0, key, eta)``.
 
+    The vmapped engine below and the sharded engine (``repro.dist.grid``)
+    both build their grids from these cell factories, so a sharded sweep
+    runs bit-for-bit the same per-cell computation as the single-device one
+    — only the batching around the cell differs. ``tag`` names the
+    ``TRACE_COUNTS`` entry the cell bumps when traced.
+    """
     body = runner_lib.executor_body(algo, problem, eval_output)
     _, resolve = runner_lib._bind(problem)
-    tag = "sweep-probs" if problem_axis else "sweep"
     eta_scale = jnp.ones((rounds,), jnp.float32)
 
     def cell(spec, x0, key, eta):
@@ -137,24 +148,14 @@ def _sweep_fn_algo(algo, problem, rounds: int, eval_output: bool,
         sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
         return x_hat, history, sub
 
-    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, None, 0)),
-                    in_axes=(None, None, 0, None))
-    if problem_axis:
-        grid = jax.vmap(grid, in_axes=(0, 0, None, None))
-    return runner_lib._cache_put(key, jax.jit(grid))
+    return cell
 
 
-def _sweep_fn_algo_comm(algo, problem, rounds: int, eval_output: bool,
-                        eta_mode: str, problem_axis: bool = False):
-    key = ("sweep-algo-comm", algo, runner_lib.problem_key(problem), rounds,
-           eval_output, eta_mode, problem_axis)
-    fn = runner_lib._cache_get(key)
-    if fn is not None:
-        return fn
-
+def make_algo_comm_cell(algo, problem, rounds: int, eval_output: bool,
+                        eta_mode: str, tag: str):
+    """Comm-enabled cell: ``cell(spec, x0, key, eta, masks, comm0)``."""
     body = runner_lib.comm_executor_body(algo, problem, eval_output)
     _, resolve = runner_lib._bind(problem)
-    tag = "sweep-comm-probs" if problem_axis else "sweep-comm"
     eta_scale = jnp.ones((rounds,), jnp.float32)
 
     def cell(spec, x0, key, eta, masks, comm0):
@@ -171,13 +172,104 @@ def _sweep_fn_algo_comm(algo, problem, rounds: int, eval_output: bool,
         sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
         return x_hat, history, sub, bits_up, bits_down
 
-    # masks batch with the seed axis (one independent schedule per seed) and,
-    # with a problems axis, per problem as well ([P, S, R, N] schedules); the
-    # initial CommState is identical across the grid (zeros) so it broadcasts
-    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, None, 0, None, None)),
-                    in_axes=(None, None, 0, None, 0, None))
-    if problem_axis:
-        grid = jax.vmap(grid, in_axes=(0, 0, None, None, 0, None))
+    return cell
+
+
+def make_chain_cell(chain, problem, rounds: int, tag: str):
+    """Chain cell: ``cell(spec, x0, key, mult, eta_scale)``."""
+    body = chain.executor_body(problem, rounds)
+    _, resolve = runner_lib._bind(problem)
+    sel_idx = jnp.asarray(chain._schedule(rounds).sel_indices, jnp.int32)
+
+    def cell(spec, x0, key, mult, eta_scale):
+        p = resolve(spec)
+        runner_lib.TRACE_COUNTS[f"{tag}/{chain.name}"] += 1
+        states0 = chain.init_states(p, x0, eta_scale=mult)
+        x_hat, history, kept = body(spec, x0, states0, key, eta_scale)
+        sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
+        return x_hat, history, sub, kept[sel_idx]
+
+    return cell
+
+
+def make_chain_comm_cell(chain, problem, rounds: int, tag: str):
+    """Comm-enabled chain cell:
+    ``cell(spec, x0, key, mult, eta_scale, masks, comm0)``."""
+    body = chain.executor_body(problem, rounds, comm=True)
+    _, resolve = runner_lib._bind(problem)
+    sel_idx = jnp.asarray(chain._schedule(rounds).sel_indices, jnp.int32)
+
+    def cell(spec, x0, key, mult, eta_scale, masks, comm0):
+        p = resolve(spec)
+        runner_lib.TRACE_COUNTS[f"{tag}/{chain.name}"] += 1
+        states0 = chain.init_states(p, x0, eta_scale=mult)
+        x_hat, history, kept, bits_up, bits_down = body(
+            spec, x0, states0, key, eta_scale, masks, comm0)
+        sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
+        return x_hat, history, sub, kept[sel_idx], bits_up, bits_down
+
+    return cell
+
+
+def make_chain_fraction_cell(chain, problem, rounds: int, tag: str):
+    """Local-fraction-sweep cell over operand schedules:
+    ``cell(spec, x0, keys_r, keys_s, stage_id, kind, hmode, eta_scale)``.
+    Returns the FULL [R] kept-flags row (selection positions differ per
+    fraction, so callers gather them per schedule)."""
+    body = chain.fraction_executor_body(problem, rounds)
+    _, resolve = runner_lib._bind(problem)
+
+    def cell(spec, x0, keys_r, keys_s, stage_id, kind, hmode, eta_scale):
+        p = resolve(spec)
+        runner_lib.TRACE_COUNTS[f"{tag}/{chain.name}"] += 1
+        states0 = chain.init_states(p, x0)
+        x_hat, history, kept = body(spec, x0, states0, keys_r, keys_s,
+                                    stage_id, kind, hmode, eta_scale)
+        sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
+        return x_hat, history, sub, kept
+
+    return cell
+
+
+def _sweep_fn_algo(algo, problem, rounds: int, eval_output: bool,
+                   eta_mode: str, problem_axis: bool = False):
+    """The seeds × etas grid cell; ``problem_axis`` wraps one more vmap over
+    a stacked spec operand (+ per-problem x0) — one compiled call for the
+    whole problems × seeds × stepsizes grid."""
+    key = ("sweep-algo", algo, runner_lib.problem_key(problem), rounds,
+           eval_output, eta_mode, problem_axis)
+    fn = runner_lib._cache_get(key)
+    if fn is not None:
+        return fn
+
+    tag = "sweep-probs" if problem_axis else "sweep"
+    cell = make_algo_cell(algo, problem, rounds, eval_output, eta_mode, tag)
+    # problems × seeds ride ONE flattened cells axis (spec/x0/keys stacked
+    # per cell, c = p·S + s) — the same batching structure the sharded
+    # engine (repro.dist.grid) runs per shard, so sharding is bitwise
+    inner = jax.vmap(cell, in_axes=(None, None, None, 0))
+    grid = jax.vmap(inner, in_axes=((0, 0, 0, None) if problem_axis
+                                    else (None, None, 0, None)))
+    return runner_lib._cache_put(key, jax.jit(grid))
+
+
+def _sweep_fn_algo_comm(algo, problem, rounds: int, eval_output: bool,
+                        eta_mode: str, problem_axis: bool = False):
+    key = ("sweep-algo-comm", algo, runner_lib.problem_key(problem), rounds,
+           eval_output, eta_mode, problem_axis)
+    fn = runner_lib._cache_get(key)
+    if fn is not None:
+        return fn
+
+    tag = "sweep-comm-probs" if problem_axis else "sweep-comm"
+    cell = make_algo_comm_cell(algo, problem, rounds, eval_output, eta_mode,
+                               tag)
+    # masks batch with the cells axis (one independent [R, N] schedule per
+    # (problem, seed) cell); the initial CommState is identical across the
+    # grid (zeros) so it broadcasts
+    inner = jax.vmap(cell, in_axes=(None, None, None, 0, None, None))
+    grid = jax.vmap(inner, in_axes=((0, 0, 0, None, 0, None) if problem_axis
+                                    else (None, None, 0, None, 0, None)))
     return runner_lib._cache_put(key, jax.jit(grid))
 
 
@@ -188,24 +280,11 @@ def _sweep_fn_chain(chain, problem, rounds: int, problem_axis: bool = False):
     if fn is not None:
         return fn
 
-    body = chain.executor_body(problem, rounds)
-    _, resolve = runner_lib._bind(problem)
     tag = "sweep-probs" if problem_axis else "sweep"
-    sched = chain._schedule(rounds)
-    sel_idx = jnp.asarray(sched.sel_indices, jnp.int32)
-
-    def cell(spec, x0, key, mult, eta_scale):
-        p = resolve(spec)
-        runner_lib.TRACE_COUNTS[f"{tag}/{chain.name}"] += 1
-        states0 = chain.init_states(p, x0, eta_scale=mult)
-        x_hat, history, kept = body(spec, x0, states0, key, eta_scale)
-        sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
-        return x_hat, history, sub, kept[sel_idx]
-
-    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, None, 0, None)),
-                    in_axes=(None, None, 0, None, None))
-    if problem_axis:
-        grid = jax.vmap(grid, in_axes=(0, 0, None, None, None))
+    cell = make_chain_cell(chain, problem, rounds, tag)
+    inner = jax.vmap(cell, in_axes=(None, None, None, 0, None))
+    grid = jax.vmap(inner, in_axes=((0, 0, 0, None, None) if problem_axis
+                                    else (None, None, 0, None, None)))
     return runner_lib._cache_put(key, jax.jit(grid))
 
 
@@ -217,27 +296,27 @@ def _sweep_fn_chain_comm(chain, problem, rounds: int,
     if fn is not None:
         return fn
 
-    body = chain.executor_body(problem, rounds, comm=True)
-    _, resolve = runner_lib._bind(problem)
     tag = "sweep-comm-probs" if problem_axis else "sweep-comm"
-    sched = chain._schedule(rounds)
-    sel_idx = jnp.asarray(sched.sel_indices, jnp.int32)
+    cell = make_chain_comm_cell(chain, problem, rounds, tag)
+    inner = jax.vmap(cell, in_axes=(None, None, None, 0, None, None, None))
+    grid = jax.vmap(inner, in_axes=(
+        (0, 0, 0, None, None, 0, None) if problem_axis
+        else (None, None, 0, None, None, 0, None)))
+    return runner_lib._cache_put(key, jax.jit(grid))
 
-    def cell(spec, x0, key, mult, eta_scale, masks, comm0):
-        p = resolve(spec)
-        runner_lib.TRACE_COUNTS[f"{tag}/{chain.name}"] += 1
-        states0 = chain.init_states(p, x0, eta_scale=mult)
-        x_hat, history, kept, bits_up, bits_down = body(
-            spec, x0, states0, key, eta_scale, masks, comm0)
-        sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
-        return x_hat, history, sub, kept[sel_idx], bits_up, bits_down
 
-    grid = jax.vmap(
-        jax.vmap(cell, in_axes=(None, None, None, 0, None, None, None)),
-        in_axes=(None, None, 0, None, None, 0, None))
-    if problem_axis:
-        grid = jax.vmap(grid,
-                        in_axes=(0, 0, None, None, None, 0, None))
+def _sweep_fn_chain_fraction(chain, problem, rounds: int):
+    key = ("sweep-chain-frac", chain._fraction_free_key(),
+           runner_lib.problem_key(problem), rounds)
+    fn = runner_lib._cache_get(key)
+    if fn is not None:
+        return fn
+
+    cell = make_chain_fraction_cell(chain, problem, rounds, "sweep-frac")
+    # axes: seeds (outer) × fractions (inner); key streams vary on both,
+    # schedule rows on the fraction axis only
+    grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, 0, 0, 0, 0, 0, 0)),
+                    in_axes=(None, None, 0, 0, None, None, None, None))
     return runner_lib._cache_put(key, jax.jit(grid))
 
 
@@ -294,6 +373,41 @@ def _sweep_fn_methods(methods, problem, rounds: int, eval_output: bool):
     return runner_lib._cache_put(key, jax.jit(grid))
 
 
+def _normalize_x0_stack(x0, stacked, n_probs: int):
+    """The ``problems=`` x0 semantics, shared with the sharded engine:
+    None -> each spec's own x0; array-likes keep the historical behaviour (a
+    [D] point is shared, a [P, ...] stack is per-problem); a params PYTREE
+    (vision MLPs) is a shared unbatched point broadcast along the axis."""
+    if x0 is None:
+        return stacked.x0
+    try:
+        x0_stack = jnp.asarray(x0)
+    except (TypeError, ValueError):
+        return tm.tree_broadcast_leading(x0, n_probs)
+    if x0_stack.ndim == 1:
+        return jnp.broadcast_to(x0_stack, (n_probs,) + x0_stack.shape)
+    if x0_stack.shape[0] != n_probs:
+        raise ValueError(
+            f"x0 leading axis {x0_stack.shape[0]} != number of "
+            f"problems {n_probs}")
+    return x0_stack
+
+
+def _resolve_eta_mode(algo_or_chain, eta_mode):
+    """Default + validate ``eta_mode`` (shared with the sharded engine)."""
+    is_chain = isinstance(algo_or_chain, chain_lib.Chain)
+    if eta_mode is None:
+        eta_mode = "scale" if is_chain else "absolute"
+    if eta_mode not in ("absolute", "scale"):
+        raise ValueError(
+            f"eta_mode must be 'absolute' or 'scale', got {eta_mode!r}")
+    if is_chain and eta_mode != "scale":
+        raise ValueError(
+            "chains sweep stepsize *multipliers* (one η per stage makes an "
+            "absolute grid ambiguous); pass eta_mode='scale' or omit it")
+    return eta_mode
+
+
 def _as_stacked_specs(problems):
     """Normalize the ``problems=`` argument into (stacked spec, names)."""
     from repro.data import spec as spec_lib
@@ -318,7 +432,7 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
               seeds: Sequence[int], etas: Sequence[float],
               eta_mode: Optional[str] = None, eval_output: bool = True,
               decay: Optional[dict] = None, comm=None,
-              problems=None) -> SweepResult:
+              problems=None, mesh=None) -> SweepResult:
     """Run every (seed, η) — and optionally (problem, seed, η) — grid cell
     in one compiled, vmapped call.
 
@@ -335,7 +449,12 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
     The whole problems × seeds × stepsizes grid runs through ONE compiled
     executor; results gain a leading problem axis and ``x0`` may be None
     (each problem then starts from its own ``spec.x0``), a single point
-    (shared), or a [P, …] stack.
+    (shared), or a [P, …] stack. Memory note: the problems × seeds axes
+    run as one flattened cells axis (the layout the device-sharded engine
+    partitions — what makes ``mesh=`` bitwise), which materializes every
+    spec data leaf once per seed; for data-heavy families with many seeds,
+    split seeds across calls (the executor is cached — extra calls cost
+    dispatch, not compiles).
 
     ``comm`` (a ``repro.comm.CommConfig``) enables compressed uplinks /
     partial participation / bits accounting; seed s uses the config's mask
@@ -343,16 +462,21 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
     reproduces any single cell). With a ``problems=`` axis, cell (p, s)
     uses ``fold=p*len(seeds)+s`` — independent schedules per problem AND
     seed, still reproducible per cell.
+
+    ``mesh`` (a 1-D ``('grid',)`` device mesh — ``repro.dist.make_grid_mesh``)
+    shards the flattened problems × seeds cells across devices via
+    ``shard_map`` (``repro.dist.grid``): same semantics, same bits, bitwise
+    identical results, one compile per executor structure.
     """
+    if mesh is not None:
+        from repro.dist import grid as dist_grid
+
+        return dist_grid.run_sweep_sharded(
+            algo_or_chain, problem, x0, rounds, seeds=seeds, etas=etas,
+            eta_mode=eta_mode, eval_output=eval_output, decay=decay,
+            comm=comm, problems=problems, mesh=mesh)
     is_chain = isinstance(algo_or_chain, chain_lib.Chain)
-    if eta_mode is None:
-        eta_mode = "scale" if is_chain else "absolute"
-    if eta_mode not in ("absolute", "scale"):
-        raise ValueError(f"eta_mode must be 'absolute' or 'scale', got {eta_mode!r}")
-    if is_chain and eta_mode != "scale":
-        raise ValueError(
-            "chains sweep stepsize *multipliers* (one η per stage makes an "
-            "absolute grid ambiguous); pass eta_mode='scale' or omit it")
+    eta_mode = _resolve_eta_mode(algo_or_chain, eta_mode)
     seeds = tuple(int(s) for s in seeds)
     etas = tuple(float(e) for e in etas)
     if not seeds:
@@ -366,41 +490,39 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
                 "decay sweeps: wrap the algorithm in a Chain")
         stacked, prob_names = _as_stacked_specs(problems)
         n_probs = len(prob_names)
-        if x0 is None:
-            x0_stack = stacked.x0
-        else:
-            # array-likes (incl. sequences of same-shape vectors, the legacy
-            # input) keep the historical semantics: a [D] point is shared, a
-            # [P, ...] stack is per-problem; anything asarray can't coerce —
-            # a dict / ragged-tuple params PYTREE (vision MLPs) — is a
-            # shared UNBATCHED point broadcast along the problem axis (pass
-            # None to use each spec's own x0)
-            try:
-                x0_stack = jnp.asarray(x0)
-            except (TypeError, ValueError):
-                x0_stack = tm.tree_broadcast_leading(x0, n_probs)
-            else:
-                if x0_stack.ndim == 1:
-                    x0_stack = jnp.broadcast_to(
-                        x0_stack, (n_probs,) + x0_stack.shape)
-                elif x0_stack.shape[0] != n_probs:
-                    raise ValueError(
-                        f"x0 leading axis {x0_stack.shape[0]} != number of "
-                        f"problems {n_probs}")
+        n_seeds = len(seeds)
+        x0_stack = _normalize_x0_stack(x0, stacked, n_probs)
+        # problems × seeds flatten to ONE cells axis, c = p·S + s (the
+        # contract of repro.dist.partition): spec/x0 leaves repeat per seed
+        # and keys tile per problem — the exact per-cell stacks the sharded
+        # engine partitions over devices, so run_sweep(..., mesh=...) is
+        # bitwise identical to this path. The cost is real operand memory:
+        # every spec data leaf is materialized S times for the call, which
+        # for data-heavy families (vision image shards, logreg feature
+        # tensors) multiplies the problem-data footprint by the seed count.
+        # When that dominates, split seeds across calls — the executor is
+        # cached, so extra calls cost dispatch, not compiles.
+        spec_c = jax.tree.map(
+            lambda l: jnp.repeat(l, n_seeds, axis=0), stacked)
+        x0_c = jax.tree.map(
+            lambda l: jnp.repeat(l, n_seeds, axis=0), x0_stack)
+        keys_c = jnp.tile(keys, (n_probs, 1))
+
+        def grid_shape(outs):
+            return jax.tree.map(
+                lambda l: l.reshape((n_probs, n_seeds) + l.shape[1:]), outs)
+
         if comm is not None:
             n_clients = stacked.num_clients
-            n_sched = (len(algo_or_chain._schedule(rounds).stage_id)
-                       if is_chain else rounds)
+            n_sched = (algo_or_chain.schedule_len(rounds) if is_chain
+                       else rounds)
             # one independent [R, N] schedule per (problem, seed) cell:
             # cell (p, s) uses the config's fold p·len(seeds) + s, so
             # runner.run(..., comm_masks=round_masks(R, N, fold=p*S+s))
             # reproduces it
             masks = jnp.stack([
-                jnp.stack([
-                    comm.round_masks(n_sched, n_clients,
-                                     fold=p * len(seeds) + s)
-                    for s in range(len(seeds))])
-                for p in range(n_probs)])
+                comm.round_masks(n_sched, n_clients, fold=p * n_seeds + s)
+                for p in range(n_probs) for s in range(n_seeds)])
             comm0 = comm.init_state(n_clients, tm.tree_index(x0_stack, 0))
         if is_chain:
             chain = algo_or_chain
@@ -408,16 +530,16 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
             if comm is not None:
                 fn = _sweep_fn_chain_comm(chain, stacked, rounds,
                                           problem_axis=True)
-                x_hat, history, final, kept, bits_up, bits_down = fn(
-                    stacked, x0_stack, keys, etas_arr, eta_sched, masks,
-                    comm0)
+                x_hat, history, final, kept, bits_up, bits_down = grid_shape(
+                    fn(spec_c, x0_c, keys_c, etas_arr, eta_sched, masks,
+                       comm0))
                 return SweepResult(history=history, final_sub=final,
                                    x_hat=x_hat, seeds=seeds, etas=etas,
                                    selected_initial=kept, bits_up=bits_up,
                                    bits_down=bits_down, problems=prob_names)
             fn = _sweep_fn_chain(chain, stacked, rounds, problem_axis=True)
-            x_hat, history, final, kept = fn(
-                stacked, x0_stack, keys, etas_arr, eta_sched)
+            x_hat, history, final, kept = grid_shape(
+                fn(spec_c, x0_c, keys_c, etas_arr, eta_sched))
             return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                                seeds=seeds, etas=etas, selected_initial=kept,
                                problems=prob_names)
@@ -425,14 +547,15 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
             fn = _sweep_fn_algo_comm(algo_or_chain, stacked, rounds,
                                      eval_output, eta_mode,
                                      problem_axis=True)
-            x_hat, history, final, bits_up, bits_down = fn(
-                stacked, x0_stack, keys, etas_arr, masks, comm0)
+            x_hat, history, final, bits_up, bits_down = grid_shape(
+                fn(spec_c, x0_c, keys_c, etas_arr, masks, comm0))
             return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                                seeds=seeds, etas=etas, bits_up=bits_up,
                                bits_down=bits_down, problems=prob_names)
         fn = _sweep_fn_algo(algo_or_chain, stacked, rounds, eval_output,
                             eta_mode, problem_axis=True)
-        x_hat, history, final = fn(stacked, x0_stack, keys, etas_arr)
+        x_hat, history, final = grid_shape(
+            fn(spec_c, x0_c, keys_c, etas_arr))
         return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                            seeds=seeds, etas=etas, problems=prob_names)
 
@@ -446,7 +569,7 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
         chain = algo_or_chain
         eta_sched = chain.eta_schedule(rounds, decay)
         if comm is not None:
-            n_sched = len(chain._schedule(rounds).stage_id)
+            n_sched = chain.schedule_len(rounds)
             masks = jnp.stack([
                 comm.round_masks(n_sched, n_clients, fold=s)
                 for s in range(len(seeds))])
@@ -567,6 +690,128 @@ def run_decay_sweep(chain, problem, x0, rounds: int, *,
                        seeds=seeds, etas=factors)
 
 
+def fraction_schedule_operands(chain, rounds: int, fractions,
+                               seeds, decay: Optional[dict] = None):
+    """The operand rows a local-fraction sweep feeds the fraction executor.
+
+    Returns ``(chains, keys_r [S,F,R,2], keys_s [S,F,R,2], stage_id [F,R],
+    kind [F,R], hmode [F,R], eta_rows [F,R], sel_indices [F][n_sel])`` —
+    per-fraction schedules stacked into operands (every fraction of a fixed
+    stage tuple has the same schedule length), with the key streams
+    precomputed host-side by the SAME derivation the fixed-schedule executor
+    performs in-trace — each row therefore replays ``Chain.run``'s exact
+    RNG streams on the corresponding per-fraction chain. Shared by the
+    vmapped and sharded fraction sweeps.
+
+    Fractions must leave BOTH stages at least one round inside the fixed
+    budget: ``Chain.budgets`` clamps a starved last stage back up to one
+    round, which would CHANGE the schedule length and break the stacked
+    operand layout — such fractions are rejected up front with the valid
+    range for this round budget.
+    """
+    chains = [chain.with_local_fraction(float(f)) for f in fractions]
+    # a costed between-stage selection occupies one scanned round of the
+    # total budget; the first stage may take at most rounds − n_sel − 1
+    n_sel = ((len(chain.stages) - 1)
+             if (chain.select_between_stages and chain.selection_costs_round)
+             else 0)
+    max_b0 = rounds - n_sel - 1
+    for ch in chains:
+        b0 = max(1, int(round(ch.fractions[0] * rounds)))
+        if b0 > max_b0:
+            lo = 0.5 / rounds  # anything rounding to ≥ 1 is fine below
+            hi = (max_b0 + 0.49) / rounds
+            raise ValueError(
+                f"local_fraction {ch.fractions[0]:g} gives the first stage "
+                f"{b0} of {rounds} rounds, leaving none for the second "
+                f"stage (selection costs {n_sel}); with rounds={rounds} "
+                f"sweepable fractions lie in about ({lo:g}, {hi:g}]")
+    scheds = [ch._schedule(rounds) for ch in chains]
+    n_sched = len(scheds[0].stage_id)
+    # backstop only — the budget check above is the real gate
+    for ch, sc in zip(chains, scheds):
+        if len(sc.stage_id) != n_sched:
+            raise AssertionError(
+                f"fraction {ch.fractions[0]} produced schedule length "
+                f"{len(sc.stage_id)} != {n_sched}")
+    stage_id = jnp.asarray(np.stack([s.stage_id for s in scheds]))
+    kind = jnp.asarray(np.stack([s.kind for s in scheds]))
+    hmode = jnp.asarray(np.stack([s.hmode for s in scheds]))
+    eta_rows = jnp.stack([ch.eta_schedule(rounds, decay) for ch in chains])
+    per_seed = []
+    for s in seeds:
+        key = jax.random.PRNGKey(s)
+        per_seed.append([ch._derive_keys(sc, key)
+                         for ch, sc in zip(chains, scheds)])
+    keys_r = jnp.stack([jnp.stack([kr for kr, _ in row]) for row in per_seed])
+    keys_s = jnp.stack([jnp.stack([ks for _, ks in row]) for row in per_seed])
+    sel_indices = [list(s.sel_indices) for s in scheds]
+    return chains, keys_r, keys_s, stage_id, kind, hmode, eta_rows, sel_indices
+
+
+def gather_selection_flags(kept, sel_indices):
+    """[S, F, R] full kept-flags rows → the [S, F, n_sel] selection
+    decisions: selection rounds sit at fraction-dependent positions, so
+    each fraction's flags are gathered from its own schedule's indices.
+    Shared by the vmapped and sharded fraction sweeps."""
+    kept_np = np.asarray(kept)
+    return jnp.asarray(np.stack(
+        [kept_np[:, fi, idx] for fi, idx in enumerate(sel_indices)], axis=1))
+
+
+def run_fraction_sweep(chain, problem, x0, rounds: int, *,
+                       seeds: Sequence[int], fractions: Sequence[float],
+                       decay: Optional[dict] = None,
+                       mesh=None) -> SweepResult:
+    """Sweep a two-stage chain's ``local_fraction`` (App. I.2 tuning grid)
+    in one compiled, vmapped call.
+
+    The per-round schedule — which stage runs each round, where the
+    Lemma H.2 selection sits, the stage-aligned key streams and η decay —
+    is an executor OPERAND (``Chain.fraction_executor_body``), so the whole
+    fraction grid shares ONE compile, and every (seed, fraction) cell
+    replays ``Chain.run`` on ``chain.with_local_fraction(f)`` with
+    ``PRNGKey(seed)`` — same RNG streams, equal to float tolerance under
+    vmap batching (exactly like ``run_sweep`` vs per-call ``Chain.run``).
+    Results carry seeds × fractions with the fraction
+    grid in the ``etas`` slot (like ``run_decay_sweep``). ``x0=None`` uses
+    the problem spec's own initial point. ``mesh`` shards the seeds ×
+    fractions cells across a ``('grid',)`` device mesh
+    (``repro.dist.grid.run_fraction_sweep_sharded``), bitwise identically.
+    """
+    if not isinstance(chain, chain_lib.Chain):
+        raise TypeError("run_fraction_sweep takes a Chain")
+    seeds = tuple(int(s) for s in seeds)
+    fractions = tuple(float(f) for f in fractions)
+    if not seeds or not fractions:
+        raise ValueError("run_fraction_sweep needs ≥1 seed and ≥1 fraction")
+    if mesh is not None:
+        from repro.dist import grid as dist_grid
+
+        return dist_grid.run_fraction_sweep_sharded(
+            chain, problem, x0, rounds, seeds=seeds, fractions=fractions,
+            decay=decay, mesh=mesh)
+    if x0 is None:
+        spec = runner_lib.as_spec(problem)
+        if spec is None:
+            raise TypeError("x0=None needs a spec-backed problem "
+                            "(uses the spec's own x0)")
+        x0 = spec.x0
+
+    (_, keys_r, keys_s, stage_id, kind, hmode, eta_rows,
+     sel_indices) = fraction_schedule_operands(
+         chain, rounds, fractions, seeds, decay)
+
+    fn = _sweep_fn_chain_fraction(chain, problem, rounds)
+    x_hat, history, final, kept = fn(
+        runner_lib.as_spec(problem), x0, keys_r, keys_s, stage_id, kind,
+        hmode, eta_rows)
+    return SweepResult(
+        history=history, final_sub=final, x_hat=x_hat, seeds=seeds,
+        etas=fractions,
+        selected_initial=gather_selection_flags(kept, sel_indices))
+
+
 def best_cell(result: SweepResult):
     """Grid index of the lowest finite final suboptimality —
     ``(seed_idx, eta_idx)``, with a leading problem/method index when the
@@ -575,8 +820,6 @@ def best_cell(result: SweepResult):
     Raises if every cell diverged — callers must not mistake a nan/inf run
     for a tuned result.
     """
-    import numpy as np
-
     final = np.asarray(result.final_sub)
     masked = np.where(np.isfinite(final), final, np.inf)
     if not np.isfinite(masked).any():

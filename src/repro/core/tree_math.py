@@ -37,7 +37,12 @@ def tree_zeros_like(a):
 
 
 def tree_dot(a, b):
-    leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    # sum(x*y), not vdot: XLA:CPU lowers batched dots with a batch-size-
+    # dependent reduction blocking; multiply-then-sum is batch-invariant,
+    # which the sharded sweep engine (repro.dist) relies on for bitwise
+    # equality with the vmapped engine.
+    leaves = jax.tree.leaves(
+        jax.tree.map(lambda x, y: jnp.sum(x * y), a, b))
     return sum(leaves) if leaves else jnp.asarray(0.0)
 
 

@@ -87,15 +87,23 @@ class _Family(NamedTuple):
 
 
 # -- quadratic: F_i(x) = 0.5 x^T A_i x − b_i^T x (shared/spread curvature) --
+#
+# Inner products are written sum(b * x), not jnp.dot: XLA:CPU lowers a
+# BATCHED dot (GEMV) with a batch-size-dependent reduction blocking, which
+# would make vmapped grids of different batch sizes — in particular the
+# device-sharded sweep (repro.dist), whose per-shard batch is 1/n_dev of
+# the global one — differ from the single-device engine in the last ulp.
+# Elementwise-multiply-then-sum lowers to a batch-invariant row reduction,
+# keeping sharded and vmapped sweeps bitwise identical (tested).
 
 def _quad_client_loss(spec, x, i):
     d = spec.data
-    return 0.5 * jnp.sum(d["a_i"][i] * x**2) - jnp.dot(d["b"][i], x)
+    return 0.5 * jnp.sum(d["a_i"][i] * x**2) - jnp.sum(d["b"][i] * x)
 
 
 def _quad_global_loss(spec, x):
     d = spec.data
-    return 0.5 * jnp.sum(d["a_bar"] * x**2) - jnp.dot(d["b_bar"], x)
+    return 0.5 * jnp.sum(d["a_bar"] * x**2) - jnp.sum(d["b_bar"] * x)
 
 
 def _quad_grad(spec, x, i, key):
@@ -193,7 +201,8 @@ def _pert_base(spec):
 
 
 def _pert_client_loss(spec, x, i):
-    return _pert_base(spec)(x) + spec.zeta * jnp.dot(spec.data["u"][i], x)
+    # sum(u*x), not dot: batch-invariant lowering (see the quadratic note)
+    return _pert_base(spec)(x) + spec.zeta * jnp.sum(spec.data["u"][i] * x)
 
 
 def _pert_global_loss(spec, x):

@@ -1,0 +1,60 @@
+"""JAX API compatibility shims for the dist subsystem.
+
+The repo supports a range of JAX versions: older ones expose
+``jax.experimental.shard_map.shard_map(..., check_rep=...)`` and a
+``jax.make_mesh`` without ``axis_types``; newer ones promote ``shard_map`` to
+``jax.shard_map(..., check_vma=...)`` and add ``jax.sharding.AxisType``.
+Everything mesh- or shard_map-shaped in this repo (``dist``, and the
+``launch/`` scaffold rebased onto it) goes through these two functions so the
+version skew lives in exactly one place.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """``shard_map`` without replication checking, on any supported JAX.
+
+    Replication checking is disabled (``check_rep``/``check_vma`` False):
+    the dist executors vmap cell bodies whose outputs are device-varying by
+    construction, which the static replication checker cannot always prove.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:  # jax >= 0.6: top-level API, check_vma keyword
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:  # transitional versions kept check_rep
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+    from jax.experimental.shard_map import shard_map as exp_sm
+
+    return exp_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` that tolerates the ``AxisType`` API generations.
+
+    Newer JAX wants explicit ``axis_types`` (all ``Auto`` here — the dist
+    executors place every operand explicitly through ``shard_map`` /
+    ``NamedSharding``); older JAX has no ``AxisType`` at all.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def abstract_mesh(axis_shapes, axis_names):
+    """``jax.sharding.AbstractMesh`` across its signature generations:
+    older JAX takes one ``((name, size), ...)`` tuple, newer JAX mirrors
+    ``make_mesh``'s ``(shapes, names)`` pair."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_shapes)))

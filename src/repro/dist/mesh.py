@@ -1,0 +1,78 @@
+"""Sweep meshes: the ``grid`` (and optional ``client``) axes.
+
+Functions, not module constants — importing this module never touches JAX
+device state. On CPU, multiple host devices come from
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set BEFORE the first
+JAX import (``benchmarks/run.py --devices N`` does this; the dist tests use
+subprocess isolation).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+# benchmarks/run.py --devices N exports this so harnesses can tell "the
+# operator asked for a debug mesh" apart from "we happen to see N devices"
+DEVICES_ENV = "REPRO_DIST_DEVICES"
+
+
+def make_grid_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D ``('grid',)`` mesh over the first ``n_devices`` devices (all by
+    default) — the cells axis of a sharded sweep."""
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devices):
+        raise ValueError(f"need 1..{len(devices)} devices, got {n}")
+    return Mesh(np.asarray(devices[:n]), ("grid",))
+
+
+def make_grid_client_mesh(grid: int, client: int) -> Mesh:
+    """2-D ``('grid', 'client')`` mesh: cells x intra-cell client shards."""
+    devices = jax.devices()
+    if grid * client > len(devices):
+        raise ValueError(
+            f"grid={grid} x client={client} needs {grid * client} devices, "
+            f"have {len(devices)}")
+    return Mesh(
+        np.asarray(devices[: grid * client]).reshape(grid, client),
+        ("grid", "client"))
+
+
+def auto_grid_mesh(min_devices: int = 2) -> Optional[Mesh]:
+    """The grid mesh a harness should use, or None for the vmapped path.
+
+    Returns a mesh over every visible device when there are at least
+    ``min_devices`` (i.e. when ``--devices``/XLA_FLAGS forced a multi-device
+    host, or real accelerators are attached); single-device hosts stay on
+    the plain vmapped engine — same results either way (bit-exact, tested).
+    """
+    n = len(jax.devices())
+    want = os.environ.get(DEVICES_ENV)
+    if want is not None and int(want) != n:
+        raise RuntimeError(
+            f"{DEVICES_ENV}={want} but JAX sees {n} devices — the XLA flag "
+            f"must be set before the first JAX import "
+            f"(use benchmarks/run.py --devices, which orders this correctly)")
+    return make_grid_mesh(n) if n >= min_devices else None
+
+
+def grid_size(mesh: Mesh) -> int:
+    """Number of shards along the ``grid`` axis (1 if the mesh lacks it)."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("grid", 1)
+
+
+def client_size(mesh: Mesh) -> int:
+    """Number of shards along the ``client`` axis (1 if absent)."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("client", 1)
+
+
+def mesh_signature(mesh: Mesh) -> tuple:
+    """The mesh's contribution to an executor cache key: axis layout plus
+    concrete device identity (an executor compiled for one device set must
+    not be served for another)."""
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(d.id for d in mesh.devices.flat))

@@ -1,0 +1,59 @@
+"""Grid partitioning: flatten problems x seeds cells, pad, and invert.
+
+Host-side (numpy) logic only — the arrays it produces are gather indices and
+validity masks that ``dist.grid`` applies to device operands. Keeping it
+free of JAX makes the bijection contract property-testable in microseconds
+for arbitrary grid sizes x device counts.
+
+Contract (property-tested in ``tests/test_dist_sweep.py``):
+
+* cell (p, s) of a P x S grid flattens to index ``p * S + s`` — the SAME
+  order as the single-device sweep's nested problem/seed vmaps (and the same
+  fold the comm mask schedules use), so the sharded grid reproduces every
+  cell's RNG and mask stream exactly;
+* ``pad_cells(n_cells, n_shards)`` returns gather indices whose first
+  ``n_cells`` entries are the identity and whose padding tail repeats real
+  cells (cyclically) up to the next multiple of ``n_shards`` — padding cells
+  run real (duplicate) work and are DROPPED, never masked into results;
+* because real cells occupy the prefix in order, ``unpad`` is a plain
+  prefix slice: composed with the gather it is a bijection onto the
+  unpadded cells.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def padded_count(n_cells: int, n_shards: int) -> int:
+    """Smallest multiple of ``n_shards`` that holds ``n_cells`` cells."""
+    if n_cells < 1 or n_shards < 1:
+        raise ValueError(f"need n_cells >= 1 and n_shards >= 1, got "
+                         f"{n_cells}, {n_shards}")
+    return ((n_cells + n_shards - 1) // n_shards) * n_shards
+
+
+def pad_cells(n_cells: int, n_shards: int):
+    """(src_idx [C_pad] int64, valid [C_pad] bool): gather map from padded
+    cell slots to real cells, identity on the valid prefix."""
+    c_pad = padded_count(n_cells, n_shards)
+    src_idx = np.arange(c_pad, dtype=np.int64) % n_cells
+    valid = np.arange(c_pad) < n_cells
+    return src_idx, valid
+
+
+def flatten_cell(p: int, s: int, n_seeds: int) -> int:
+    """Flat index of grid cell (problem p, seed s)."""
+    return p * n_seeds + s
+
+
+def cell_coords(n_problems: int, n_seeds: int):
+    """(p_idx [C], s_idx [C]) coordinate vectors of the flattened grid, in
+    flat-index order (c = p * n_seeds + s)."""
+    flat = np.arange(n_problems * n_seeds)
+    return flat // n_seeds, flat % n_seeds
+
+
+def unpad(x, n_cells: int):
+    """Drop padding slots from a leading padded-cells axis (prefix slice —
+    see the module contract)."""
+    return x[:n_cells]

@@ -24,6 +24,17 @@ COLLECTIVE_OPS = (
     "collective-permute",
 )
 
+
+def cost_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across JAX versions: older
+    releases return a per-device LIST of dicts (all devices run the same
+    SPMD program, so the first entry is the per-device cost), newer ones a
+    single dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
 # matches e.g.  bf16[128,7168]{1,0}  inside an HLO instruction line
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 # one HLO instruction line: "%name = <shape(s)> opcode(" — opcode may have

@@ -88,7 +88,7 @@ def _extrapolate(base, bumps, units):
 
 
 def _cost_record(compiled):
-    cost = compiled.cost_analysis()
+    cost = analysis.cost_dict(compiled)
     colls = analysis.parse_collectives(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),
@@ -316,7 +316,7 @@ def lower_fedchain(arch: str, mesh, mesh_name: str):
         co = lo.compile()
         results["local_phase"] = {
             "collectives": analysis.parse_collectives(co.as_text(), pod_size=pod_size),
-            "cost": {k: v for k, v in co.cost_analysis().items()
+            "cost": {k: v for k, v in analysis.cost_dict(co).items()
                      if isinstance(v, (int, float))},
             "memory": analysis.memory_summary(co.memory_analysis()),
         }
@@ -340,7 +340,7 @@ def lower_fedchain(arch: str, mesh, mesh_name: str):
             co3 = j_glob.lower(param_shapes, (), model_zoo.batch_specs(cfg, shape)).compile()
         results["global_step"] = {
             "collectives": analysis.parse_collectives(co3.as_text(), pod_size=pod_size),
-            "cost": {k: v for k, v in co3.cost_analysis().items()
+            "cost": {k: v for k, v in analysis.cost_dict(co3).items()
                      if isinstance(v, (int, float))},
             "memory": analysis.memory_summary(co3.memory_analysis()),
         }

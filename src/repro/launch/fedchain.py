@@ -34,9 +34,10 @@ from repro.sharding import RuleSet, param_specs
 
 def make_fl_mesh(clients: int = 4, data: int = 4, model: int = 16):
     """Single-pod FL mesh: the 16-way data axis split into client × data."""
-    return jax.make_mesh(
-        (clients, data, model), ("client", "data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.dist import compat
+
+    return compat.make_mesh(
+        (clients, data, model), ("client", "data", "model"))
 
 
 def client_axis_name(mesh) -> str:

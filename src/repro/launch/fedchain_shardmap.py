@@ -1,5 +1,14 @@
 """FedChain local phase via shard_map + grouped collectives.
 
+.. note:: REBASED onto the distributed sweep subsystem (``repro.dist``).
+   This module predates ``repro.dist`` and survives as the grouped-
+   collective formulation for *model-training* meshes without a dedicated
+   client axis; ``repro.dist.client_axis`` is the maintained client-axis
+   layer (per-shard Pallas aggregation + one psum join) and
+   ``repro.dist.grid`` is the production path for experiment grids. The
+   ``shard_map`` calls go through ``repro.dist.compat`` (one home for the
+   JAX version skew).
+
 The pjit path (`launch.fedchain`) gives each client group its own parameter
 replica along a mesh axis. This module is the alternative single-pod
 formulation promised in DESIGN.md §2: clients are CONTIGUOUS SUBGROUPS of the
@@ -16,7 +25,6 @@ per-device values inside the mapped function.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
@@ -24,6 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import tree_math as tm
+from repro.dist import compat
 
 
 def client_groups(data_size: int, clients: int):
@@ -74,12 +83,11 @@ def make_grouped_local_steps(
         params, losses = jax.lax.scan(body, params, batches)
         return params, jnp.mean(losses)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local_steps,
-        mesh=mesh,
+        mesh,
         in_specs=(P(), P(None, "data")),
         out_specs=(P(), P()),
-        check_vma=False,
     )
 
 
@@ -91,8 +99,7 @@ def make_grouped_sync(*, mesh, clients: int):
         return jax.tree.map(
             lambda p: jax.lax.pmean(p, axis_name="data"), params)
 
-    return jax.shard_map(
-        sync, mesh=mesh, in_specs=(P(),), out_specs=P(), check_vma=False)
+    return compat.shard_map(sync, mesh, in_specs=(P(),), out_specs=P())
 
 
 def run_grouped_fedavg_round(

@@ -2,30 +2,29 @@
 
 Functions, not module-level constants, so importing this module never touches
 jax device state (device count is locked at first jax init).
+
+Mesh construction goes through ``repro.dist.compat`` (the distributed sweep
+subsystem owns the JAX mesh/shard_map version skew); the sweep-grid meshes
+themselves live in ``repro.dist.mesh`` — these are the model-parallel
+(data × model) meshes of the serving/training scaffold.
 """
 from __future__ import annotations
 
-import jax
+from repro.dist import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod (256 chips) or 2×16×16 two-pod (512 chips) mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 2, model: int = 2, *, pod: int = 0):
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
     if pod:
-        return jax.make_mesh(
-            (pod, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return compat.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def data_shards(mesh) -> int:

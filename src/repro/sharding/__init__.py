@@ -1,10 +1,11 @@
 from repro.sharding.rules import (
     DEFAULT_LOGICAL_RULES, PARAM_RULES, RuleSet, SEQ_SHARDED_RULES, active_rules,
-    logical, param_logical_axes, param_shardings, param_specs, use_rules,
+    leading_axis_specs, logical, param_logical_axes, param_shardings,
+    param_specs, use_rules,
 )
 
 __all__ = [
     "DEFAULT_LOGICAL_RULES", "PARAM_RULES", "RuleSet", "SEQ_SHARDED_RULES",
-    "active_rules", "logical", "param_logical_axes", "param_shardings",
-    "param_specs", "use_rules",
+    "active_rules", "leading_axis_specs", "logical", "param_logical_axes",
+    "param_shardings", "param_specs", "use_rules",
 ]

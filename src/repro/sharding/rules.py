@@ -40,6 +40,12 @@ DEFAULT_LOGICAL_RULES = {
     "ssm_state": None,
     "frontend": None,
     "layers": None,  # scan-stack axis
+    # sweep-grid axes (repro.dist): flattened problems x seeds cells shard
+    # over the 'grid' mesh axis; intra-cell [N, ...] client rows over
+    # 'client'. Absent mesh axes drop to replication as usual, so these
+    # rules are inert on model/data meshes.
+    "cells": "grid",
+    "client_rows": "client",
 }
 
 # Profile used by the §Perf sequence-parallel hillclimb.
@@ -268,3 +274,18 @@ def param_shardings(params_or_shapes, ruleset: RuleSet):
     specs = param_specs(params_or_shapes, ruleset)
     return jax.tree.map(lambda s: NamedSharding(ruleset.mesh, s), specs,
                         is_leaf=lambda s: isinstance(s, P))
+
+
+def leading_axis_specs(tree, ruleset: RuleSet, logical_name: str = "cells"):
+    """PartitionSpec pytree placing every leaf's LEADING axis under one
+    logical rule (trailing dims replicated) — how ``repro.dist`` places
+    stacked ProblemSpec leaves, per-cell keys and mask schedules on their
+    ``grid`` shard. Divisibility fallback applies per leaf (the dist grid
+    pads the cells axis so it always divides)."""
+
+    def leaf_spec(leaf):
+        shape = tuple(jax.numpy.shape(leaf))
+        axes = (logical_name,) + (None,) * (len(shape) - 1)
+        return ruleset.spec_for(axes, shape)
+
+    return jax.tree.map(leaf_spec, tree)

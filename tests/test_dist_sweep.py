@@ -1,0 +1,389 @@
+"""Distributed sweep subsystem (repro.dist).
+
+Three layers of guarantees:
+
+(a) partition bijection — ``dist.partition``'s pad/unpad maps the flattened
+    problems × seeds cells onto shards and back with no loss, duplication
+    into results, or reordering, for arbitrary grid sizes × device counts
+    (hypothesis property test + deterministic sweep);
+(b) bit-exactness — ``run_sweep(..., mesh=...)`` on a multi-device CPU
+    debug mesh returns BITWISE the single-device results, including
+    ``bits_up``/``bits_down`` under QSGD + partial participation, and each
+    sharded executor traces exactly once (subprocess isolation: the fake
+    XLA host devices must not leak into other tests);
+(c) client axis — the psum-completed Pallas aggregation equals the
+    single-device mean/aggregate to float tolerance.
+
+The 1-device mesh cases run in-process (no XLA flag needed), so the tier-1
+run exercises the sharded code path even on single-device hosts.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 8, timeout: int = 900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+# ------------------------- (a) partition bijection --------------------------
+
+def _check_partition(n_cells, n_shards):
+    from repro.dist import partition
+
+    src_idx, valid = partition.pad_cells(n_cells, n_shards)
+    c_pad = partition.padded_count(n_cells, n_shards)
+    assert len(src_idx) == len(valid) == c_pad
+    assert c_pad % n_shards == 0 and c_pad >= n_cells
+    assert c_pad - n_cells < n_shards  # minimal padding
+    # identity prefix: the valid slots ARE the unpadded cells, in order —
+    # composed with the prefix-slice unpad this is a bijection
+    np.testing.assert_array_equal(src_idx[:n_cells], np.arange(n_cells))
+    np.testing.assert_array_equal(valid, np.arange(c_pad) < n_cells)
+    # padding repeats real cells only
+    assert ((src_idx >= 0) & (src_idx < n_cells)).all()
+    # unpad(gather(x)) == x for any per-cell payload
+    payload = np.random.default_rng(0).normal(size=(n_cells, 3))
+    roundtrip = partition.unpad(payload[src_idx], n_cells)
+    np.testing.assert_array_equal(roundtrip, payload)
+
+
+def test_partition_bijection_deterministic():
+    for n_cells in (1, 2, 3, 7, 8, 12, 32, 33, 100):
+        for n_shards in (1, 2, 3, 4, 7, 8, 16):
+            _check_partition(n_cells, n_shards)
+
+
+def test_partition_bijection_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(n_problems=st.integers(1, 12), n_seeds=st.integers(1, 12),
+           n_shards=st.integers(1, 64))
+    def check(n_problems, n_seeds, n_shards):
+        from repro.dist import partition
+
+        _check_partition(n_problems * n_seeds, n_shards)
+        # the flat order is p·S + s — the comm-mask fold of run_sweep
+        p_idx, s_idx = partition.cell_coords(n_problems, n_seeds)
+        for c in range(n_problems * n_seeds):
+            assert partition.flatten_cell(p_idx[c], s_idx[c], n_seeds) == c
+
+    check()
+
+
+def test_partition_rejects_degenerate():
+    from repro.dist import partition
+
+    with pytest.raises(ValueError):
+        partition.padded_count(0, 4)
+    with pytest.raises(ValueError):
+        partition.padded_count(4, 0)
+
+
+# --------------- (b) 1-device mesh in-process (tier-1 coverage) -------------
+
+def test_sharded_sweep_one_device_mesh_bitwise():
+    """A ('grid',) mesh of ONE device runs the shard_map path end to end and
+    is bitwise identical to the vmapped engine (the multi-device version of
+    this assertion lives in the subprocess test below)."""
+    import jax
+
+    from repro.core import algorithms as A, sweep
+    from repro.data import spec as spec_lib
+    from repro.dist import make_grid_mesh
+
+    mesh = make_grid_mesh(1)
+    specs = [spec_lib.quadratic_spec(
+        jax.random.PRNGKey(0), num_clients=8, dim=16, mu=0.1, beta=1.0,
+        zeta=z, sigma=0.2, sigma_f=0.05) for z in (0.0, 1.0)]
+    algo = A.SGD(eta=0.4, k=3, mu_avg=0.1)
+    ref = sweep.run_sweep(algo, None, None, 8, seeds=(0, 1), etas=(0.3, 0.5),
+                          problems=specs)
+    res = sweep.run_sweep(algo, None, None, 8, seeds=(0, 1), etas=(0.3, 0.5),
+                          problems=specs, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(ref.history),
+                                  np.asarray(res.history))
+    np.testing.assert_array_equal(np.asarray(ref.final_sub),
+                                  np.asarray(res.final_sub))
+
+
+def test_sharded_sweep_rejects_closure_problems():
+    from repro.core import algorithms as A, sweep
+    from repro.dist import make_grid_mesh
+
+    class Legacy:  # quacks like a legacy closure problem (spec=None)
+        num_clients = 4
+        spec = None
+
+    with pytest.raises(TypeError, match="spec-backed"):
+        sweep.run_sweep(A.SGD(eta=0.1), Legacy(), None, 4, seeds=(0,),
+                        etas=(0.1,), mesh=make_grid_mesh(1))
+
+
+def test_fraction_sweep_matches_per_fraction_chain_run():
+    """Satellite: the local_fraction axis rides one compile and each cell
+    replays Chain.run on chain.with_local_fraction(f) (same RNG streams —
+    sweep tolerance, like run_sweep vs per-call runs)."""
+    import jax
+
+    from repro.core import algorithms as A, chain, runner, sweep
+    from repro.data import spec as spec_lib
+
+    quad = spec_lib.quadratic_spec(
+        jax.random.PRNGKey(0), num_clients=8, dim=16, mu=0.1, beta=1.0,
+        zeta=1.0, sigma=0.2, sigma_f=0.05)
+    ch = chain.fedchain(A.FedAvg(eta=0.3, local_steps=3, inner_batch=2),
+                        A.SGD(eta=0.3, k=4, mu_avg=0.1), selection_k=4,
+                        name="frac-eq-chain")
+    fractions = (0.25, 0.5, 0.75)
+    seeds = (0, 1)
+    res = sweep.run_fraction_sweep(ch, quad, None, 16, seeds=seeds,
+                                   fractions=fractions)
+    assert res.history.shape == (2, 3, 16)
+    assert np.asarray(res.selected_initial).shape == (2, 3, 1)
+    for si, sd in enumerate(seeds):
+        for fi, f in enumerate(fractions):
+            r = ch.with_local_fraction(f).run(
+                quad, quad.x0, 16, jax.random.PRNGKey(sd))
+            np.testing.assert_allclose(
+                np.asarray(res.history[si, fi]), np.asarray(r.history),
+                rtol=2e-4, atol=1e-6)
+            assert bool(res.selected_initial[si, fi, 0]) == \
+                r.selected_initial[0]
+    # the whole fraction grid shares ONE compile; re-running stays compiled
+    before = dict(runner.TRACE_COUNTS)
+    sweep.run_fraction_sweep(ch, quad, None, 16, seeds=(2, 3),
+                             fractions=fractions)
+    assert dict(runner.TRACE_COUNTS) == before
+
+
+def test_fraction_sweep_validates_inputs():
+    import jax
+
+    from repro.core import algorithms as A, chain, sweep
+    from repro.data import spec as spec_lib
+
+    quad = spec_lib.quadratic_spec(jax.random.PRNGKey(0), num_clients=4,
+                                   dim=8, mu=0.1, beta=1.0)
+    with pytest.raises(TypeError, match="Chain"):
+        sweep.run_fraction_sweep(A.SGD(eta=0.1), quad, None, 8, seeds=(0,),
+                                 fractions=(0.5,))
+    three = chain.Chain(stages=[A.SGD(eta=0.1)] * 3,
+                        fractions=[0.3, 0.3, 0.4], name="three")
+    with pytest.raises(ValueError, match="two-stage"):
+        sweep.run_fraction_sweep(three, quad, None, 8, seeds=(0,),
+                                 fractions=(0.5,))
+    two = chain.fedchain(A.FedAvg(eta=0.3), A.SGD(eta=0.3), name="two")
+    with pytest.raises(ValueError, match="local_fraction"):
+        two.with_local_fraction(1.5)
+    # a fraction that starves the second stage would change the schedule
+    # length (Chain.budgets clamps it back to one round) and break the
+    # stacked operand layout — rejected up front with the sweepable range
+    two2 = chain.fedchain(A.FedAvg(eta=0.3, local_steps=2),
+                          A.SGD(eta=0.3, k=2), selection_k=2, name="two2")
+    with pytest.raises(ValueError, match="sweepable fractions"):
+        sweep.run_fraction_sweep(two2, quad, None, 8, seeds=(0,),
+                                 fractions=(0.5, 0.9))
+
+
+# ------------------ (b) multi-device subprocess bit-exactness ---------------
+
+@pytest.mark.slow
+def test_sharded_sweep_bitwise_on_debug_mesh():
+    """THE dist invariant: on an 8-device CPU debug mesh, run_sweep(mesh=)
+    — plain, chained, and comm'd (QSGD + partial participation + error
+    feedback) — is bitwise identical to the single-device engine, bits
+    accounting included, with every sharded executor traced exactly once."""
+    out = _run("""
+        import json
+        import jax, numpy as np
+        from repro.core import algorithms as A, chain, runner, sweep
+        from repro.data import spec as spec_lib
+        from repro.dist import make_grid_mesh
+        from repro.comm import CommConfig
+
+        assert len(jax.devices()) == 8
+        mesh = make_grid_mesh()
+        seeds, etas = (0, 1, 2), (0.2, 0.5)
+        specs = [spec_lib.quadratic_spec(
+            jax.random.PRNGKey(0), num_clients=8, dim=16, mu=0.1, beta=1.0,
+            zeta=z, sigma=0.2, sigma_f=0.05) for z in (0.0, 0.5, 1.0, 2.0)]
+        algo = A.SGD(eta=0.4, k=4, mu_avg=0.1)
+        bw = lambda a, b: np.array_equal(np.asarray(a), np.asarray(b))
+        checks = {}
+
+        ref = sweep.run_sweep(algo, None, None, 12, seeds=seeds, etas=etas,
+                              problems=specs)
+        before = dict(runner.TRACE_COUNTS)
+        res = sweep.run_sweep(algo, None, None, 12, seeds=seeds, etas=etas,
+                              problems=specs, mesh=mesh)
+        deltas = {k: v - before.get(k, 0) for k, v in runner.TRACE_COUNTS.items()
+                  if v != before.get(k, 0)}
+        checks['algo_probs'] = (bw(ref.history, res.history)
+                                and bw(ref.final_sub, res.final_sub)
+                                and all(bw(a, b) for a, b in zip(
+                                    jax.tree.leaves(ref.x_hat),
+                                    jax.tree.leaves(res.x_hat))))
+        checks['algo_single_trace'] = (deltas.get('dist-probs/sgd') == 1)
+        # warm path: no re-trace
+        before = dict(runner.TRACE_COUNTS)
+        sweep.run_sweep(algo, None, None, 12, seeds=seeds, etas=etas,
+                        problems=specs, mesh=mesh)
+        checks['algo_warm_no_retrace'] = dict(runner.TRACE_COUNTS) == before
+
+        cfg = CommConfig(compressor='qsgd', qsgd_bits=4, participation=0.5,
+                         error_feedback=True)
+        r = sweep.run_sweep(algo, None, None, 10, seeds=seeds, etas=etas,
+                            problems=specs, comm=cfg)
+        d = sweep.run_sweep(algo, None, None, 10, seeds=seeds, etas=etas,
+                            problems=specs, comm=cfg, mesh=mesh)
+        checks['comm'] = (bw(r.history, d.history) and bw(r.bits_up, d.bits_up)
+                          and bw(r.bits_down, d.bits_down))
+
+        ch = chain.fedchain(
+            A.FedAvg(eta=0.3, local_steps=3, inner_batch=2),
+            A.SGD(eta=0.3, k=4, mu_avg=0.1), selection_k=4, name='dist-ch')
+        r = sweep.run_sweep(ch, None, None, 16, seeds=seeds, etas=(0.5, 1.0),
+                            problems=specs)
+        d = sweep.run_sweep(ch, None, None, 16, seeds=seeds, etas=(0.5, 1.0),
+                            problems=specs, mesh=mesh)
+        checks['chain'] = (bw(r.history, d.history)
+                           and bw(r.selected_initial, d.selected_initial))
+
+        r = sweep.run_sweep(ch, None, None, 14, seeds=seeds, etas=(1.0,),
+                            problems=specs, comm=cfg)
+        d = sweep.run_sweep(ch, None, None, 14, seeds=seeds, etas=(1.0,),
+                            problems=specs, comm=cfg, mesh=mesh)
+        checks['chain_comm'] = (bw(r.history, d.history)
+                                and bw(r.bits_up, d.bits_up)
+                                and bw(r.bits_down, d.bits_down))
+
+        # no-problems path + per-cell RNG repro: cell s of the sharded grid
+        # == runner.run with PRNGKey(seeds[s])-derived grid cell
+        p0 = specs[2]
+        r = sweep.run_sweep(algo, p0, p0.x0, 12, seeds=seeds, etas=etas)
+        d = sweep.run_sweep(algo, p0, p0.x0, 12, seeds=seeds, etas=etas,
+                            mesh=mesh)
+        checks['noprobs'] = bw(r.history, d.history)
+
+        print(json.dumps(checks))
+    """, devices=8)
+    checks = json.loads(out.strip().splitlines()[-1])
+    assert all(checks.values()), checks
+
+
+@pytest.mark.slow
+def test_fraction_sweep_sharded_bitwise_on_debug_mesh():
+    out = _run("""
+        import json
+        import jax, numpy as np
+        from repro.core import algorithms as A, chain, runner, sweep
+        from repro.data import spec as spec_lib
+        from repro.dist import make_grid_mesh
+
+        mesh = make_grid_mesh()
+        quad = spec_lib.quadratic_spec(
+            jax.random.PRNGKey(0), num_clients=8, dim=16, mu=0.1, beta=1.0,
+            zeta=1.0, sigma=0.2, sigma_f=0.05)
+        ch = chain.fedchain(
+            A.FedAvg(eta=0.3, local_steps=3, inner_batch=2),
+            A.SGD(eta=0.3, k=4, mu_avg=0.1), selection_k=4, name='frac-ch')
+        kw = dict(seeds=(0, 1, 2), fractions=(0.2, 0.4, 0.6, 0.8))
+        ref = sweep.run_fraction_sweep(ch, quad, None, 16, **kw)
+        before = dict(runner.TRACE_COUNTS)
+        res = sweep.run_fraction_sweep(ch, quad, None, 16, mesh=mesh, **kw)
+        deltas = {k: v - before.get(k, 0) for k, v in runner.TRACE_COUNTS.items()
+                  if v != before.get(k, 0)}
+        bw = lambda a, b: np.array_equal(np.asarray(a), np.asarray(b))
+        print(json.dumps({
+            'bitwise': bw(ref.history, res.history)
+                       and bw(ref.final_sub, res.final_sub)
+                       and bw(ref.selected_initial, res.selected_initial),
+            'single_trace': deltas.get('dist-frac/frac-ch') == 1,
+        }))
+    """, devices=8)
+    checks = json.loads(out.strip().splitlines()[-1])
+    assert all(checks.values()), checks
+
+
+# ------------------------------ (c) client axis -----------------------------
+
+@pytest.mark.slow
+def test_client_axis_psum_aggregation():
+    """Sharded per-shard Pallas aggregation + psum == single-device mean /
+    fused aggregate / full SGD round, to float tolerance."""
+    out = _run("""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.core import algorithms as A
+        from repro.data import spec as spec_lib
+        from repro.dist import client_axis
+        from repro.kernels.aggregate import ops as agg_ops
+
+        mesh = Mesh(np.asarray(jax.devices()[:4]), ('client',))
+        p = spec_lib.quadratic_spec(
+            jax.random.PRNGKey(0), num_clients=8, dim=16, mu=0.1, beta=1.0,
+            zeta=1.0, sigma=0.2)
+        rows = jax.random.normal(jax.random.PRNGKey(1), (8, 16))
+        checks = {}
+
+        ref = np.asarray(jnp.mean(rows, axis=0))
+        out = np.asarray(client_axis.sharded_client_mean(mesh, rows))
+        checks['mean'] = bool(np.allclose(ref, out, atol=1e-6))
+
+        w = jax.random.uniform(jax.random.PRNGKey(2), (8,))
+        ref = np.asarray(jnp.mean(w[:, None] * rows, axis=0))
+        out = np.asarray(client_axis.sharded_client_mean(mesh, rows, w))
+        checks['weighted_mean'] = bool(np.allclose(ref, out, atol=1e-6))
+
+        tree = {'a': rows,
+                'b': jax.random.normal(jax.random.PRNGKey(3), (8, 4, 3))}
+        out_t = client_axis.sharded_client_mean(mesh, tree)
+        ref_t = jax.tree.map(lambda r: jnp.mean(r, axis=0), tree)
+        checks['pytree_mean'] = bool(all(
+            np.allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+            for a, b in zip(jax.tree.leaves(ref_t), jax.tree.leaves(out_t))))
+
+        ci = 0.1 * jax.random.normal(jax.random.PRNGKey(4), (8, 16))
+        c = 0.05 * jnp.ones((16,))
+        ref = np.asarray(agg_ops.chain_aggregate(p.x0, rows, ci, c, lr=0.3))
+        out = np.asarray(client_axis.sharded_chain_aggregate(
+            mesh, p.x0, rows, ci, c, lr=0.3))
+        checks['chain_aggregate'] = bool(np.allclose(ref, out, atol=1e-5))
+
+        algo = A.SGD(eta=0.4, k=4)
+        ref = np.asarray(algo.round(p, algo.init(p, p.x0),
+                                    jax.random.PRNGKey(7)).x)
+        out = np.asarray(client_axis.sgd_round_client_sharded(
+            mesh, p, p.x0, 0.4, jax.random.PRNGKey(7), k=4))
+        checks['sgd_round'] = bool(np.allclose(ref, out, atol=1e-5))
+
+        # indivisible client counts are refused, not silently mis-sharded
+        try:
+            client_axis.sharded_client_mean(
+                mesh, jax.random.normal(jax.random.PRNGKey(5), (6, 4)))
+            checks['divisibility_guard'] = False
+        except ValueError:
+            checks['divisibility_guard'] = True
+        print(json.dumps(checks))
+    """, devices=8)
+    checks = json.loads(out.strip().splitlines()[-1])
+    assert all(checks.values()), checks

@@ -30,10 +30,10 @@ def test_cache_rules():
 
 
 def test_ruleset_divisibility_and_dedup():
+    from repro.dist import compat
     from repro.sharding import RuleSet
 
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("model",))
     rs = RuleSet(mesh)
     # axis size 1 always divides
     spec = rs.spec_for(("experts", "embed", "ff"), (4, 8, 16))
