@@ -13,6 +13,12 @@ are machine- and cache-noisy, so only warm metrics gate:
 * ``BENCH_dist.json`` (with ``--dist``): ``devices[*].warm_s`` — the
   sharded sweep's warm path per device count (the harness itself asserts
   bitwise parity, single-trace, and zero warm re-traces before timing)
+* ``BENCH_memory.json``: ``warm.indexed_s`` through the standard warm gate,
+  PLUS two named byte gates — the indexed spec-operand bytes must not grow
+  past 1.05× the committed baseline (``memory/indexed/operand_bytes``) and
+  the stacked/indexed reduction must stay ≥ the seed count
+  (``memory/reduction_x``) — each failing with its metric name, never a
+  bare assert
 
 The warm metrics are tens of milliseconds, where a noisy-neighbor scheduler
 blip alone can exceed the threshold — so each harness runs ``--samples``
@@ -44,6 +50,7 @@ ROOT = os.path.join(os.path.dirname(__file__), "..")
 SWEEP_JSON = os.path.join(ROOT, "BENCH_sweep.json")
 PROBLEM_JSON = os.path.join(ROOT, "BENCH_problem_sweep.json")
 DIST_JSON = os.path.join(ROOT, "BENCH_dist.json")
+MEMORY_JSON = os.path.join(ROOT, "BENCH_memory.json")
 
 
 def _load(path):
@@ -63,6 +70,34 @@ def _warm_metrics_dist(doc):
     zero warm re-traces), so timing regressions are all this compares."""
     return {f"dist/devices={d}/warm_s": v["warm_s"]
             for d, v in doc["devices"].items()}
+
+
+def _warm_metrics_memory(doc):
+    """The indexed-layout warm grid time (compared at the standard warm
+    threshold; the byte gates are separate named checks)."""
+    return {"memory/indexed/warm_s": doc["warm"]["indexed_s"]}
+
+
+def _memory_byte_failures(base_doc, fresh_doc):
+    """The named live-bytes gates on BENCH_memory.json. Byte counts are
+    deterministic (array shapes, not timings), so the ceiling is tight:
+    1.05× headroom for benign layout tweaks, while an accidental return to
+    per-seed spec repetition (S× the bytes) can never pass."""
+    failures = []
+    base_b = base_doc["operand_bytes"]
+    fresh_b = fresh_doc["operand_bytes"]
+    ceiling = base_b["indexed"] * 1.05
+    if fresh_b["indexed"] > ceiling:
+        failures.append(
+            f"memory/indexed/operand_bytes: {fresh_b['indexed']} bytes > "
+            f"ceiling {ceiling:.0f} (1.05x committed {base_b['indexed']})")
+    n_seeds = len(fresh_doc["grid"]["seeds"])
+    if fresh_b["reduction_x"] < n_seeds:
+        failures.append(
+            f"memory/reduction_x: {fresh_b['reduction_x']:.2f}x < "
+            f"S={n_seeds} (indexed layout must shrink spec-operand bytes "
+            f"by at least the seed count)")
+    return failures
 
 
 def _warm_metrics_problem(doc):
@@ -139,24 +174,27 @@ def main(argv=None) -> None:
                     "device count)")
     args = ap.parse_args(argv)
 
-    baselines = [SWEEP_JSON, PROBLEM_JSON] + ([DIST_JSON] if args.dist
-                                              else [])
+    baselines = [SWEEP_JSON, PROBLEM_JSON, MEMORY_JSON] + (
+        [DIST_JSON] if args.dist else [])
     missing = [p for p in baselines if not os.path.exists(p)]
     if missing:
         print(f"no committed baseline(s): {missing}", file=sys.stderr)
         sys.exit(2)
     sweep_raw, sweep_base = _load(SWEEP_JSON)
     prob_raw, prob_base = _load(PROBLEM_JSON)
+    mem_raw, mem_base = _load(MEMORY_JSON)
     base = {**_warm_metrics_sweep(sweep_base),
-            **_warm_metrics_problem(prob_base)}
+            **_warm_metrics_problem(prob_base),
+            **_warm_metrics_memory(mem_base)}
     dist_raw = None
     if args.dist:
         dist_raw, dist_base = _load(DIST_JSON)
         base.update(_warm_metrics_dist(dist_base))
 
-    from benchmarks import problem_sweep, sweep_bench
+    from benchmarks import memory_bench, problem_sweep, sweep_bench
 
     fresh: dict = {}
+    mem_fresh: dict = {}
     try:
         for _ in range(max(1, args.samples)):
             # each sample must pay its own cold trace: problem_sweep asserts
@@ -165,10 +203,13 @@ def main(argv=None) -> None:
             runner.clear_executor_cache()
             sweep_bench.main(quick=True)
             problem_sweep.main(quick=True)  # raises on any grid re-trace
+            memory_bench.main(quick=True)  # asserts bitwise + 0 re-traces
             _, sweep_fresh = _load(SWEEP_JSON)
             _, prob_fresh = _load(PROBLEM_JSON)
+            _, mem_fresh = _load(MEMORY_JSON)
             sample = {**_warm_metrics_sweep(sweep_fresh),
-                      **_warm_metrics_problem(prob_fresh)}
+                      **_warm_metrics_problem(prob_fresh),
+                      **_warm_metrics_memory(mem_fresh)}
             if args.dist:
                 from benchmarks import dist_scaling
 
@@ -183,10 +224,13 @@ def main(argv=None) -> None:
                 f.write(sweep_raw)
             with open(PROBLEM_JSON, "w") as f:
                 f.write(prob_raw)
+            with open(MEMORY_JSON, "w") as f:
+                f.write(mem_raw)
             if dist_raw is not None:
                 with open(DIST_JSON, "w") as f:
                     f.write(dist_raw)
     failures, rows = _compare(base, fresh, args.threshold)
+    failures += _memory_byte_failures(mem_base, mem_fresh)
     print("\n".join(rows))
     if failures:
         print("\nbench-gate FAILED:", file=sys.stderr)

@@ -10,8 +10,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timed
-from repro.kernels.aggregate.aggregate import chain_aggregate
-from repro.kernels.aggregate.ref import chain_aggregate_ref
+from repro.kernels.aggregate.aggregate import aggregate_apply, chain_aggregate
+from repro.kernels.aggregate.ref import (aggregate_apply_ref,
+                                         chain_aggregate_ref)
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 
@@ -32,6 +33,26 @@ def main(quick: bool = True):
     err = float(jnp.max(jnp.abs(out - ref)))
     rows.append(emit("kernels/chain_aggregate/ref", us_ref, f"d={d}"))
     rows.append(emit("kernels/chain_aggregate/pallas_interpret", us_k, f"err={err:.1e}"))
+
+    # fused aggregate-apply (EF round: masked weighted mean + residual
+    # update + server step in one pass)
+    keys = jax.random.split(key, 6)
+    agg = jax.random.normal(keys[0], (s, d))
+    delta_in = jax.random.normal(keys[1], (s, d))
+    comp = jax.random.normal(keys[2], (s, d))
+    res = jax.random.normal(keys[3], (s, d))
+    m = (jax.random.uniform(keys[4], (s,)) < 0.5).astype(jnp.float32)
+    wf = jax.random.uniform(keys[5], (s,)) / s
+    ref_xr, us_ref3 = timed(
+        lambda: aggregate_apply_ref(x, agg, comp, delta_in, res, m, wf))
+    out_xr, us_k3 = timed(
+        lambda: aggregate_apply(x, agg, comp, delta_in, res, m, wf,
+                                interpret=True))
+    err3 = max(float(jnp.max(jnp.abs(o - r)))
+               for o, r in zip(out_xr, ref_xr))
+    rows.append(emit("kernels/aggregate_apply/ref", us_ref3, f"d={d}"))
+    rows.append(emit("kernels/aggregate_apply/pallas_interpret", us_k3,
+                     f"err={err3:.1e}"))
 
     # flash attention
     b, s2, h, kv, hd = 1, 512, 4, 2, 64

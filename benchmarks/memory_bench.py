@@ -1,0 +1,170 @@
+"""Operand-memory benchmark: indexed vs stacked problem-operand layouts.
+
+The sweep engine's problems × seeds grid used to repeat every ProblemSpec
+data leaf once per seed (O(P·S) operand memory). The indexed layout carries
+ONE O(P) stacked spec plus a per-cell int32 problem index and gathers spec
+leaves in-cell — bitwise identical results (asserted here and in
+``tests/test_memory_layout.py``). This harness measures, on a data-heavy
+problem grid:
+
+* spec-operand live bytes under each layout (``sum(leaf.nbytes)`` over the
+  exact arrays the executor call carries) and their ratio — the ISSUE-6
+  acceptance bar is a ≥ S× reduction,
+* warm grid wall time per layout (the indexed gather must not cost the warm
+  path anything past the regression gate's 2.5× threshold),
+* zero warm re-traces under the indexed layout (``runner.TRACE_COUNTS``).
+
+Writes ``BENCH_memory.json`` at the repo root. ``--check`` asserts the
+backend-robust invariants (byte reduction, warm ratio, retrace count,
+bitwise identity) without absolute-time gates — the CI miniature.
+
+  PYTHONPATH=src python -m benchmarks.memory_bench [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import algorithms as A, runner, sweep
+from repro.data import problems
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+SEEDS = tuple(range(6))  # S=6: the reduction bar scales with the seed count
+ETAS = (0.3, 0.5)
+
+
+def _specs(quick: bool):
+    """A data-heavy ζ grid: quadratic specs whose per-client data leaves
+    ([N, d, d] Hessians) dominate the operand footprint."""
+    dim = 48 if quick else 96
+    return [
+        problems.quadratic_spec(
+            jax.random.PRNGKey(17 + i), num_clients=8, dim=dim, mu=0.1,
+            beta=1.0, zeta=0.5 * i, sigma=0.2)
+        for i in range(4)
+    ]
+
+
+def operand_bytes(stacked, x0_stack, keys, n_probs, n_seeds, layout):
+    """(spec-operand bytes, index-overhead bytes) of one grid call's
+    per-problem operands: the spec stack + x0 stack (whose every leaf the
+    stacked layout repeats exactly S×), and the int32 problem-index rows the
+    indexed layout adds (4 bytes per cell — the price of the gather). Key
+    rows are identical across layouts and excluded."""
+    spec_op, x0_op, pidx, _ = sweep.build_problem_operands(
+        stacked, x0_stack, keys, n_probs, n_seeds, layout)
+    spec_bytes = sum(l.nbytes for l in jax.tree.leaves((spec_op, x0_op)))
+    return int(spec_bytes), int(pidx.nbytes if pidx is not None else 0)
+
+
+def _walled(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out.history)
+    return out, time.perf_counter() - t0
+
+
+def main(quick: bool = True, check: bool = False):
+    rounds = 20 if quick else 80
+    specs = _specs(quick)
+    algo = A.SGD(eta=0.4, k=8, mu_avg=0.1)
+    n_probs, n_seeds = len(specs), len(SEEDS)
+
+    stacked, _ = sweep._as_stacked_specs(specs)
+    x0_stack = sweep._normalize_x0_stack(None, stacked, n_probs)
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in SEEDS])
+    bytes_by_layout, idx_bytes = {}, 0
+    for layout in sweep._OPERAND_LAYOUTS:
+        bytes_by_layout[layout], pb = operand_bytes(
+            stacked, x0_stack, keys, n_probs, n_seeds, layout)
+        idx_bytes = max(idx_bytes, pb)
+    reduction = bytes_by_layout["stacked"] / bytes_by_layout["indexed"]
+
+    def grid(layout):
+        return sweep.run_sweep(
+            algo, specs[0], None, rounds, seeds=SEEDS, etas=ETAS,
+            eta_mode="absolute", problems=specs, operand_layout=layout)
+
+    results, warm = {}, {}
+    runner.clear_executor_cache()  # each layout pays its own cold compile
+    for layout in sweep._OPERAND_LAYOUTS:
+        _walled(lambda: grid(layout))  # compile
+        results[layout], warm[layout] = _walled(lambda: grid(layout))
+
+    match = bool(np.array_equal(np.asarray(results["indexed"].history),
+                                np.asarray(results["stacked"].history)))
+    if not match:
+        raise AssertionError(
+            "indexed-layout sweep results diverged bitwise from the stacked "
+            "reference layout")
+
+    # warm re-trace discipline: repeating the indexed grid must not move
+    # TRACE_COUNTS by a single trace
+    before = dict(runner.TRACE_COUNTS)
+    _walled(lambda: grid("indexed"))
+    moved = {k: v - before.get(k, 0) for k, v in runner.TRACE_COUNTS.items()
+             if v != before.get(k, 0)}
+    if moved:
+        raise AssertionError(
+            f"warm indexed-layout re-run re-traced executors: {moved}")
+
+    report = {
+        "grid": {"problems": n_probs, "seeds": list(SEEDS),
+                 "etas": list(ETAS), "rounds": rounds,
+                 "dim": int(jax.tree.leaves(stacked)[0].shape[-1])},
+        "operand_bytes": {
+            "stacked": bytes_by_layout["stacked"],
+            "indexed": bytes_by_layout["indexed"],
+            "index_overhead": idx_bytes,
+            "reduction_x": reduction,
+        },
+        "warm": {"indexed_s": warm["indexed"], "stacked_s": warm["stacked"]},
+        "match_bitwise": match,
+        "warm_retraces": 0,
+    }
+    with open(os.path.join(ROOT, "BENCH_memory.json"), "w") as f:
+        json.dump(report, f, indent=2)
+
+    rows = [
+        emit("memory/operand_bytes/indexed", 0.0,
+             f"bytes={bytes_by_layout['indexed']};"
+             f"reduction={reduction:.2f}x"),
+        emit("memory/warm/indexed", warm["indexed"] * 1e6,
+             f"vs_stacked={warm['indexed'] / warm['stacked']:.2f}x;"
+             f"match={match}"),
+    ]
+
+    if check:
+        # backend-robust invariants only (no absolute-time gates): these
+        # hold on cpu-ref AND pallas-interpret CI legs
+        if reduction < n_seeds:
+            raise AssertionError(
+                f"memory/reduction_x: {reduction:.2f}x < S={n_seeds} — the "
+                f"indexed layout must shrink spec-operand bytes by at least "
+                f"the seed count")
+        ratio = warm["indexed"] / warm["stacked"]
+        if ratio > 2.5:
+            raise AssertionError(
+                f"memory/warm_ratio: indexed warm path {ratio:.2f}x slower "
+                f"than stacked (gate 2.5x)")
+        print(f"memory-bench check OK: reduction={reduction:.2f}x >= "
+              f"S={n_seeds}, warm ratio={ratio:.2f}x <= 2.5x, "
+              f"0 warm re-traces, bitwise match")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale rounds")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the backend-robust invariants (CI leg)")
+    args = ap.parse_args()
+    main(quick=not args.full, check=args.check)

@@ -46,8 +46,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (
         ablation_selection, appj1_large_k, comm_frontier, dist_scaling,
-        fig2_convergence, kernels_bench, lower_bound_bench, problem_sweep,
-        roofline, sweep_bench, table1_strongly_convex,
+        fig2_convergence, kernels_bench, lower_bound_bench, memory_bench,
+        problem_sweep, roofline, sweep_bench, table1_strongly_convex,
         table2_general_convex, table3_nonconvex, table3_vision, table4_pl,
     )
 
@@ -63,6 +63,7 @@ def main(argv=None) -> None:
         "ablation_selection": ablation_selection.main,  # Lemma H.2 on/off
         "comm_frontier": comm_frontier.main,  # suboptimality-vs-bits frontier
         "dist_scaling": dist_scaling.main,  # sharded sweep, 1/2/4/8 devices
+        "memory": memory_bench.main,  # indexed vs stacked operand layouts
         "sweep": sweep_bench.main,  # vmapped grid vs per-call loop
         "problem_sweep": problem_sweep.main,  # ζ×σ problem grid, one compile
         "kernels": kernels_bench.main,  # Pallas kernels

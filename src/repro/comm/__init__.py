@@ -82,12 +82,14 @@ from repro.comm.config import (
     uplink,
     uplink_bits_per_client,
     uplink_bits_per_client_tree,
+    uplink_fused_apply,
 )
 
 __all__ = [
     "COMP_IDENTITY", "COMP_QSGD", "COMP_TOPK", "COMP_RANDK",
     "CommParams", "CommConfig", "CommState",
-    "compress_rows", "compress_tree", "uplink", "account_round", "comm_key",
+    "compress_rows", "compress_tree", "uplink", "uplink_fused_apply",
+    "account_round", "comm_key",
     "participation_scale", "masked_keep", "ef_enabled",
     "leaf_dims", "total_dim",
     "uplink_bits_per_client", "uplink_bits_per_client_tree",

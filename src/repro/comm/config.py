@@ -187,6 +187,71 @@ def uplink(comm: CommState, payload, cids, key, *, ref=None,
     return out, comm
 
 
+def uplink_fused_apply(comm: CommState, payload, cids, key, x, eta, *,
+                       ref=None, force_pallas: bool = False):
+    """One fused uplink + error-feedback + server-apply round.
+
+    The launch-minimal sibling of ``uplink`` + aggregate + step for
+    error-feedback rounds: compression still runs leaf-wise (identical
+    randomness and results to ``uplink``), but the masked residual update
+    AND the weighted server step then execute as ONE fused kernel pass per
+    leaf over the raveled [S, d_leaf] rows
+    (``kernels.aggregate.ops.aggregate_apply``) instead of separate
+    gather/scatter/mean/axpy launches.
+
+    ``payload`` rows are client transmissions (leaves [S, ...] mirroring the
+    ``x`` pytree); ``ref`` selects the wire format exactly as in ``uplink``
+    (``None``: the payload itself is the wire delta — global-update methods;
+    the broadcast iterate: payload − ref is compressed — local-update
+    methods). ``eta`` is the server stepsize folded into the aggregation
+    weights as ``scale·(η/S)`` — the exact fold ``base.fused_server_step``
+    performs, so the SGD comm round is bitwise identical fused vs unfused on
+    kernel backends; pass ``−server_lr`` for iterate-averaging methods
+    (x + lr·mean ≡ x − (−lr)·mean, equal to float tolerance).
+
+    EF only (the residual tables are what the fusion saves traffic on);
+    callers gate on ``ef_enabled`` and ``ops.use_fused_aggregate``. Returns
+    ``(x_new, CommState)`` — bits accounting stays with ``account_round``.
+    """
+    from repro.kernels.aggregate import ops as agg_ops
+
+    if not ef_enabled(comm):
+        raise ValueError(
+            "uplink_fused_apply is the error-feedback round path; with EF "
+            "off there is no residual table to fuse over — use uplink()")
+    params = comm.params
+    delta = tm.tree_sub(payload, ref) if ref is not None else payload
+    res = jax.tree.map(lambda t: t[cids], comm.residual)
+    delta_in = tm.tree_add(delta, res)
+    comp = compressors.compress_tree(delta_in, key, params)
+    # wire rows entering the server sum: identity short-circuits to the
+    # exact delta (matching uplink's bitwise identity contract), every
+    # other compressor transmits C(Δ_in)
+    agg = jax.tree.map(
+        lambda dl, co: jnp.where(params.comp_id == COMP_IDENTITY, dl, co),
+        delta, comp)
+    m = comm.mask[cids].astype(jnp.float32)
+    s = m.shape[0]
+    w = participation_scale(comm.mask, cids) * (eta / s)
+
+    treedef = jax.tree.structure(x)
+    x_new, res_new = [], []
+    for xl, al, dl, cl, rl in zip(
+            jax.tree.leaves(x), jax.tree.leaves(agg),
+            jax.tree.leaves(delta_in), jax.tree.leaves(comp),
+            jax.tree.leaves(res)):
+        xn, rn = agg_ops.aggregate_apply(
+            xl.reshape(-1), al.reshape(s, -1), cl.reshape(s, -1),
+            dl.reshape(s, -1), rl.reshape(s, -1), m, w,
+            force_pallas=force_pallas)
+        x_new.append(xn.reshape(xl.shape))
+        res_new.append(rn.reshape(rl.shape))
+    comm = comm._replace(residual=jax.tree.map(
+        lambda t, v: t.at[cids].set(v), comm.residual,
+        jax.tree.unflatten(treedef, res_new)))
+    return jax.tree.unflatten(treedef, x_new), comm
+
+
 @dataclasses.dataclass(frozen=True)
 class CommConfig:
     """Static description of a communication regime.

@@ -75,16 +75,28 @@ class FedAvg(base.FederatedAlgorithm):
         )(cids, keys)
         if comm is not None:
             from repro import comm as comm_lib
+            from repro.kernels.aggregate import ops as agg_ops
 
-            y_hat, comm = comm_lib.uplink(
-                comm, y_final, cids, comm_lib.comm_key(key), ref=state.x)
-            scale = comm_lib.participation_scale(comm.mask, cids)
-            y_mean = base.client_mean(state.x, y_hat, weight_scale=scale)
+            if comm_cfg.ef_enabled(comm) and agg_ops.use_fused_aggregate():
+                # fused EF round: the wire deltas C(y_i − x) aggregate and
+                # apply in one kernel pass — x + lr·meanᵢwᵢĉᵢ expressed as
+                # x − (−lr)·Σᵢ(wᵢ/S)·ĉᵢ (meanᵢwᵢ = 1 by construction of the
+                # participation scale, so this equals the unfused
+                # reconstruct-then-lerp to float tolerance)
+                x, comm = comm_lib.uplink_fused_apply(
+                    comm, y_final, cids, comm_lib.comm_key(key), state.x,
+                    -self.server_lr, ref=state.x)
+            else:
+                y_hat, comm = comm_lib.uplink(
+                    comm, y_final, cids, comm_lib.comm_key(key), ref=state.x)
+                scale = comm_lib.participation_scale(comm.mask, cids)
+                y_mean = base.client_mean(state.x, y_hat, weight_scale=scale)
+                x = tm.tree_lerp(self.server_lr, state.x, y_mean)
             comm = comm_lib.account_round(
                 comm, state.x, up_vectors=1, down_vectors=1)
         else:
             y_mean = base.client_mean(state.x, y_final)
-        x = tm.tree_lerp(self.server_lr, state.x, y_mean)
+            x = tm.tree_lerp(self.server_lr, state.x, y_mean)
         return FedAvgState(x=x, eta=state.eta, r=state.r + 1, comm=comm)
 
     def init(self, problem, x0):

@@ -60,6 +60,7 @@ class SGD(base.FederatedAlgorithm):
         if comm is not None:
             from repro import comm as comm_lib
             from repro.comm import config as comm_cfg
+            from repro.kernels.aggregate import ops as agg_ops
 
             # all N clients compute (static shape); the round's mask decides
             # who transmits — an algorithm-level s would be silently ignored
@@ -67,11 +68,20 @@ class SGD(base.FederatedAlgorithm):
             n = problem.num_clients
             cids = base.sample_clients(k_sample, n, n)
             g_per = base.grad_k(problem, state.x, cids, k_grad, self.k)
-            g_hat, comm = comm_lib.uplink(
-                comm, g_per, cids, comm_lib.comm_key(key))
-            scale = comm_lib.participation_scale(comm.mask, cids)
-            x = base.fused_server_step(state.x, g_hat, state.eta,
-                                       weight_scale=scale)
+            if comm_cfg.ef_enabled(comm) and agg_ops.use_fused_aggregate():
+                # one fused kernel pass: masked weighted mean + EF residual
+                # update + server step — bitwise identical to the unfused
+                # sequence below on kernel backends (same einsum order,
+                # η folded into the weights the same way)
+                x, comm = comm_lib.uplink_fused_apply(
+                    comm, g_per, cids, comm_lib.comm_key(key), state.x,
+                    state.eta)
+            else:
+                g_hat, comm = comm_lib.uplink(
+                    comm, g_per, cids, comm_lib.comm_key(key))
+                scale = comm_lib.participation_scale(comm.mask, cids)
+                x = base.fused_server_step(state.x, g_hat, state.eta,
+                                           weight_scale=scale)
             comm = comm_lib.account_round(
                 comm, state.x, up_vectors=1, down_vectors=1)
         else:

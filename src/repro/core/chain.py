@@ -476,14 +476,25 @@ class Chain:
         return runner_lib._cache_put(key, executor)
 
     def executor(self, problem, rounds: int, comm: bool = False):
-        """The jitted, module-cached chain executor."""
+        """The jitted, module-cached chain executor.
+
+        ``states0`` (argnum 2) is donated — the per-stage scan carry is
+        rebuilt fresh by every caller (``init_states``), so its buffers are
+        free for the outputs on donation-capable backends. The comm variant
+        also donates the initial ``CommState`` (argnum 6, built fresh from
+        ``CommConfig.init_state``) but NOT the masks: ``run`` forwards
+        user-supplied ``comm_masks`` arrays there. Donated argnums are part
+        of the cache key.
+        """
+        donate = (2, 6) if comm else (2,)
         key = ("chain-jit", self._key(), runner_lib.problem_key(problem),
-               rounds, comm)
+               rounds, comm, donate)
         fn = runner_lib._cache_get(key)
         if fn is not None:
             return fn
         return runner_lib._cache_put(
-            key, jax.jit(self.executor_body(problem, rounds, comm)))
+            key, jax.jit(self.executor_body(problem, rounds, comm),
+                         donate_argnums=donate))
 
     def fraction_executor_body(self, problem, rounds: int):
         """The schedule-as-OPERAND chain executor (local-fraction sweeps).
@@ -573,6 +584,8 @@ class Chain:
         bits_up = bits_down = None
         if comm is None:
             fn = self.executor(problem, rounds)
+            states0 = runner_lib.dealias_donated(
+                states0, spec, x0, key, eta_arr)
             x_hat, history, kept_flags = fn(spec, x0, states0, key, eta_arr)
         else:
             from repro.comm import config as comm_cfg
@@ -585,6 +598,10 @@ class Chain:
                      else jnp.asarray(comm_masks, jnp.float32))
             comm0 = comm.init_state(n_clients, x0)
             fn = self.executor(problem, rounds, comm=True)
+            states0 = runner_lib.dealias_donated(
+                states0, spec, x0, key, eta_arr, masks)
+            comm0 = runner_lib.dealias_donated(
+                comm0, spec, x0, states0, key, eta_arr, masks)
             x_hat, history, kept_flags, bits_up, bits_down = fn(
                 spec, x0, states0, key, eta_arr, masks, comm0)
         kept = np.asarray(kept_flags)

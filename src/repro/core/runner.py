@@ -38,11 +38,44 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import warnings
 import weakref
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+# The jitted executors donate their call-private operands (scan-carry
+# state0, per-cell key/mask stacks — see core.sweep's memory model). CPU
+# has no donation support, so JAX warns once per call that the donated
+# buffers went unused; that is expected on CPU hosts and pure noise here.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
+
+
+def dealias_donated(donated, *others):
+    """Copy any leaf of ``donated`` whose buffer also backs a protected
+    array in ``others`` — the call's other operands (XLA refuses to execute
+    when a donated buffer appears twice among the arguments) and any
+    caller-owned arrays like ``x0`` that the fresh state stores by
+    reference (donation would delete them out from under the caller).
+    Aliases only arise from object reuse at init time, so object identity
+    is the right test; fresh arrays pass through untouched and nothing is
+    copied on the common path."""
+    seen = set()
+    for t in others:
+        for leaf in jax.tree.leaves(t):
+            if isinstance(leaf, jax.Array):
+                seen.add(id(leaf))
+
+    def dealias(leaf):
+        if isinstance(leaf, jax.Array):
+            if id(leaf) in seen:
+                return jnp.array(leaf, copy=True)
+            seen.add(id(leaf))
+        return leaf
+
+    return jax.tree.map(dealias, donated)
 
 # Trace counter: the executor bodies bump this when (re)traced. A cached,
 # single-compile executor leaves the count unchanged on repeated calls.
@@ -194,12 +227,21 @@ def executor_body(algo, problem, eval_output: bool = True):
 
 
 def executor(algo, problem, eval_output: bool = True):
-    """The jitted, module-cached executor (same signature as the body)."""
-    key = ("jit", algo, problem_key(problem), eval_output)
+    """The jitted, module-cached executor (same signature as the body).
+
+    ``state0`` (argnum 1) is DONATED: it is the scan carry, dead the moment
+    the scan starts, so donation-capable backends reuse its buffers for the
+    output state instead of copying. Callers must build it fresh per call
+    (``run``/``run_with_decay`` do). The donated argnums are part of the
+    cache key.
+    """
+    donate = (1,)
+    key = ("jit", algo, problem_key(problem), eval_output, donate)
     fn = _cache_get(key)
     if fn is not None:
         return fn
-    return _cache_put(key, jax.jit(executor_body(algo, problem, eval_output)))
+    return _cache_put(key, jax.jit(executor_body(algo, problem, eval_output),
+                                   donate_argnums=donate))
 
 
 def comm_executor_body(algo, problem, eval_output: bool = True):
@@ -247,13 +289,17 @@ def comm_executor_body(algo, problem, eval_output: bool = True):
 
 
 def comm_executor(algo, problem, eval_output: bool = True):
-    """The jitted, module-cached comm executor."""
-    key = ("comm-jit", algo, problem_key(problem), eval_output)
+    """The jitted, module-cached comm executor. ``state0`` is donated like
+    the plain executor's (the [R, N] masks are NOT — ``run`` forwards
+    user-supplied ``comm_masks`` arrays there)."""
+    donate = (1,)
+    key = ("comm-jit", algo, problem_key(problem), eval_output, donate)
     fn = _cache_get(key)
     if fn is not None:
         return fn
     return _cache_put(key, jax.jit(
-        comm_executor_body(algo, problem, eval_output)))
+        comm_executor_body(algo, problem, eval_output),
+        donate_argnums=donate))
 
 
 def method_executor_body(methods, problem, eval_output: bool = True):
@@ -330,6 +376,10 @@ def run(algo, problem, x0, rounds: int, key, *, eval_output: bool = True,
         masks = (comm.round_masks(rounds, n) if comm_masks is None
                  else jnp.asarray(comm_masks, jnp.float32))
         state0 = state0._replace(comm=comm.init_state(n, x0))
+        # x0/eta are caller-owned and typically stored BY REFERENCE in the
+        # fresh state — they must survive the donation
+        state0 = dealias_donated(state0, spec, keys, eta_scale, masks,
+                                 x0, eta)
         fn = (comm_executor if jit else comm_executor_body)(
             algo, problem, eval_output)
         state, (history, bits_up, bits_down) = fn(
@@ -338,6 +388,7 @@ def run(algo, problem, x0, rounds: int, key, *, eval_output: bool = True,
                          history=history, bits_up=bits_up,
                          bits_down=bits_down)
     fn = (executor if jit else executor_body)(algo, problem, eval_output)
+    state0 = dealias_donated(state0, spec, keys, eta_scale, x0, eta)
     state, history = fn(spec, state0, keys, eta_scale)
     return RunResult(state=state, x_hat=algo.output(state), history=history)
 
@@ -392,9 +443,14 @@ def run_with_decay(
     eta_scale = decay_eta_scale(rounds, decay_first, decay_factor)
 
     state0 = algo.init_with_eta(problem, x0, eta)
-    fn = (executor if jit else executor_body)(algo, problem, True)
-    state, history = fn(as_spec(problem), state0, keys, eta_scale)
-    # final state carries the fully-annealed stepsize, as the segment loop did
+    # the annealed final stepsize is derived BEFORE the executor call:
+    # state0 is donated to the jit, so its buffers must not be read after
     n_applied = sum(1 for seg in segments if seg > 0)
-    state = state._replace(eta=state0.eta * decay_factor**n_applied)
+    eta_final = state0.eta * decay_factor**n_applied
+    fn = (executor if jit else executor_body)(algo, problem, True)
+    spec = as_spec(problem)
+    state0 = dealias_donated(state0, spec, keys, eta_scale, x0, eta)
+    state, history = fn(spec, state0, keys, eta_scale)
+    # final state carries the fully-annealed stepsize, as the segment loop did
+    state = state._replace(eta=eta_final)
     return RunResult(state=state, x_hat=algo.output(state), history=history)

@@ -75,6 +75,43 @@ device mesh via ``run_sweep(..., mesh=...)`` / ``run_fraction_sweep(...,
 mesh=...)`` (``repro.dist.grid``), which partitions the identical cell
 stacks across devices with ``shard_map`` — bitwise the same results, one
 compile either way.
+
+Memory model
+------------
+Operand layouts. A ``problems=`` sweep flattens problems × seeds into one
+cells axis (c = p·S + s, the ``repro.dist.partition`` contract). Two
+operand layouts feed it:
+
+* ``operand_layout="indexed"`` (default) — ONE O(P) stacked spec (and one
+  [P, …] x0 stack) rides the call unbatched, plus a per-cell int32 problem
+  index ``pidx[c] = c // S``; each cell gathers its own spec leaves
+  (``make_indexed_cell``). Spec-operand memory is O(P) regardless of the
+  seed count.
+* ``operand_layout="stacked"`` — the historical layout: every spec data
+  leaf materialized once per cell (``jnp.repeat`` along the cells axis),
+  O(P·S) operand memory. Kept as the reference the indexed path is tested
+  bitwise against (``benchmarks/memory_bench.py`` measures both).
+
+The in-cell gather is exact (a gather of identical rows), and every
+per-cell op is batch-invariant, so the two layouts are BITWISE identical —
+on the vmapped engine here and on the sharded one (where the indexed
+layout replicates the O(P) stack across shards and shards only ``pidx``).
+
+Donation contract. Every jitted executor donates its call-private operands
+(``jax.jit(..., donate_argnums=...)``): the scan-carry state0/states0 in
+``runner``/``chain`` executors, and the per-cell key/mask/index/stepsize
+stacks here — never ``spec``/``x0`` (caller-owned; donating them would
+invalidate the user's arrays on donation-capable backends). Callers of the
+cached executors must therefore pass freshly built arrays for the donated
+positions — everything ``run_sweep`` constructs per call. On CPU donation
+is a no-op (JAX's "donated buffers were not usable" warning is filtered in
+``runner``).
+
+Executor cache keys. The executor LRU (``runner._EXECUTOR_CACHE``) keys
+every jitted grid on (algo/chain identity, problem STRUCTURE, rounds,
+flags, operand layout, donated argnums) plus the Pallas-dispatch env — so
+switching layout or donation never silently reuses a stale compile, and
+numeric knobs (ζ, σ, compressor, …) never force a new one.
 """
 from __future__ import annotations
 
@@ -231,32 +268,109 @@ def make_chain_fraction_cell(chain, problem, rounds: int, tag: str):
     return cell
 
 
+_OPERAND_LAYOUTS = ("indexed", "stacked")
+
+
+def check_operand_layout(layout: str) -> str:
+    """Validate an ``operand_layout`` value (shared with the sharded
+    engine)."""
+    if layout not in _OPERAND_LAYOUTS:
+        raise ValueError(f"operand_layout must be one of "
+                         f"{_OPERAND_LAYOUTS}, got {layout!r}")
+    return layout
+
+
+def make_indexed_cell(cell):
+    """O(P) operand adapter around a ``make_*_cell`` cell: the cell's
+    leading ``(spec, x0, …)`` operands become ``(spec_stack, x0_stack,
+    pidx, …)`` with an in-cell gather of the problem's own leaves.
+
+    Under the engines' batching only ``pidx`` is per-cell (batched /
+    shard-sharded) while the stacks ride unbatched (replicated), so spec
+    operand memory is O(P) instead of O(P·S). The gather pulls identical
+    rows to what the stacked layout materializes per cell, and every
+    per-cell op is batch-invariant, so results are bitwise identical.
+    """
+    def indexed_cell(spec_stack, x0_stack, pidx, *rest):
+        spec = jax.tree.map(lambda l: l[pidx], spec_stack)
+        x0 = jax.tree.map(lambda l: l[pidx], x0_stack)
+        return cell(spec, x0, *rest)
+
+    return indexed_cell
+
+
+def problem_index_operand(n_probs: int, n_seeds: int) -> jnp.ndarray:
+    """The per-cell problem index of the flattened cells axis:
+    ``pidx[c] = c // S`` for c = p·S + s (``repro.dist.partition``)."""
+    return jnp.arange(n_probs * n_seeds, dtype=jnp.int32) // n_seeds
+
+
+def build_problem_operands(stacked, x0_stack, keys, n_probs: int,
+                           n_seeds: int, layout: str = "indexed"):
+    """Materialize the flattened problems × seeds cell operands for the
+    vmapped engine (shared with ``benchmarks/memory_bench.py``).
+
+    Returns ``(spec_op, x0_op, pidx, keys_c)``: the indexed layout keeps
+    the O(P) stacks and adds an int32 [P·S] problem index; the stacked
+    layout repeats every spec/x0 leaf once per seed (O(P·S)) and returns
+    ``pidx=None``. ``keys_c`` tiles the per-seed keys per problem either
+    way.
+    """
+    check_operand_layout(layout)
+    keys_c = jnp.tile(keys, (n_probs, 1))
+    if layout == "stacked":
+        spec_op = jax.tree.map(
+            lambda l: jnp.repeat(l, n_seeds, axis=0), stacked)
+        x0_op = jax.tree.map(
+            lambda l: jnp.repeat(l, n_seeds, axis=0), x0_stack)
+        return spec_op, x0_op, None, keys_c
+    return stacked, x0_stack, problem_index_operand(n_probs, n_seeds), keys_c
+
+
 def _sweep_fn_algo(algo, problem, rounds: int, eval_output: bool,
-                   eta_mode: str, problem_axis: bool = False):
+                   eta_mode: str, problem_axis: bool = False,
+                   layout: str = "indexed"):
     """The seeds × etas grid cell; ``problem_axis`` wraps one more vmap over
-    a stacked spec operand (+ per-problem x0) — one compiled call for the
-    whole problems × seeds × stepsizes grid."""
+    the problem operands — one compiled call for the whole problems × seeds
+    × stepsizes grid (O(P) spec memory under the indexed layout)."""
+    if problem_axis and layout == "indexed":
+        donate = (2, 3, 4)  # pidx, keys, etas — never spec/x0
+    else:
+        donate = (2, 3)  # keys, etas
     key = ("sweep-algo", algo, runner_lib.problem_key(problem), rounds,
-           eval_output, eta_mode, problem_axis)
+           eval_output, eta_mode, problem_axis,
+           layout if problem_axis else None, donate)
     fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
 
     tag = "sweep-probs" if problem_axis else "sweep"
     cell = make_algo_cell(algo, problem, rounds, eval_output, eta_mode, tag)
-    # problems × seeds ride ONE flattened cells axis (spec/x0/keys stacked
-    # per cell, c = p·S + s) — the same batching structure the sharded
-    # engine (repro.dist.grid) runs per shard, so sharding is bitwise
-    inner = jax.vmap(cell, in_axes=(None, None, None, 0))
-    grid = jax.vmap(inner, in_axes=((0, 0, 0, None) if problem_axis
-                                    else (None, None, 0, None)))
-    return runner_lib._cache_put(key, jax.jit(grid))
+    # problems × seeds ride ONE flattened cells axis (c = p·S + s) — the
+    # same batching structure the sharded engine (repro.dist.grid) runs per
+    # shard, so sharding is bitwise. Indexed layout: the O(P) spec/x0
+    # stacks ride unbatched and only pidx is per-cell.
+    if problem_axis and layout == "indexed":
+        icell = make_indexed_cell(cell)
+        inner = jax.vmap(icell, in_axes=(None, None, None, None, 0))
+        grid = jax.vmap(inner, in_axes=(None, None, 0, 0, None))
+    else:
+        inner = jax.vmap(cell, in_axes=(None, None, None, 0))
+        grid = jax.vmap(inner, in_axes=((0, 0, 0, None) if problem_axis
+                                        else (None, None, 0, None)))
+    return runner_lib._cache_put(key, jax.jit(grid, donate_argnums=donate))
 
 
 def _sweep_fn_algo_comm(algo, problem, rounds: int, eval_output: bool,
-                        eta_mode: str, problem_axis: bool = False):
+                        eta_mode: str, problem_axis: bool = False,
+                        layout: str = "indexed"):
+    if problem_axis and layout == "indexed":
+        donate = (2, 3, 4, 5, 6)  # pidx, keys, etas, masks, comm0
+    else:
+        donate = (2, 3, 4, 5)  # keys, etas, masks, comm0
     key = ("sweep-algo-comm", algo, runner_lib.problem_key(problem), rounds,
-           eval_output, eta_mode, problem_axis)
+           eval_output, eta_mode, problem_axis,
+           layout if problem_axis else None, donate)
     fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
@@ -267,47 +381,79 @@ def _sweep_fn_algo_comm(algo, problem, rounds: int, eval_output: bool,
     # masks batch with the cells axis (one independent [R, N] schedule per
     # (problem, seed) cell); the initial CommState is identical across the
     # grid (zeros) so it broadcasts
-    inner = jax.vmap(cell, in_axes=(None, None, None, 0, None, None))
-    grid = jax.vmap(inner, in_axes=((0, 0, 0, None, 0, None) if problem_axis
-                                    else (None, None, 0, None, 0, None)))
-    return runner_lib._cache_put(key, jax.jit(grid))
+    if problem_axis and layout == "indexed":
+        icell = make_indexed_cell(cell)
+        inner = jax.vmap(icell,
+                         in_axes=(None, None, None, None, 0, None, None))
+        grid = jax.vmap(inner, in_axes=(None, None, 0, 0, None, 0, None))
+    else:
+        inner = jax.vmap(cell, in_axes=(None, None, None, 0, None, None))
+        grid = jax.vmap(inner, in_axes=(
+            (0, 0, 0, None, 0, None) if problem_axis
+            else (None, None, 0, None, 0, None)))
+    return runner_lib._cache_put(key, jax.jit(grid, donate_argnums=donate))
 
 
-def _sweep_fn_chain(chain, problem, rounds: int, problem_axis: bool = False):
+def _sweep_fn_chain(chain, problem, rounds: int, problem_axis: bool = False,
+                    layout: str = "indexed"):
+    if problem_axis and layout == "indexed":
+        donate = (2, 3, 4, 5)  # pidx, keys, mults, eta_sched
+    else:
+        donate = (2, 3, 4)  # keys, mults, eta_sched
     key = ("sweep-chain", chain._key(), runner_lib.problem_key(problem),
-           rounds, problem_axis)
+           rounds, problem_axis, layout if problem_axis else None, donate)
     fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
 
     tag = "sweep-probs" if problem_axis else "sweep"
     cell = make_chain_cell(chain, problem, rounds, tag)
-    inner = jax.vmap(cell, in_axes=(None, None, None, 0, None))
-    grid = jax.vmap(inner, in_axes=((0, 0, 0, None, None) if problem_axis
-                                    else (None, None, 0, None, None)))
-    return runner_lib._cache_put(key, jax.jit(grid))
+    if problem_axis and layout == "indexed":
+        icell = make_indexed_cell(cell)
+        inner = jax.vmap(icell,
+                         in_axes=(None, None, None, None, 0, None))
+        grid = jax.vmap(inner, in_axes=(None, None, 0, 0, None, None))
+    else:
+        inner = jax.vmap(cell, in_axes=(None, None, None, 0, None))
+        grid = jax.vmap(inner, in_axes=((0, 0, 0, None, None) if problem_axis
+                                        else (None, None, 0, None, None)))
+    return runner_lib._cache_put(key, jax.jit(grid, donate_argnums=donate))
 
 
 def _sweep_fn_chain_comm(chain, problem, rounds: int,
-                         problem_axis: bool = False):
+                         problem_axis: bool = False,
+                         layout: str = "indexed"):
+    if problem_axis and layout == "indexed":
+        donate = (2, 3, 4, 5, 6, 7)  # pidx, keys, mults, η-sched, masks, comm0
+    else:
+        donate = (2, 3, 4, 5, 6)
     key = ("sweep-chain-comm", chain._key(), runner_lib.problem_key(problem),
-           rounds, problem_axis)
+           rounds, problem_axis, layout if problem_axis else None, donate)
     fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
 
     tag = "sweep-comm-probs" if problem_axis else "sweep-comm"
     cell = make_chain_comm_cell(chain, problem, rounds, tag)
-    inner = jax.vmap(cell, in_axes=(None, None, None, 0, None, None, None))
-    grid = jax.vmap(inner, in_axes=(
-        (0, 0, 0, None, None, 0, None) if problem_axis
-        else (None, None, 0, None, None, 0, None)))
-    return runner_lib._cache_put(key, jax.jit(grid))
+    if problem_axis and layout == "indexed":
+        icell = make_indexed_cell(cell)
+        inner = jax.vmap(
+            icell, in_axes=(None, None, None, None, 0, None, None, None))
+        grid = jax.vmap(inner,
+                        in_axes=(None, None, 0, 0, None, None, 0, None))
+    else:
+        inner = jax.vmap(cell,
+                         in_axes=(None, None, None, 0, None, None, None))
+        grid = jax.vmap(inner, in_axes=(
+            (0, 0, 0, None, None, 0, None) if problem_axis
+            else (None, None, 0, None, None, 0, None)))
+    return runner_lib._cache_put(key, jax.jit(grid, donate_argnums=donate))
 
 
 def _sweep_fn_chain_fraction(chain, problem, rounds: int):
+    donate = (2, 3, 4, 5, 6, 7)  # every operand row but spec/x0
     key = ("sweep-chain-frac", chain._fraction_free_key(),
-           runner_lib.problem_key(problem), rounds)
+           runner_lib.problem_key(problem), rounds, donate)
     fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
@@ -317,12 +463,13 @@ def _sweep_fn_chain_fraction(chain, problem, rounds: int):
     # schedule rows on the fraction axis only
     grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, 0, 0, 0, 0, 0, 0)),
                     in_axes=(None, None, 0, 0, None, None, None, None))
-    return runner_lib._cache_put(key, jax.jit(grid))
+    return runner_lib._cache_put(key, jax.jit(grid, donate_argnums=donate))
 
 
 def _sweep_fn_chain_decay(chain, problem, rounds: int):
+    donate = (2, 3)  # keys, eta_scale rows
     key = ("sweep-chain-decay", chain._key(), runner_lib.problem_key(problem),
-           rounds)
+           rounds, donate)
     fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
@@ -341,13 +488,14 @@ def _sweep_fn_chain_decay(chain, problem, rounds: int):
     # axes: seeds × decay grids (eta_scale rows)
     grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, None, 0)),
                     in_axes=(None, None, 0, None))
-    return runner_lib._cache_put(key, jax.jit(grid))
+    return runner_lib._cache_put(key, jax.jit(grid, donate_argnums=donate))
 
 
 def _sweep_fn_methods(methods, problem, rounds: int, eval_output: bool):
     tag = "+".join(m.name for m in methods)
+    donate = (2, 3, 4, 5)  # stacked state0, keys, etas, method index
     key = ("sweep-methods", methods, runner_lib.problem_key(problem), rounds,
-           eval_output)
+           eval_output, donate)
     fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
@@ -370,7 +518,7 @@ def _sweep_fn_methods(methods, problem, rounds: int, eval_output: bool):
     grid = jax.vmap(jax.vmap(cell, in_axes=(None, None, None, None, 0, None)),
                     in_axes=(None, None, None, 0, None, None))
     grid = jax.vmap(grid, in_axes=(None, None, 0, None, None, 0))  # methods
-    return runner_lib._cache_put(key, jax.jit(grid))
+    return runner_lib._cache_put(key, jax.jit(grid, donate_argnums=donate))
 
 
 def _normalize_x0_stack(x0, stacked, n_probs: int):
@@ -432,7 +580,8 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
               seeds: Sequence[int], etas: Sequence[float],
               eta_mode: Optional[str] = None, eval_output: bool = True,
               decay: Optional[dict] = None, comm=None,
-              problems=None, mesh=None) -> SweepResult:
+              problems=None, mesh=None,
+              operand_layout: str = "indexed") -> SweepResult:
     """Run every (seed, η) — and optionally (problem, seed, η) — grid cell
     in one compiled, vmapped call.
 
@@ -451,10 +600,13 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
     (each problem then starts from its own ``spec.x0``), a single point
     (shared), or a [P, …] stack. Memory note: the problems × seeds axes
     run as one flattened cells axis (the layout the device-sharded engine
-    partitions — what makes ``mesh=`` bitwise), which materializes every
-    spec data leaf once per seed; for data-heavy families with many seeds,
-    split seeds across calls (the executor is cached — extra calls cost
-    dispatch, not compiles).
+    partitions — what makes ``mesh=`` bitwise); under the default
+    ``operand_layout="indexed"`` the call carries ONE O(P) stacked spec
+    plus a per-cell problem index, so spec-operand memory does not grow
+    with the seed count. ``operand_layout="stacked"`` keeps the historical
+    O(P·S) repeated-leaf layout — bitwise identical results, kept as the
+    reference layout ``benchmarks/memory_bench.py`` measures against (see
+    the module docstring's memory model).
 
     ``comm`` (a ``repro.comm.CommConfig``) enables compressed uplinks /
     partial participation / bits accounting; seed s uses the config's mask
@@ -474,9 +626,11 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
         return dist_grid.run_sweep_sharded(
             algo_or_chain, problem, x0, rounds, seeds=seeds, etas=etas,
             eta_mode=eta_mode, eval_output=eval_output, decay=decay,
-            comm=comm, problems=problems, mesh=mesh)
+            comm=comm, problems=problems, mesh=mesh,
+            operand_layout=operand_layout)
     is_chain = isinstance(algo_or_chain, chain_lib.Chain)
     eta_mode = _resolve_eta_mode(algo_or_chain, eta_mode)
+    check_operand_layout(operand_layout)
     seeds = tuple(int(s) for s in seeds)
     etas = tuple(float(e) for e in etas)
     if not seeds:
@@ -493,20 +647,17 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
         n_seeds = len(seeds)
         x0_stack = _normalize_x0_stack(x0, stacked, n_probs)
         # problems × seeds flatten to ONE cells axis, c = p·S + s (the
-        # contract of repro.dist.partition): spec/x0 leaves repeat per seed
-        # and keys tile per problem — the exact per-cell stacks the sharded
-        # engine partitions over devices, so run_sweep(..., mesh=...) is
-        # bitwise identical to this path. The cost is real operand memory:
-        # every spec data leaf is materialized S times for the call, which
-        # for data-heavy families (vision image shards, logreg feature
-        # tensors) multiplies the problem-data footprint by the seed count.
-        # When that dominates, split seeds across calls — the executor is
-        # cached, so extra calls cost dispatch, not compiles.
-        spec_c = jax.tree.map(
-            lambda l: jnp.repeat(l, n_seeds, axis=0), stacked)
-        x0_c = jax.tree.map(
-            lambda l: jnp.repeat(l, n_seeds, axis=0), x0_stack)
-        keys_c = jnp.tile(keys, (n_probs, 1))
+        # contract of repro.dist.partition): keys tile per problem and the
+        # spec rides either as ONE O(P) stack + per-cell problem index
+        # (indexed layout, the default) or with every leaf repeated per
+        # seed (stacked layout, O(P·S)) — the exact per-cell values the
+        # sharded engine partitions over devices, so run_sweep(...,
+        # mesh=...) is bitwise identical to this path, and so are the two
+        # layouts to each other (module docstring: memory model).
+        spec_c, x0_c, pidx, keys_c = build_problem_operands(
+            stacked, x0_stack, keys, n_probs, n_seeds, operand_layout)
+        lead = ((spec_c, x0_c, pidx) if pidx is not None
+                else (spec_c, x0_c))
 
         def grid_shape(outs):
             return jax.tree.map(
@@ -529,33 +680,36 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
             eta_sched = chain.eta_schedule(rounds, decay)
             if comm is not None:
                 fn = _sweep_fn_chain_comm(chain, stacked, rounds,
-                                          problem_axis=True)
+                                          problem_axis=True,
+                                          layout=operand_layout)
                 x_hat, history, final, kept, bits_up, bits_down = grid_shape(
-                    fn(spec_c, x0_c, keys_c, etas_arr, eta_sched, masks,
-                       comm0))
+                    fn(*lead, keys_c, etas_arr, eta_sched, masks, comm0))
                 return SweepResult(history=history, final_sub=final,
                                    x_hat=x_hat, seeds=seeds, etas=etas,
                                    selected_initial=kept, bits_up=bits_up,
                                    bits_down=bits_down, problems=prob_names)
-            fn = _sweep_fn_chain(chain, stacked, rounds, problem_axis=True)
+            fn = _sweep_fn_chain(chain, stacked, rounds, problem_axis=True,
+                                 layout=operand_layout)
             x_hat, history, final, kept = grid_shape(
-                fn(spec_c, x0_c, keys_c, etas_arr, eta_sched))
+                fn(*lead, keys_c, etas_arr, eta_sched))
             return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                                seeds=seeds, etas=etas, selected_initial=kept,
                                problems=prob_names)
         if comm is not None:
             fn = _sweep_fn_algo_comm(algo_or_chain, stacked, rounds,
                                      eval_output, eta_mode,
-                                     problem_axis=True)
+                                     problem_axis=True,
+                                     layout=operand_layout)
             x_hat, history, final, bits_up, bits_down = grid_shape(
-                fn(spec_c, x0_c, keys_c, etas_arr, masks, comm0))
+                fn(*lead, keys_c, etas_arr, masks, comm0))
             return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                                seeds=seeds, etas=etas, bits_up=bits_up,
                                bits_down=bits_down, problems=prob_names)
         fn = _sweep_fn_algo(algo_or_chain, stacked, rounds, eval_output,
-                            eta_mode, problem_axis=True)
+                            eta_mode, problem_axis=True,
+                            layout=operand_layout)
         x_hat, history, final = grid_shape(
-            fn(spec_c, x0_c, keys_c, etas_arr))
+            fn(*lead, keys_c, etas_arr))
         return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                            seeds=seeds, etas=etas, problems=prob_names)
 

@@ -78,7 +78,21 @@ def _gather_cells(tree, idx):
     return jax.tree.map(lambda l: jnp.take(l, idx, axis=0), tree)
 
 
-def _sharded_grid_fn(cache_key, mesh, cell, cell_in_axes, replicated_args):
+def _indexed_cell_plan(cell, cell_in_axes, replicated_args):
+    """Adapt a cell's sharding plan to the indexed O(P) operand layout:
+    the leading ``(spec, x0)`` become replicated stacks and a per-cell
+    problem index is inserted (sharded with the cells, off the dense
+    stepsize axis) — ``core.sweep.make_indexed_cell`` does the in-cell
+    gather."""
+    icell = sweep_lib.make_indexed_cell(cell)
+    in_axes = (None if cell_in_axes is None
+               else (None, None, None) + tuple(cell_in_axes[2:]))
+    rep_args = (True, True, False) + tuple(replicated_args[2:])
+    return icell, in_axes, rep_args
+
+
+def _sharded_grid_fn(cache_key, mesh, cell, cell_in_axes, replicated_args,
+                     donate_argnums=()):
     """Build (or fetch) the sharded grid executor around one sweep cell.
 
     ``replicated_args`` flags which cell arguments ride replicated
@@ -89,8 +103,12 @@ def _sharded_grid_fn(cache_key, mesh, cell, cell_in_axes, replicated_args):
     ``in_specs`` follow each argument's pytree STRUCTURE, so one cached
     entry lazily assembles a shard_map per operand structure (e.g. comm
     states with/without error-feedback residuals); jit handles shapes.
+    ``donate_argnums`` positions are donated to the jit (call-private
+    stacks only — never the caller-owned spec/x0) and are part of the
+    cache key.
     """
-    key = ("dist-grid", cache_key, mesh_lib.mesh_signature(mesh))
+    key = ("dist-grid", cache_key, mesh_lib.mesh_signature(mesh),
+           tuple(donate_argnums))
     fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
@@ -112,8 +130,10 @@ def _sharded_grid_fn(cache_key, mesh, cell, cell_in_axes, replicated_args):
             in_specs = tuple(
                 _replicated(a) if rep else _cell_specs(a, ruleset)
                 for a, rep in zip(args, replicated_args))
-            jitted = jax.jit(compat.shard_map(
-                shard_body, mesh, in_specs=in_specs, out_specs=P("grid")))
+            jitted = jax.jit(
+                compat.shard_map(shard_body, mesh, in_specs=in_specs,
+                                 out_specs=P("grid")),
+                donate_argnums=tuple(donate_argnums))
             compiled[struct] = jitted
         return jitted(*args)
 
@@ -135,16 +155,24 @@ def run_sweep_sharded(algo_or_chain, problem, x0, rounds: int, *,
                       eta_mode: Optional[str] = None,
                       eval_output: bool = True,
                       decay: Optional[dict] = None, comm=None,
-                      problems=None) -> "sweep_lib.SweepResult":
+                      problems=None,
+                      operand_layout: str = "indexed"
+                      ) -> "sweep_lib.SweepResult":
     """``core.sweep.run_sweep`` on a ``('grid',)`` device mesh.
 
     Same arguments, same semantics, same ``SweepResult`` shapes; results,
     per-cell RNG streams and ``bits_up``/``bits_down`` are BITWISE identical
     to the single-device call (tested on a CPU debug mesh). See the module
-    docstring for the sharding anatomy.
+    docstring for the sharding anatomy. Under the default
+    ``operand_layout="indexed"`` the O(P) stacked spec/x0 ride REPLICATED
+    across shards and only the int32 per-cell problem index is sharded
+    with the cells; ``operand_layout="stacked"`` keeps the historical
+    per-cell gathered copies. The two layouts are bitwise identical
+    (``core.sweep``'s memory model).
     """
     is_chain = isinstance(algo_or_chain, chain_lib.Chain)
     eta_mode = sweep_lib._resolve_eta_mode(algo_or_chain, eta_mode)
+    sweep_lib.check_operand_layout(operand_layout)
     seeds = tuple(int(s) for s in seeds)
     etas = tuple(float(e) for e in etas)
     if not seeds:
@@ -175,7 +203,13 @@ def run_sweep_sharded(algo_or_chain, problem, x0, rounds: int, *,
     p_idx, s_idx = partition.cell_coords(n_probs, n_seeds)
     keys_c = keys[jnp.asarray(s_idx)][idx]  # [C_pad, 2]
 
-    if per_cell:
+    indexed = per_cell and operand_layout == "indexed"
+    if indexed:
+        # O(P) layout: the stacks ride replicated, the in-cell gather is
+        # driven by the sharded per-cell problem index
+        spec_c, x0_c = stacked, x0_stack
+        pidx_c = jnp.asarray(p_idx, jnp.int32)[idx]
+    elif per_cell:
         spec_c = _gather_cells(stacked, jnp.asarray(p_idx)[idx])
         x0_c = _gather_cells(x0_stack, jnp.asarray(p_idx)[idx])
     else:
@@ -192,40 +226,58 @@ def run_sweep_sharded(algo_or_chain, problem, x0, rounds: int, *,
             for p in range(n_probs) for s in range(n_seeds)])
         masks_c = masks_flat[idx]
         comm0 = comm.init_state(
-            n_clients, tm.tree_index(x0_c, 0) if per_cell else x0)
+            n_clients, tm.tree_index(x0_stack, 0) if per_cell else x0)
 
-    rep = not per_cell  # spec/x0 replication flag
+    rep = not per_cell  # spec/x0 replication flag (stacked layout)
     name_tag = "dist-comm" if comm is not None else "dist"
     if per_cell:
         name_tag += "-probs"
     pkey = runner_lib.problem_key(stacked)
 
+    def plan(cell, cell_in_axes, replicated_args):
+        """(cell, axes, replication, operand prefix, donated argnums) for
+        the chosen layout — donation covers every call-private stack
+        (keys/masks/η rows/pidx/comm0), never the caller-owned spec/x0."""
+        if indexed:
+            cell, cell_in_axes, replicated_args = _indexed_cell_plan(
+                cell, cell_in_axes, replicated_args)
+            lead = (spec_c, x0_c, pidx_c)
+        else:
+            lead = (spec_c, x0_c)
+        donate = tuple(range(2, len(replicated_args)))
+        return cell, cell_in_axes, replicated_args, lead, donate
+
+    layout_key = operand_layout if per_cell else None
     if is_chain:
         chain = algo_or_chain
         eta_sched = chain.eta_schedule(rounds, decay)
         if comm is not None:
-            cell = sweep_lib.make_chain_comm_cell(
-                chain, stacked, rounds, name_tag)
+            cell, axes, reps, lead, donate = plan(
+                sweep_lib.make_chain_comm_cell(chain, stacked, rounds,
+                                               name_tag),
+                (None, None, None, 0, None, None, None),
+                (rep, rep, False, True, True, False, True))
             fn = _sharded_grid_fn(
-                ("dist-chain-comm", chain._key(), pkey, rounds, per_cell),
-                mesh, cell,
-                cell_in_axes=(None, None, None, 0, None, None, None),
-                replicated_args=(rep, rep, False, True, True, False, True))
-            outs = fn(spec_c, x0_c, keys_c, etas_arr, eta_sched, masks_c,
-                      comm0)
+                ("dist-chain-comm", chain._key(), pkey, rounds, per_cell,
+                 layout_key),
+                mesh, cell, cell_in_axes=axes, replicated_args=reps,
+                donate_argnums=donate)
+            outs = fn(*lead, keys_c, etas_arr, eta_sched, masks_c, comm0)
             x_hat, history, final, kept, bits_up, bits_down = _unpad_cells(
                 outs, n_cells, lead_shape)
             return sweep_lib.SweepResult(
                 history=history, final_sub=final, x_hat=x_hat, seeds=seeds,
                 etas=etas, selected_initial=kept, bits_up=bits_up,
                 bits_down=bits_down, problems=prob_names)
-        cell = sweep_lib.make_chain_cell(chain, stacked, rounds, name_tag)
+        cell, axes, reps, lead, donate = plan(
+            sweep_lib.make_chain_cell(chain, stacked, rounds, name_tag),
+            (None, None, None, 0, None),
+            (rep, rep, False, True, True))
         fn = _sharded_grid_fn(
-            ("dist-chain", chain._key(), pkey, rounds, per_cell),
-            mesh, cell,
-            cell_in_axes=(None, None, None, 0, None),
-            replicated_args=(rep, rep, False, True, True))
-        outs = fn(spec_c, x0_c, keys_c, etas_arr, eta_sched)
+            ("dist-chain", chain._key(), pkey, rounds, per_cell, layout_key),
+            mesh, cell, cell_in_axes=axes, replicated_args=reps,
+            donate_argnums=donate)
+        outs = fn(*lead, keys_c, etas_arr, eta_sched)
         x_hat, history, final, kept = _unpad_cells(
             outs, n_cells, lead_shape)
         return sweep_lib.SweepResult(
@@ -234,29 +286,34 @@ def run_sweep_sharded(algo_or_chain, problem, x0, rounds: int, *,
 
     algo = algo_or_chain
     if comm is not None:
-        cell = sweep_lib.make_algo_comm_cell(
-            algo, stacked, rounds, eval_output, eta_mode, name_tag)
+        cell, axes, reps, lead, donate = plan(
+            sweep_lib.make_algo_comm_cell(
+                algo, stacked, rounds, eval_output, eta_mode, name_tag),
+            (None, None, None, 0, None, None),
+            (rep, rep, False, True, False, True))
         fn = _sharded_grid_fn(
             ("dist-algo-comm", algo, pkey, rounds, eval_output, eta_mode,
-             per_cell),
-            mesh, cell,
-            cell_in_axes=(None, None, None, 0, None, None),
-            replicated_args=(rep, rep, False, True, False, True))
-        outs = fn(spec_c, x0_c, keys_c, etas_arr, masks_c, comm0)
+             per_cell, layout_key),
+            mesh, cell, cell_in_axes=axes, replicated_args=reps,
+            donate_argnums=donate)
+        outs = fn(*lead, keys_c, etas_arr, masks_c, comm0)
         x_hat, history, final, bits_up, bits_down = _unpad_cells(
             outs, n_cells, lead_shape)
         return sweep_lib.SweepResult(
             history=history, final_sub=final, x_hat=x_hat, seeds=seeds,
             etas=etas, bits_up=bits_up, bits_down=bits_down,
             problems=prob_names)
-    cell = sweep_lib.make_algo_cell(
-        algo, stacked, rounds, eval_output, eta_mode, name_tag)
+    cell, axes, reps, lead, donate = plan(
+        sweep_lib.make_algo_cell(
+            algo, stacked, rounds, eval_output, eta_mode, name_tag),
+        (None, None, None, 0),
+        (rep, rep, False, True))
     fn = _sharded_grid_fn(
-        ("dist-algo", algo, pkey, rounds, eval_output, eta_mode, per_cell),
-        mesh, cell,
-        cell_in_axes=(None, None, None, 0),
-        replicated_args=(rep, rep, False, True))
-    outs = fn(spec_c, x0_c, keys_c, etas_arr)
+        ("dist-algo", algo, pkey, rounds, eval_output, eta_mode, per_cell,
+         layout_key),
+        mesh, cell, cell_in_axes=axes, replicated_args=reps,
+        donate_argnums=donate)
+    outs = fn(*lead, keys_c, etas_arr)
     x_hat, history, final = _unpad_cells(outs, n_cells, lead_shape)
     return sweep_lib.SweepResult(history=history, final_sub=final,
                                  x_hat=x_hat, seeds=seeds, etas=etas,
@@ -305,7 +362,8 @@ def run_fraction_sweep_sharded(chain, problem, x0, rounds: int, *,
         mesh, cell,
         cell_in_axes=None,  # flat cells axis, no dense inner axis
         replicated_args=(True, True, False, False, False, False, False,
-                         False))
+                         False),
+        donate_argnums=(2, 3, 4, 5, 6, 7))  # per-cell key/schedule rows
     outs = fn(spec, x0, keys_r_c, keys_s_c, stage_c, kind_c, hmode_c, eta_c)
     x_hat, history, final, kept = _unpad_cells(
         outs, n_cells, (n_seeds, n_fracs))

@@ -65,6 +65,76 @@ def chain_aggregate(x, g, c_i, c, weights, *, lr: float, interpret: bool = False
     return out[:d] if pad else out
 
 
+def _agg_apply_kernel(w_ref, m_ref, x_ref, a_ref, di_ref, co_ref, rs_ref,
+                      xo_ref, ro_ref):
+    a = a_ref[...].astype(jnp.float32)  # [S, BD] wire rows
+    w = w_ref[...].astype(jnp.float32)  # [S]
+    upd = jnp.einsum("sd,s->d", a, w)
+    xo_ref[...] = (x_ref[...].astype(jnp.float32) - upd).astype(xo_ref.dtype)
+    m = m_ref[...].astype(jnp.float32)[:, None]  # [S, 1]
+    di = di_ref[...].astype(jnp.float32)
+    co = co_ref[...].astype(jnp.float32)
+    rs = rs_ref[...].astype(jnp.float32)
+    ro_ref[...] = (m * (di - co) + (1.0 - m) * rs).astype(ro_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_d"))
+def aggregate_apply(x, agg_rows, comp, delta_in, res, m, w, *,
+                    interpret: bool = False, block_d: int = BLOCK_D):
+    """Fused aggregate + error-feedback + server apply over one round.
+
+        x_new   = x − Σ_i w_i·a_i
+        res_new = m·(Δ_in − C(Δ_in)) + (1 − m)·res
+
+    x: [D]; agg_rows (wire rows a_i), comp (C(Δ_in)), delta_in (Δ_in), res:
+    [S, D]; m (participation mask rows), w (step-folded aggregation
+    weights): [S]. One pass streams the [S, D] client rows through VMEM —
+    the per-block working set is 4 [S, BD] tiles + 2 [BD] vectors
+    (~(4·S + 2)·BLOCK_D·4B), and XLA never materializes the masked
+    residual/update intermediates in HBM. The einsum term matches
+    ``chain_aggregate``'s reduction order, so the SGD comm round is bitwise
+    identical fused vs unfused; the residual expression is ``uplink``'s,
+    term for term. Returns ``(x_new [D], res_new [S, D])``.
+    """
+    d = x.shape[0]
+    s = agg_rows.shape[0]
+    bd = min(block_d, d)
+    pad = (-d) % bd
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        agg_rows = jnp.pad(agg_rows, ((0, 0), (0, pad)))
+        comp = jnp.pad(comp, ((0, 0), (0, pad)))
+        delta_in = jnp.pad(delta_in, ((0, 0), (0, pad)))
+        res = jnp.pad(res, ((0, 0), (0, pad)))
+    dp = x.shape[0]
+
+    x_new, res_new = pl.pallas_call(
+        _agg_apply_kernel,
+        grid=(dp // bd,),
+        in_specs=[
+            pl.BlockSpec((s,), lambda j: (0,)),  # w: whole vector
+            pl.BlockSpec((s,), lambda j: (0,)),  # m: whole vector
+            pl.BlockSpec((bd,), lambda j: (j,)),  # x tile
+            pl.BlockSpec((s, bd), lambda j: (0, j)),  # agg_rows tile
+            pl.BlockSpec((s, bd), lambda j: (0, j)),  # delta_in tile
+            pl.BlockSpec((s, bd), lambda j: (0, j)),  # comp tile
+            pl.BlockSpec((s, bd), lambda j: (0, j)),  # res tile
+        ],
+        out_specs=(
+            pl.BlockSpec((bd,), lambda j: (j,)),
+            pl.BlockSpec((s, bd), lambda j: (0, j)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((dp,), x.dtype),
+            jax.ShapeDtypeStruct((s, dp), res.dtype),
+        ),
+        interpret=interpret,
+    )(w, m, x, agg_rows, delta_in, comp, res)
+    if pad:
+        return x_new[:d], res_new[:, :d]
+    return x_new, res_new
+
+
 def _mean_kernel(t_ref, o_ref):
     o_ref[...] = jnp.mean(t_ref[...].astype(jnp.float32), axis=0).astype(o_ref.dtype)
 

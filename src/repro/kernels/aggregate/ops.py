@@ -17,6 +17,7 @@ import os
 import jax
 
 from repro.kernels.aggregate import ref
+from repro.kernels.aggregate.aggregate import aggregate_apply as _fused_kernel
 from repro.kernels.aggregate.aggregate import chain_aggregate as _kernel
 from repro.kernels.aggregate.aggregate import mean_over_clients as _mean_kernel
 
@@ -47,3 +48,23 @@ def mean_over_clients(t, *, force_pallas: bool = False):
     if force_pallas or _force_pallas_env():
         return _mean_kernel(t, interpret=True)
     return ref.mean_over_clients_ref(t)
+
+
+def use_fused_aggregate(force_pallas: bool = False) -> bool:
+    """Whether comm rounds should take the fused aggregate-apply path —
+    kernel backends only (TPU, or forced Pallas interpret mode). The jnp
+    reference backend keeps the historical unfused sequence so default CPU
+    runs stay bitwise unchanged."""
+    return _on_tpu() or force_pallas or _force_pallas_env()
+
+
+def aggregate_apply(x, agg_rows, comp, delta_in, res, m, w, *,
+                    force_pallas: bool = False):
+    """Fused aggregate + error-feedback + server apply; see
+    ``aggregate.aggregate_apply`` for the math. Returns (x_new, res_new)."""
+    if _on_tpu():
+        return _fused_kernel(x, agg_rows, comp, delta_in, res, m, w)
+    if force_pallas or _force_pallas_env():
+        return _fused_kernel(x, agg_rows, comp, delta_in, res, m, w,
+                             interpret=True)
+    return ref.aggregate_apply_ref(x, agg_rows, comp, delta_in, res, m, w)

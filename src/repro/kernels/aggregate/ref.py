@@ -27,3 +27,23 @@ def chain_aggregate_ref(x, g, c_i, c, *, lr: float, weights=None):
 def mean_over_clients_ref(t):
     """Mean over a leading client axis, any trailing shape."""
     return jnp.mean(t.astype(jnp.float32), axis=0).astype(t.dtype)
+
+
+def aggregate_apply_ref(x, agg_rows, comp, delta_in, res, m, w):
+    """Oracle for the fused aggregate-apply round kernel.
+
+        x_new   = x − Σ_i w_i·a_i          (a_i = wire rows, w step-folded)
+        res_new = m·(Δ_in − C(Δ_in)) + (1 − m)·res
+
+    Same einsum reduction order as ``chain_aggregate_ref`` and the same
+    residual expression as ``comm.config.uplink``, so fused and unfused
+    rounds agree term for term.
+    """
+    upd = jnp.einsum("sd,s->d", agg_rows.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    x_new = (x.astype(jnp.float32) - upd).astype(x.dtype)
+    mf = m.astype(jnp.float32)[:, None]
+    res_new = (mf * (delta_in.astype(jnp.float32)
+                     - comp.astype(jnp.float32))
+               + (1.0 - mf) * res.astype(jnp.float32)).astype(res.dtype)
+    return x_new, res_new

@@ -1,0 +1,130 @@
+"""Operand-layout invariants: the O(P) indexed layout is bitwise identical
+to the O(P·S) stacked reference layout, on the vmapped AND the sharded
+engine, including comm bits accounting — and actually shrinks the
+spec-operand bytes by ≥ the seed count with zero warm re-traces."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig
+from repro.core import algorithms as A, chain, runner, sweep
+from repro.data import spec as spec_lib
+
+SEEDS = (0, 1, 2)
+ETAS = (0.3, 0.5)
+
+
+def _zeta_specs(n=3, dim=12):
+    return [spec_lib.quadratic_spec(
+        jax.random.PRNGKey(11 + i), num_clients=8, dim=dim, mu=0.1, beta=1.0,
+        zeta=0.5 * i, sigma=0.2, sigma_f=0.05) for i in range(n)]
+
+
+def _assert_bitwise(ref, res, *, bits=False):
+    np.testing.assert_array_equal(np.asarray(ref.history),
+                                  np.asarray(res.history))
+    np.testing.assert_array_equal(np.asarray(ref.final_sub),
+                                  np.asarray(res.final_sub))
+    if bits:
+        np.testing.assert_array_equal(np.asarray(ref.bits_up),
+                                      np.asarray(res.bits_up))
+        np.testing.assert_array_equal(np.asarray(ref.bits_down),
+                                      np.asarray(res.bits_down))
+
+
+def _grid(algo, specs, layout, *, comm=None, mesh=None, rounds=6):
+    return sweep.run_sweep(algo, None, None, rounds, seeds=SEEDS, etas=ETAS,
+                           problems=specs, comm=comm, mesh=mesh,
+                           operand_layout=layout)
+
+
+def test_indexed_matches_stacked_bitwise_algo():
+    specs = _zeta_specs()
+    algo = A.SGD(eta=0.4, k=3, mu_avg=0.1)
+    ref = _grid(algo, specs, "stacked")
+    res = _grid(algo, specs, "indexed")
+    _assert_bitwise(ref, res)
+
+
+def test_indexed_matches_stacked_bitwise_chain():
+    specs = _zeta_specs()
+    ch = chain.fedchain(A.FedAvg.from_k(4, eta=0.4),
+                        A.SGD(eta=0.4, k=4, mu_avg=0.1), selection_k=4)
+    ref = sweep.run_sweep(ch, None, None, 6, seeds=SEEDS, etas=(0.5, 1.0),
+                          problems=specs, operand_layout="stacked")
+    res = sweep.run_sweep(ch, None, None, 6, seeds=SEEDS, etas=(0.5, 1.0),
+                          problems=specs, operand_layout="indexed")
+    _assert_bitwise(ref, res)
+
+
+@pytest.mark.parametrize("cfg", [
+    CommConfig(compressor="qsgd", qsgd_bits=4, participation=0.5),
+    CommConfig(compressor="topk", spars_k=2, error_feedback=True),
+])
+def test_indexed_matches_stacked_comm_bits(cfg):
+    """Comm sweeps: same results AND the same per-round bits accounting —
+    the per-cell mask schedules key off the cell index, which both layouts
+    must derive identically."""
+    specs = _zeta_specs()
+    algo = A.SGD(eta=0.3, k=3, mu_avg=0.1)
+    ref = _grid(algo, specs, "stacked", comm=cfg)
+    res = _grid(algo, specs, "indexed", comm=cfg)
+    _assert_bitwise(ref, res, bits=True)
+
+
+def test_indexed_matches_stacked_sharded_one_device():
+    """The shard_mapped engine under both layouts, on a 1-device ('grid',)
+    mesh, against the vmapped indexed reference — all three bitwise equal
+    (multi-device parity lives in test_dist_sweep's subprocess tests)."""
+    from repro.dist import make_grid_mesh
+
+    mesh = make_grid_mesh(1)
+    specs = _zeta_specs()
+    algo = A.SGD(eta=0.4, k=3, mu_avg=0.1)
+    ref = _grid(algo, specs, "indexed")
+    for layout in sweep._OPERAND_LAYOUTS:
+        res = _grid(algo, specs, layout, mesh=mesh)
+        _assert_bitwise(ref, res)
+
+
+def test_indexed_operand_bytes_reduction():
+    """The point of the layout: spec-operand bytes shrink by ≥ S× (the
+    stacked layout repeats every spec/x0 leaf exactly once per seed)."""
+    specs = _zeta_specs()
+    stacked, _ = sweep._as_stacked_specs(specs)
+    x0_stack = sweep._normalize_x0_stack(None, stacked, len(specs))
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in SEEDS])
+
+    def spec_bytes(layout):
+        spec_op, x0_op, _, _ = sweep.build_problem_operands(
+            stacked, x0_stack, keys, len(specs), len(SEEDS), layout)
+        return sum(l.nbytes for l in jax.tree.leaves((spec_op, x0_op)))
+
+    assert spec_bytes("stacked") >= len(SEEDS) * spec_bytes("indexed")
+
+
+def test_indexed_pidx_maps_cells_to_problems():
+    pidx = sweep.problem_index_operand(3, 4)
+    assert pidx.dtype == jnp.int32 and pidx.shape == (12,)
+    np.testing.assert_array_equal(np.asarray(pidx), np.arange(12) // 4)
+
+
+def test_indexed_zero_warm_retraces():
+    """Re-running an indexed grid must not move TRACE_COUNTS at all — the
+    gather cannot leak fresh trace keys into the executor cache."""
+    specs = _zeta_specs()
+    algo = A.SGD(eta=0.4, k=3, mu_avg=0.1)
+    _grid(algo, specs, "indexed")  # compile
+    before = dict(runner.TRACE_COUNTS)
+    out = _grid(algo, specs, "indexed")
+    jax.block_until_ready(out.history)
+    moved = {k: v - before.get(k, 0) for k, v in runner.TRACE_COUNTS.items()
+             if v != before.get(k, 0)}
+    assert moved == {}, f"warm indexed re-run re-traced: {moved}"
+
+
+def test_operand_layout_rejects_unknown():
+    specs = _zeta_specs(n=2)
+    with pytest.raises(ValueError, match="operand_layout"):
+        _grid(A.SGD(eta=0.4, k=2), specs, "repeated")

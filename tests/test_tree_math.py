@@ -69,3 +69,51 @@ def test_size_and_ravel(rng):
     a = _tree(rng)
     assert tm.tree_size(a) == 3 + 8
     assert tm.ravel(a).shape == (11,)
+
+
+# trailing (per-row) leaf shapes for the kernel-boundary layout: scalar rows
+# ([S] leaves), empty dims ([S, 0] / [S, 3, 0] leaves — zero elements but a
+# real shape the reshape must preserve), and higher-rank tensors
+_TRAILING = st.lists(
+    st.one_of(
+        st.just(()),  # scalar per row
+        st.lists(st.integers(0, 4), min_size=1, max_size=3).map(tuple),
+    ),
+    min_size=1, max_size=4)
+
+
+@given(s=st.integers(1, 5), trailing=_TRAILING, data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_ravel_rows_roundtrip(s, trailing, data):
+    """tree_unravel_rows ∘ tree_ravel_rows is the identity — bitwise, for any
+    [S, ...] pytree including scalar-row and empty-dim leaves."""
+    tree = {}
+    for i, tr in enumerate(trailing):
+        n = s * int(np.prod(tr)) if tr else s
+        vals = data.draw(st.lists(
+            st.floats(-1e6, 1e6, allow_nan=False, width=32),
+            min_size=n, max_size=n))
+        tree[f"p{i}"] = jnp.asarray(vals, jnp.float32).reshape((s,) + tr)
+    rows = tm.tree_ravel_rows(tree)
+    for leaf, orig in zip(jax.tree.leaves(rows), jax.tree.leaves(tree)):
+        assert leaf.ndim == 2 and leaf.shape[0] == s
+        assert leaf.size == orig.size
+    back = tm.tree_unravel_rows(rows, tree)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    for l1, l2 in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert l1.shape == l2.shape and l1.dtype == l2.dtype
+        assert np.array_equal(np.asarray(l1), np.asarray(l2))
+
+
+@given(s=st.integers(1, 4), d=st.integers(0, 7))
+@settings(max_examples=20, deadline=None)
+def test_ravel_rows_flat_leaf_is_noop(s, d):
+    """On a single already-2D [S, D] leaf the ravel is the identity object-
+    level reshape — the flat-vector comm paths must stay bitwise untouched."""
+    x = jnp.arange(s * d, dtype=jnp.float32).reshape(s, d)
+    tree = {"w": x}
+    rows = tm.tree_ravel_rows(tree)
+    assert rows["w"].shape == (s, d)
+    assert np.array_equal(np.asarray(rows["w"]), np.asarray(x))
+    back = tm.tree_unravel_rows(rows, tree)
+    assert np.array_equal(np.asarray(back["w"]), np.asarray(x))
