@@ -4,7 +4,13 @@ The paper's safety argument: at high heterogeneity A_local can END UP WORSE
 than the initial point; selection caps the handoff at min{F(x̂_0), F(x̂_1/2)}.
 This harness removes the selection (always hand A_local's output to A_global)
 and measures the damage across ζ. Derived: final suboptimality (median over
-seeds, all seeds in one vmapped sweep call).
+seeds, all seeds in one sweep call).
+
+Rebased onto ``selection.run_selection_sweep`` (uniform policy, full
+participation): the H.2 ablation now runs through the SAME policy-selection
+executors as the policy frontier (``benchmarks/selection_sweep.py``), and
+the ζ grid rides the problems OPERAND axis — every same-stepsize ζ shares
+one compiled executor per chain instead of re-tracing per problem closure.
 """
 from __future__ import annotations
 
@@ -12,34 +18,41 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, timed
-from repro.core import algorithms as A, chain, sweep
-from repro.data import problems
+from repro.core import algorithms as A, chain
+from repro.data import spec as spec_lib
+from repro.selection import SelectionPolicy, run_selection_sweep
 
 
 def main(quick: bool = True):
     rounds = 16 if quick else 40  # short global phase: damage must be caught
     seeds = (0, 1, 2)
+    uniform = (SelectionPolicy("uniform"),)
     rows = []
     # Selection is a SAFETY property: it matters when A_local *damages* the
     # iterate (here: client curvatures up to 2β make the local stepsize
-    # unstable on stiff clients) and the global phase is too short to recover.
-    for zeta, spread, eta_local in ((1.0, 0.0, 0.5), (5.0, 1.5, 2.5),
-                                    (20.0, 1.5, 2.5)):
-        p = problems.quadratic_problem(
+    # unstable on stiff clients) and the global phase is too short to
+    # recover. The ζ values sharing a local stepsize batch through ONE
+    # executor via the problems axis.
+    groups = ((0.5, ((1.0, 0.0),)), (2.5, ((5.0, 1.5), (20.0, 1.5))))
+    for eta_local, zeta_grid in groups:
+        specs = [spec_lib.quadratic_spec(
             jax.random.PRNGKey(0), num_clients=8, dim=16, mu=0.1, beta=1.0,
             zeta=zeta, sigma=0.2, sigma_f=0.05, curvature_spread=spread)
-        x0 = p.init_params(jax.random.PRNGKey(0))
+            for zeta, spread in zeta_grid]
         fa = A.FedAvg(eta=eta_local, local_steps=8, inner_batch=4)
-        sgd = A.SGD(eta=0.4, k=32, mu_avg=p.mu)
+        sgd = A.SGD(eta=0.4, k=32, mu_avg=0.1)
         for sel in (True, False):
             ch = chain.fedchain(fa, sgd, selection_k=32,
                                 select_between_stages=sel)
-            res, us = timed(lambda: sweep.run_sweep(
-                ch, p, x0, rounds, seeds=seeds, etas=(1.0,)))
-            med = float(np.median(np.asarray(res.final_sub)[:, 0]))
+            res, us = timed(lambda: run_selection_sweep(
+                ch, None, None, rounds, policies=uniform, problems=specs,
+                seeds=seeds, etas=(1.0,)))
             tag = "with_selection" if sel else "no_selection"
-            rows.append(emit(f"ablation_selection/{tag}/zeta={zeta}", us,
-                             f"sub={med:.3e}"))
+            final = np.asarray(res.final_sub)  # [1, P, S, 1]
+            for pi, (zeta, _) in enumerate(zeta_grid):
+                med = float(np.median(final[0, pi, :, 0]))
+                rows.append(emit(f"ablation_selection/{tag}/zeta={zeta}", us,
+                                 f"sub={med:.3e}"))
     return rows
 
 

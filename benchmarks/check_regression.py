@@ -19,6 +19,9 @@ are machine- and cache-noisy, so only warm metrics gate:
   the stacked/indexed reduction must stay ≥ the seed count
   (``memory/reduction_x``) — each failing with its metric name, never a
   bare assert
+* ``BENCH_selection.json``: ``warm.selection_s`` — the chained policy grid's
+  warm path (the harness itself raises on any warm re-trace or any re-trace
+  across a full policy switch before timing)
 
 The warm metrics are tens of milliseconds, where a noisy-neighbor scheduler
 blip alone can exceed the threshold — so each harness runs ``--samples``
@@ -51,6 +54,7 @@ SWEEP_JSON = os.path.join(ROOT, "BENCH_sweep.json")
 PROBLEM_JSON = os.path.join(ROOT, "BENCH_problem_sweep.json")
 DIST_JSON = os.path.join(ROOT, "BENCH_dist.json")
 MEMORY_JSON = os.path.join(ROOT, "BENCH_memory.json")
+SELECTION_JSON = os.path.join(ROOT, "BENCH_selection.json")
 
 
 def _load(path):
@@ -98,6 +102,13 @@ def _memory_byte_failures(base_doc, fresh_doc):
             f"S={n_seeds} (indexed layout must shrink spec-operand bytes "
             f"by at least the seed count)")
     return failures
+
+
+def _warm_metrics_selection(doc):
+    """The chained policy-selection grid's warm time. The selection harness
+    asserts the retrace discipline in-process (0 warm re-traces, 0 re-traces
+    across a full policy switch), so only the timing gates here."""
+    return {"selection/warm_s": doc["warm"]["selection_s"]}
 
 
 def _warm_metrics_problem(doc):
@@ -174,7 +185,7 @@ def main(argv=None) -> None:
                     "device count)")
     args = ap.parse_args(argv)
 
-    baselines = [SWEEP_JSON, PROBLEM_JSON, MEMORY_JSON] + (
+    baselines = [SWEEP_JSON, PROBLEM_JSON, MEMORY_JSON, SELECTION_JSON] + (
         [DIST_JSON] if args.dist else [])
     missing = [p for p in baselines if not os.path.exists(p)]
     if missing:
@@ -183,15 +194,18 @@ def main(argv=None) -> None:
     sweep_raw, sweep_base = _load(SWEEP_JSON)
     prob_raw, prob_base = _load(PROBLEM_JSON)
     mem_raw, mem_base = _load(MEMORY_JSON)
+    sel_raw, sel_base = _load(SELECTION_JSON)
     base = {**_warm_metrics_sweep(sweep_base),
             **_warm_metrics_problem(prob_base),
-            **_warm_metrics_memory(mem_base)}
+            **_warm_metrics_memory(mem_base),
+            **_warm_metrics_selection(sel_base)}
     dist_raw = None
     if args.dist:
         dist_raw, dist_base = _load(DIST_JSON)
         base.update(_warm_metrics_dist(dist_base))
 
-    from benchmarks import memory_bench, problem_sweep, sweep_bench
+    from benchmarks import (
+        memory_bench, problem_sweep, selection_sweep, sweep_bench)
 
     fresh: dict = {}
     mem_fresh: dict = {}
@@ -204,12 +218,15 @@ def main(argv=None) -> None:
             sweep_bench.main(quick=True)
             problem_sweep.main(quick=True)  # raises on any grid re-trace
             memory_bench.main(quick=True)  # asserts bitwise + 0 re-traces
+            selection_sweep.main(quick=True)  # raises on any policy retrace
             _, sweep_fresh = _load(SWEEP_JSON)
             _, prob_fresh = _load(PROBLEM_JSON)
             _, mem_fresh = _load(MEMORY_JSON)
+            _, sel_fresh = _load(SELECTION_JSON)
             sample = {**_warm_metrics_sweep(sweep_fresh),
                       **_warm_metrics_problem(prob_fresh),
-                      **_warm_metrics_memory(mem_fresh)}
+                      **_warm_metrics_memory(mem_fresh),
+                      **_warm_metrics_selection(sel_fresh)}
             if args.dist:
                 from benchmarks import dist_scaling
 
@@ -226,6 +243,8 @@ def main(argv=None) -> None:
                 f.write(prob_raw)
             with open(MEMORY_JSON, "w") as f:
                 f.write(mem_raw)
+            with open(SELECTION_JSON, "w") as f:
+                f.write(sel_raw)
             if dist_raw is not None:
                 with open(DIST_JSON, "w") as f:
                     f.write(dist_raw)

@@ -47,8 +47,9 @@ def main(argv=None) -> None:
     from benchmarks import (
         ablation_selection, appj1_large_k, comm_frontier, dist_scaling,
         fig2_convergence, kernels_bench, lower_bound_bench, memory_bench,
-        problem_sweep, roofline, sweep_bench, table1_strongly_convex,
-        table2_general_convex, table3_nonconvex, table3_vision, table4_pl,
+        problem_sweep, roofline, selection_sweep, sweep_bench,
+        table1_strongly_convex, table2_general_convex, table3_nonconvex,
+        table3_vision, table4_pl,
     )
 
     harnesses = {
@@ -61,6 +62,7 @@ def main(argv=None) -> None:
         "lower_bound": lower_bound_bench.main,  # Thm 5.4 / App G
         "appj1": appj1_large_k.main,  # App J.1 (large K)
         "ablation_selection": ablation_selection.main,  # Lemma H.2 on/off
+        "selection": selection_sweep.main,  # policy bits-to-target frontiers
         "comm_frontier": comm_frontier.main,  # suboptimality-vs-bits frontier
         "dist_scaling": dist_scaling.main,  # sharded sweep, 1/2/4/8 devices
         "memory": memory_bench.main,  # indexed vs stacked operand layouts

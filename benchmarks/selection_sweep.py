@@ -1,0 +1,228 @@
+"""Selection-policy benchmark: bits-to-target frontiers per policy.
+
+Runs the policies × problems × seeds grid through the policy-selection
+executors — the four policies (uniform / power_of_choice / ucb / shapley)
+as ONE switch-index operand per grid — for both the headline chained
+FedAvg→SGD and a plain SGD leg, and reports:
+
+* suboptimality-vs-cumulative-bits frontiers per policy: the bits spent
+  until the run first reaches per-problem targets derived from the uniform
+  baseline's trajectory (the UCB-vs-uniform ratio on the chained grid is
+  the headline figure),
+* warm wall time of the whole chained grid (gated by
+  ``benchmarks/check_regression.py`` at the standard 2.5× threshold),
+* zero warm re-traces AND zero re-traces across a full policy SWITCH
+  (every policy permuted, every hyperparameter changed — raises if
+  ``runner.TRACE_COUNTS`` moves at all: the subsystem's core guarantee).
+
+Writes ``BENCH_selection.json`` at the repo root. ``--check`` adds the
+backend-robust CI miniature: vmapped vs sharded (1-device mesh) bitwise
+parity on top of the retrace assertions, no absolute-time gates.
+
+  PYTHONPATH=src python -m benchmarks.selection_sweep [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import algorithms as A, chain, runner
+from repro.data import spec as spec_lib
+from repro.selection import SelectionPolicy, run_selection_sweep
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+SEEDS = (0, 1, 2)
+PARTICIPATION = 0.5
+#: per-problem (zeta, curvature_spread): moderate and high heterogeneity —
+#: adaptive selection has something to learn when clients differ
+PROBLEM_GRID = ((1.0, 0.0), (5.0, 1.5))
+
+
+def _policies():
+    return (
+        SelectionPolicy("uniform", participation=PARTICIPATION),
+        SelectionPolicy("power_of_choice", participation=PARTICIPATION),
+        SelectionPolicy("ucb", participation=PARTICIPATION, ucb_c=0.5),
+        SelectionPolicy("shapley", participation=PARTICIPATION, ema=0.3),
+    )
+
+
+def _policies_switched():
+    """Same grid SHAPE, every operand different: permuted policy order,
+    changed participation/hyperparameters/seeds — must not re-trace."""
+    return (
+        SelectionPolicy("shapley", participation=0.25, ema=0.9, sel_seed=5),
+        SelectionPolicy("ucb", participation=0.75, ucb_c=2.0, sel_seed=5),
+        SelectionPolicy("uniform", participation=0.25, sel_seed=5),
+        SelectionPolicy("power_of_choice", participation=0.75, sel_seed=5),
+    )
+
+
+def _specs(quick: bool):
+    dim = 16 if quick else 32
+    return [spec_lib.quadratic_spec(
+        jax.random.PRNGKey(11 + i), num_clients=8, dim=dim, mu=0.1,
+        beta=1.0, zeta=zeta, sigma=0.2, sigma_f=0.05,
+        curvature_spread=spread)
+        for i, (zeta, spread) in enumerate(PROBLEM_GRID)]
+
+
+def _walled(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out.history)
+    return out, time.perf_counter() - t0
+
+
+def _frontier(res, uniform_q: int):
+    """Per-problem bits-to-target table: targets are the uniform policy's
+    median-over-seeds suboptimality at mid-run and at the end (so the
+    baseline reaches both by construction); bits are medians over seeds,
+    None where a policy never reaches the target."""
+    hist = np.asarray(res.history, np.float64)  # [Q, P, S, E, R]
+    n_rounds = hist.shape[-1]
+    out = {}
+    for pi, name in enumerate(res.problems):
+        med_u = np.median(hist[uniform_q, pi, :, 0, :], axis=0)
+        targets = [float(med_u[n_rounds // 2]), float(med_u[-1])]
+        rows = {}
+        for qi, pol in enumerate(res.policies):
+            bits = []
+            for t in targets:
+                b = res.bits_to_target(t)[qi, pi, :, 0]
+                med = float(np.median(b))
+                bits.append(None if not np.isfinite(med) else med)
+            rows[pol] = bits
+        out[f"{name}/zeta={PROBLEM_GRID[pi][0]:g}"] = {
+            "targets": targets, "bits": rows}
+    return out
+
+
+def _assert_no_switch_retrace(run_fn):
+    """Re-running with every policy operand changed must keep TRACE_COUNTS
+    frozen — the switch-index/no-retrace guarantee."""
+    before = dict(runner.TRACE_COUNTS)
+    _walled(run_fn)
+    moved = {k: v - before.get(k, 0) for k, v in runner.TRACE_COUNTS.items()
+             if v != before.get(k, 0)}
+    if moved:
+        raise AssertionError(
+            f"policy switch re-traced executors (policy choice must be "
+            f"operand data): {moved}")
+
+
+def main(quick: bool = True, check: bool = False):
+    rounds = 24 if quick else 64
+    specs = _specs(quick)
+    policies = _policies()
+    uniform_q = 0  # _policies() leads with the uniform baseline
+
+    ch = chain.fedchain(
+        A.FedAvg(eta=0.3, local_steps=4, inner_batch=4),
+        A.SGD(eta=0.3, k=8, mu_avg=0.1),
+        selection_k=16, select_between_stages=True)
+    algo = A.SGD(eta=0.3, k=8, mu_avg=0.1)
+
+    def chain_grid(pols):
+        return run_selection_sweep(ch, None, None, rounds, policies=pols,
+                                   problems=specs, seeds=SEEDS, etas=(1.0,))
+
+    def algo_grid(pols):
+        return run_selection_sweep(algo, None, None, rounds, policies=pols,
+                                   problems=specs, seeds=SEEDS, etas=(1.0,))
+
+    runner.clear_executor_cache()
+    _walled(lambda: chain_grid(policies))  # compile
+    res_chain, warm_chain = _walled(lambda: chain_grid(policies))
+    _walled(lambda: algo_grid(policies))  # compile
+    res_algo, warm_algo = _walled(lambda: algo_grid(policies))
+
+    # warm re-trace discipline, then the policy-switch guarantee (same
+    # shapes, all-new policy operands) — both raise on any trace movement
+    before = dict(runner.TRACE_COUNTS)
+    _walled(lambda: chain_grid(policies))
+    moved = {k: v - before.get(k, 0) for k, v in runner.TRACE_COUNTS.items()
+             if v != before.get(k, 0)}
+    if moved:
+        raise AssertionError(f"warm selection re-run re-traced: {moved}")
+    _assert_no_switch_retrace(lambda: chain_grid(_policies_switched()))
+    _assert_no_switch_retrace(lambda: algo_grid(_policies_switched()))
+
+    frontier_chain = _frontier(res_chain, uniform_q)
+    frontier_algo = _frontier(res_algo, uniform_q)
+
+    # headline: chained FedAvg→SGD, bits to the uniform baseline's MID-RUN
+    # suboptimality (the target every policy has a fair shot at) — UCB
+    # relative to uniform, per problem (None: UCB never got there; < 1:
+    # smart selection reached the target on fewer bits)
+    uniform_name = res_chain.policies[uniform_q]
+    ucb_name = policies[2].name
+    headline = {}
+    for prob_key, table in frontier_chain.items():
+        u_bits = table["bits"][uniform_name][0]
+        ucb_bits = table["bits"][ucb_name][0]
+        headline[prob_key] = (None if (u_bits is None or ucb_bits is None)
+                              else ucb_bits / u_bits)
+
+    report = {
+        "grid": {
+            "policies": [q.name for q in policies],
+            "problems": [f"zeta={z:g}/spread={c:g}" for z, c in PROBLEM_GRID],
+            "seeds": list(SEEDS), "rounds": rounds,
+            "participation": PARTICIPATION,
+            "dim": int(specs[0].dim), "num_clients": int(specs[0].num_clients),
+        },
+        "warm": {"selection_s": warm_chain, "selection_algo_s": warm_algo},
+        "frontier": {"chain_fedavg_sgd": frontier_chain, "sgd": frontier_algo},
+        "headline": {"ucb_vs_uniform_bits_ratio": headline},
+        "policy_switch_retraces": 0,
+        "warm_retraces": 0,
+    }
+    with open(os.path.join(ROOT, "BENCH_selection.json"), "w") as f:
+        json.dump(report, f, indent=2)
+
+    rows = [
+        emit("selection/warm/chain_grid", warm_chain * 1e6,
+             f"cells={len(policies) * len(specs) * len(SEEDS)}"),
+        emit("selection/headline/ucb_vs_uniform", 0.0,
+             ";".join(f"{k.split('/')[-1]}="
+                      f"{'unreached' if v is None else round(v, 3)}"
+                      for k, v in headline.items())),
+    ]
+
+    if check:
+        # backend-robust CI miniature: the sharded engine must agree
+        # bitwise with the vmapped results above, cell for cell
+        from repro.dist import make_grid_mesh
+
+        mesh = make_grid_mesh(1)
+        shd = run_selection_sweep(ch, None, None, rounds, policies=policies,
+                                  problems=specs, seeds=SEEDS, etas=(1.0,),
+                                  mesh=mesh)
+        for field in ("history", "final_sub", "bits_up", "bits_down",
+                      "masks"):
+            a = np.asarray(getattr(res_chain, field))
+            b = np.asarray(getattr(shd, field))
+            if not np.array_equal(a, b):
+                raise AssertionError(
+                    f"sharded selection sweep diverged bitwise from the "
+                    f"vmapped engine on {field}")
+        print("selection-bench check OK: 0 re-traces across policy switch, "
+              "sharded == vmapped bitwise (incl. bits ledgers)")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale rounds")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the backend-robust invariants (CI leg)")
+    args = ap.parse_args()
+    main(quick=not args.full, check=args.check)

@@ -496,6 +496,111 @@ class Chain:
             key, jax.jit(self.executor_body(problem, rounds, comm),
                          donate_argnums=donate))
 
+    def selection_executor_body(self, problem, rounds: int):
+        """The policy-selection chain executor (comm-enabled).
+
+        Returns ``fn(spec, x0, states0, key, eta_scale, sel_keys, pparams,
+        pstate0, comm0) -> (x_hat, history, kept_flags, bits_up, bits_down,
+        masks, pstate)``.  Like the ``comm=True`` executor but per-round
+        participation comes from ``selection.policies.round_select`` instead
+        of a precomputed [R, N] mask schedule: the policy (a
+        ``PolicyParams`` switch-index operand) sees the ACTIVE stage's
+        post-handoff iterate each scheduled round and its ``PolicyState``
+        rides the scan carry.  The policy advances on Lemma H.2 selection
+        rounds too (one ``sel_keys`` row per scheduled round, so the key
+        stream stays aligned with the schedule); probing policies bill
+        their value probe every round on top of the stage/selection bits.
+        """
+        key = ("chain-sel-body", self._key(),
+               runner_lib.problem_key(problem), rounds)
+        fn = runner_lib._cache_get(key)
+        if fn is not None:
+            return fn
+
+        _, resolve = runner_lib._bind(problem)
+
+        sched = self._schedule(rounds)
+        stages = tuple(self.stages)
+        n_stages = len(stages)
+        ops = self._round_ops(problem)
+        sel_s = (self.selection_s if self.selection_s > 0
+                 else problem.num_clients)
+        stage_id = jnp.asarray(sched.stage_id)
+        kind = jnp.asarray(sched.kind)
+        hmode = jnp.asarray(sched.hmode)
+
+        def _stage_x(j, states):
+            # the active stage's current iterate (what the round broadcasts),
+            # NOT its averaged output
+            return jax.lax.switch(
+                j, [lambda s, i=i: s[i].x for i in range(n_stages)], states)
+
+        def executor(spec, x0, states0, key, eta_scale, sel_keys, pparams,
+                     pstate0, comm0):
+            from repro.comm import config as comm_cfg
+            from repro.core.algorithms import base as algo_base
+            from repro.selection import policies as pol
+
+            p = resolve(spec)
+            for st in states0:
+                algo_base.audit_state(st)
+            runner_lib.TRACE_COUNTS[f"chain-sel/{self.name}"] += 1
+            f_star = runner_lib.f_star_operand(p)
+            keys_r, keys_s = self._derive_keys(sched, key)
+            sel_up, sel_down = comm_cfg.selection_round_bits(x0, sel_s)
+            extra_up = pol.probe_bits(pparams, p.num_clients)
+
+            def body(carry, xs):
+                states, anchor, comm_st, pstate = carry
+                k_round, k_sel, sid, knd, hmd, scale, k_pol = xs
+                comm_st = comm_cfg.zero_round_bits(comm_st)
+                comm_st = comm_st._replace(residual=jax.tree.map(
+                    lambda r: jnp.where(hmd > 0, 0.0, r),
+                    comm_st.residual))
+                states, anchor, h_kept = ops.handoff(
+                    p, states, anchor, sid, hmd, k_sel)
+                mask, pstate = pol.round_select(
+                    p, _stage_x(sid, states), pstate, pparams, k_pol)
+
+                def sel_round(args):
+                    states, anchor, comm_st = args
+                    cand = ops.output(sid, states)
+                    best, kept = ops.select2(p, anchor, cand, k_sel)
+                    sub = p.global_loss(best) - f_star
+                    return states, best, comm_st, sub, kept
+
+                def alg_round(args):
+                    states, anchor, comm_st = args
+                    states, comm_st = ops.round_comm(
+                        p, sid, states, comm_st, k_round, scale, mask)
+                    sub = p.global_loss(ops.output(sid, states)) - f_star
+                    return states, anchor, comm_st, sub, jnp.asarray(False)
+
+                states, anchor, comm_st, sub, s_kept = jax.lax.cond(
+                    knd == 1, sel_round, alg_round,
+                    (states, anchor, comm_st))
+
+                did_sel = (knd == 1) | (hmd == _H_SELECT)
+                comm_st = comm_st._replace(
+                    bits_up=comm_st.bits_up
+                    + jnp.where(did_sel, sel_up, 0.0) + extra_up,
+                    bits_down=comm_st.bits_down
+                    + jnp.where(did_sel, sel_down, 0.0))
+                return ((states, anchor, comm_st, pstate),
+                        (sub, h_kept | s_kept,
+                         comm_st.bits_up, comm_st.bits_down, mask))
+
+            ((states, _, _, pstate),
+             (history, kept_flags, bits_up, bits_down, masks)) = jax.lax.scan(
+                 body, (states0, x0, comm0, pstate0),
+                 (keys_r, keys_s, stage_id, kind, hmode, eta_scale,
+                  sel_keys))
+            x_hat = stages[-1].output(states[-1])
+            return (x_hat, history, kept_flags, bits_up, bits_down, masks,
+                    pstate)
+
+        return runner_lib._cache_put(key, executor)
+
     def fraction_executor_body(self, problem, rounds: int):
         """The schedule-as-OPERAND chain executor (local-fraction sweeps).
 

@@ -302,6 +302,62 @@ def comm_executor(algo, problem, eval_output: bool = True):
         donate_argnums=donate))
 
 
+def selection_executor_body(algo, problem, eval_output: bool = True):
+    """The policy-selection single-compile executor.
+
+    Returns ``fn(spec, state0, keys, eta_scale, sel_keys, pparams, pstate0)
+    -> ((state, pstate), (history, bits_up, bits_down, masks))``.  Instead
+    of a precomputed [R, N] mask schedule, each round's participation mask
+    is produced in-scan by ``selection.policies.round_select`` from the
+    policy operand ``pparams`` (a ``PolicyParams`` of jnp scalars — the
+    policy choice is a ``lax.switch`` index, so swapping policies or their
+    hyperparameters never re-traces) and the policy state ``pstate0``
+    (``PolicyState`` pytree leaves carried through the scan).  The mask
+    feeds the comm ledger unchanged; probing policies additionally bill
+    their value-probe uplink via ``policies.probe_bits``.
+    """
+    key = ("sel-body", algo, problem_key(problem), eval_output)
+    fn = _cache_get(key)
+    if fn is not None:
+        return fn
+
+    _, resolve = _bind(problem)
+
+    def executor(spec, state0, keys, eta_scale, sel_keys, pparams, pstate0):
+        from repro.comm import config as comm_cfg
+        from repro.core.algorithms import base as algo_base
+        from repro.selection import policies as pol
+
+        p = resolve(spec)
+        algo_base.audit_state(state0)
+        comm_cfg.comm_state_or_error(state0, algo.name)
+        TRACE_COUNTS[f"runner-sel/{algo.name}"] += 1
+        f_star = f_star_operand(p)
+        base_eta = state0.eta
+        extra_up = pol.probe_bits(pparams, p.num_clients)
+
+        def one_round(carry, xs):
+            state, pstate = carry
+            k, scale, k_sel = xs
+            mask, pstate = pol.round_select(p, state.x, pstate, pparams,
+                                            k_sel)
+            comm_in = comm_cfg.zero_round_bits(
+                state.comm._replace(mask=mask))
+            st = algo.round(
+                p, state._replace(eta=base_eta * scale, comm=comm_in), k)
+            comm = comm_cfg.comm_state_or_error(st, algo.name)
+            comm = comm._replace(bits_up=comm.bits_up + extra_up)
+            st = st._replace(eta=base_eta, comm=comm)
+            x_eval = algo.output(st) if eval_output else st.x
+            sub = p.global_loss(x_eval) - f_star
+            return (st, pstate), (sub, comm.bits_up, comm.bits_down, mask)
+
+        return jax.lax.scan(one_round, (state0, pstate0),
+                            (keys, eta_scale, sel_keys))
+
+    return _cache_put(key, executor)
+
+
 def method_executor_body(methods, problem, eval_output: bool = True):
     """The multi-method stacked executor (one compile for several methods).
 

@@ -19,7 +19,13 @@ from repro.core.algorithms import base
 
 
 def empirical_values(problem, candidates, key, *, s: int, k: int):
-    """Empirical (1/SK)ΣΣ f(x; ẑ) for every candidate on shared samples."""
+    """Empirical (1/SK)ΣΣ f(x; ẑ) for every candidate on shared samples.
+
+    The candidates axis is vmapped over their stacked pytree leaves (one
+    oracle batch instead of per-candidate trace growth); every per-sample
+    op is batch-invariant, so the values are bitwise identical to
+    evaluating each candidate in its own pass.
+    """
     k_sample, k_vals = jax.random.split(key)
     cids = base.sample_clients(k_sample, problem.num_clients, s)
     keys = jax.random.split(k_vals, s * k).reshape(s, k, -1)
@@ -31,7 +37,8 @@ def empirical_values(problem, candidates, key, *, s: int, k: int):
 
         return jnp.mean(jax.vmap(per_client)(cids, keys))
 
-    return jnp.stack([value_of(x) for x in candidates])
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *candidates)
+    return jax.vmap(value_of)(stacked)
 
 
 def select_better(problem, candidates, key, *, s: int, k: int):

@@ -268,6 +268,59 @@ def make_chain_fraction_cell(chain, problem, rounds: int, tag: str):
     return cell
 
 
+def make_selection_algo_cell(algo, problem, rounds: int, eval_output: bool,
+                             eta_mode: str, tag: str):
+    """Policy-selection cell:
+    ``cell(spec, x0, pparams, pstate0, key, eta, sel_keys, comm0)``.
+
+    The policy (``PolicyParams``) and its initial state (``PolicyState``)
+    are leading operands so the policy-index adapter
+    (``make_policy_cell``) can gather them per cell exactly like the
+    problem stacks."""
+    body = runner_lib.selection_executor_body(algo, problem, eval_output)
+    _, resolve = runner_lib._bind(problem)
+    eta_scale = jnp.ones((rounds,), jnp.float32)
+
+    def cell(spec, x0, pparams, pstate0, key, eta, sel_keys, comm0):
+        p = resolve(spec)
+        runner_lib.TRACE_COUNTS[f"{tag}/{algo.name}"] += 1
+        state0 = algo.init(p, x0)
+        new_eta = (state0.eta * eta if eta_mode == "scale"
+                   else jnp.asarray(eta, jnp.result_type(state0.eta)))
+        state0 = state0._replace(eta=new_eta, comm=comm0)
+        keys = jax.random.split(key, rounds)
+        (state, pstate), (history, bits_up, bits_down, masks) = body(
+            spec, state0, keys, eta_scale, sel_keys, pparams, pstate0)
+        x_hat = algo.output(state)
+        sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
+        return x_hat, history, sub, bits_up, bits_down, masks, pstate
+
+    return cell
+
+
+def make_selection_chain_cell(chain, problem, rounds: int, tag: str):
+    """Policy-selection chain cell:
+    ``cell(spec, x0, pparams, pstate0, key, mult, eta_sched, sel_keys,
+    comm0)``."""
+    body = chain.selection_executor_body(problem, rounds)
+    _, resolve = runner_lib._bind(problem)
+    sel_idx = jnp.asarray(chain._schedule(rounds).sel_indices, jnp.int32)
+
+    def cell(spec, x0, pparams, pstate0, key, mult, eta_sched, sel_keys,
+             comm0):
+        p = resolve(spec)
+        runner_lib.TRACE_COUNTS[f"{tag}/{chain.name}"] += 1
+        states0 = chain.init_states(p, x0, eta_scale=mult)
+        x_hat, history, kept, bits_up, bits_down, masks, pstate = body(
+            spec, x0, states0, key, eta_sched, sel_keys, pparams, pstate0,
+            comm0)
+        sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
+        return (x_hat, history, sub, kept[sel_idx], bits_up, bits_down,
+                masks, pstate)
+
+    return cell
+
+
 _OPERAND_LAYOUTS = ("indexed", "stacked")
 
 
@@ -325,6 +378,75 @@ def build_problem_operands(stacked, x0_stack, keys, n_probs: int,
             lambda l: jnp.repeat(l, n_seeds, axis=0), x0_stack)
         return spec_op, x0_op, None, keys_c
     return stacked, x0_stack, problem_index_operand(n_probs, n_seeds), keys_c
+
+
+def make_policy_cell(cell):
+    """O(Q)+O(P) operand adapter around a ``make_selection_*_cell`` cell:
+    the cell's leading ``(spec, x0, pparams, pstate0, …)`` operands become
+    ``(spec_stack, x0_stack, pol_stack, pst_stack, pidx, qidx, …)`` with
+    in-cell gathers — the policies × problems × seeds grid carries ONE
+    stacked spec, ONE stacked ``PolicyParams``/``PolicyState`` and two
+    int32 per-cell indices (the selection-sweep analogue of
+    ``make_indexed_cell``). Both engines batch over this same adapter, so
+    sharding stays bitwise."""
+    def policy_cell(spec_stack, x0_stack, pol_stack, pst_stack, pidx, qidx,
+                    *rest):
+        spec = jax.tree.map(lambda l: l[pidx], spec_stack)
+        x0 = jax.tree.map(lambda l: l[pidx], x0_stack)
+        pparams = jax.tree.map(lambda l: l[qidx], pol_stack)
+        pstate0 = jax.tree.map(lambda l: l[qidx], pst_stack)
+        return cell(spec, x0, pparams, pstate0, *rest)
+
+    return policy_cell
+
+
+def policy_index_operands(n_pols: int, n_probs: int, n_seeds: int):
+    """Per-cell (qidx, pidx) of the flattened policies × problems × seeds
+    cells axis ``c = (q·P + p)·S + s``: ``qidx[c] = c // (P·S)``,
+    ``pidx[c] = (c // S) % P``."""
+    c = jnp.arange(n_pols * n_probs * n_seeds, dtype=jnp.int32)
+    return c // (n_probs * n_seeds), (c // n_seeds) % n_probs
+
+
+def _sweep_fn_selection_algo(algo, problem, rounds: int, eval_output: bool,
+                             eta_mode: str):
+    # donate everything but the problem stacks: the policy stacks, index
+    # vectors, keys and comm state are all built fresh per call
+    donate = (2, 3, 4, 5, 6, 7, 8, 9)
+    key = ("sweep-sel-algo", algo, runner_lib.problem_key(problem), rounds,
+           eval_output, eta_mode, donate)
+    fn = runner_lib._cache_get(key)
+    if fn is not None:
+        return fn
+
+    cell = make_selection_algo_cell(algo, problem, rounds, eval_output,
+                                    eta_mode, "sweep-sel")
+    pcell = make_policy_cell(cell)
+    # (spec, x0, pol, pst, pidx, qidx, key, eta, sel_keys, comm0):
+    # inner vmap is the dense η axis, outer the flattened cells axis
+    inner = jax.vmap(pcell, in_axes=(None, None, None, None, None, None,
+                                     None, 0, None, None))
+    grid = jax.vmap(inner, in_axes=(None, None, None, None, 0, 0, 0, None,
+                                    0, None))
+    return runner_lib._cache_put(key, jax.jit(grid, donate_argnums=donate))
+
+
+def _sweep_fn_selection_chain(chain, problem, rounds: int):
+    donate = (2, 3, 4, 5, 6, 7, 8, 9, 10)
+    key = ("sweep-sel-chain", chain._key(), runner_lib.problem_key(problem),
+           rounds, donate)
+    fn = runner_lib._cache_get(key)
+    if fn is not None:
+        return fn
+
+    cell = make_selection_chain_cell(chain, problem, rounds, "sweep-sel")
+    pcell = make_policy_cell(cell)
+    # (spec, x0, pol, pst, pidx, qidx, key, mult, eta_sched, sel_keys, comm0)
+    inner = jax.vmap(pcell, in_axes=(None, None, None, None, None, None,
+                                     None, 0, None, None, None))
+    grid = jax.vmap(inner, in_axes=(None, None, None, None, 0, 0, 0, None,
+                                    None, 0, None))
+    return runner_lib._cache_put(key, jax.jit(grid, donate_argnums=donate))
 
 
 def _sweep_fn_algo(algo, problem, rounds: int, eval_output: bool,

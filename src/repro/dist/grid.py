@@ -320,6 +320,86 @@ def run_sweep_sharded(algo_or_chain, problem, x0, rounds: int, *,
                                  problems=prob_names)
 
 
+def run_selection_sweep_sharded(algo_or_chain, problem, x0, rounds: int, *,
+                                policies, seeds: Sequence[int], mesh,
+                                etas: Sequence[float] = (1.0,),
+                                eta_mode: Optional[str] = None, comm=None,
+                                problems=None, eval_output: bool = True):
+    """``selection.sweep.run_selection_sweep`` with the flattened policies ×
+    problems × seeds cells sharded over the ``grid`` mesh axis.
+
+    Both engines consume the SAME host-derived operands
+    (``selection.sweep.selection_grid_operands``): here the per-cell index
+    vectors (qidx/pidx), raw key rows, and [R, 2] selection-key rows are
+    gathered onto their shard while the O(Q) policy stacks and the O(P)
+    spec/x0 stacks ride replicated — so per-cell results, masks and the
+    bits ledgers are BITWISE identical to the vmapped call.
+    """
+    from repro.selection import sweep as sel_sweep
+
+    ops = sel_sweep.selection_grid_operands(
+        algo_or_chain, problem, x0, rounds, policies=policies, seeds=seeds,
+        etas=etas, eta_mode=eta_mode, comm=comm, problems=problems,
+        eval_output=eval_output)
+
+    n_cells = ops.n_pols * ops.n_probs * ops.n_seeds
+    lead_shape = (ops.n_pols, ops.n_probs, ops.n_seeds)
+    src_idx, _ = partition.pad_cells(n_cells, mesh_lib.grid_size(mesh))
+    idx = jnp.asarray(src_idx)
+    pidx_c = ops.pidx[idx]
+    qidx_c = ops.qidx[idx]
+    keys_c = ops.keys_c[idx]
+    sel_keys_c = ops.sel_keys_c[idx]
+    pkey = runner_lib.problem_key(ops.stacked)
+    lead = (ops.stacked, ops.x0_stack, ops.pol_stack, ops.pst_stack)
+
+    if ops.is_chain:
+        chain = algo_or_chain
+        cell = sweep_lib.make_policy_cell(
+            sweep_lib.make_selection_chain_cell(chain, ops.stacked, rounds,
+                                                "dist-sel"))
+        fn = _sharded_grid_fn(
+            ("dist-sel-chain", chain._key(), pkey, rounds),
+            mesh, cell,
+            cell_in_axes=(None, None, None, None, None, None, None, 0,
+                          None, None, None),
+            replicated_args=(True, True, True, True, False, False, False,
+                             True, True, False, True),
+            donate_argnums=tuple(range(2, 11)))
+        outs = fn(*lead, pidx_c, qidx_c, keys_c, ops.etas_arr,
+                  ops.eta_sched, sel_keys_c, ops.comm0)
+        (x_hat, history, final, kept, bits_up, bits_down, masks,
+         pstate) = _unpad_cells(outs, n_cells, lead_shape)
+        return sel_sweep.SelectionSweepResult(
+            history=history, final_sub=final, x_hat=x_hat, bits_up=bits_up,
+            bits_down=bits_down, masks=masks, policy_state=pstate,
+            policies=ops.pol_names, problems=ops.prob_names,
+            seeds=ops.seeds, etas=ops.etas, selected_initial=kept)
+
+    algo = algo_or_chain
+    cell = sweep_lib.make_policy_cell(
+        sweep_lib.make_selection_algo_cell(algo, ops.stacked, rounds,
+                                           eval_output, ops.eta_mode,
+                                           "dist-sel"))
+    fn = _sharded_grid_fn(
+        ("dist-sel-algo", algo, pkey, rounds, eval_output, ops.eta_mode),
+        mesh, cell,
+        cell_in_axes=(None, None, None, None, None, None, None, 0, None,
+                      None),
+        replicated_args=(True, True, True, True, False, False, False, True,
+                         False, True),
+        donate_argnums=tuple(range(2, 10)))
+    outs = fn(*lead, pidx_c, qidx_c, keys_c, ops.etas_arr, sel_keys_c,
+              ops.comm0)
+    x_hat, history, final, bits_up, bits_down, masks, pstate = _unpad_cells(
+        outs, n_cells, lead_shape)
+    return sel_sweep.SelectionSweepResult(
+        history=history, final_sub=final, x_hat=x_hat, bits_up=bits_up,
+        bits_down=bits_down, masks=masks, policy_state=pstate,
+        policies=ops.pol_names, problems=ops.prob_names, seeds=ops.seeds,
+        etas=ops.etas)
+
+
 def run_fraction_sweep_sharded(chain, problem, x0, rounds: int, *,
                                seeds: Sequence[int],
                                fractions: Sequence[float], mesh,

@@ -1,0 +1,53 @@
+"""Client-selection policy subsystem: participation as a POLICY operand.
+
+The paper samples clients uniformly; this package makes per-round
+participation the output of a stateful selection policy while preserving
+every executor guarantee the repo is built on. The protocol has three
+parts, mirroring the comm subsystem's compressor design:
+
+**Switch index.** A policy is described host-side by
+``SelectionPolicy`` (name, participation fraction, hyperparameters, seed)
+and enters the executor as ``PolicyParams`` — jnp scalars only, with the
+policy choice an int32 ``policy_id`` dispatched by ``jax.lax.switch``
+inside the scanned round body (``policies.round_select``). Changing the
+policy or any hyperparameter changes operand DATA, never the trace: all
+four policies (uniform / power_of_choice / ucb / shapley) run through ONE
+compiled executor per (algorithm, problem-structure, rounds).
+
+**State leaves.** Policy memory (``PolicyState``: selection counts, UCB
+value estimates, Shapley contribution tables, last probe/mask, round
+counter — all float32, client-count-shaped) rides the executor scan carry
+as ordinary pytree leaves beside the algorithm state, and comes back per
+cell in sweep results for inspection.
+
+**Key-stream discipline.** Selection randomness is a stream SEPARATE from
+the algorithm's round keys: per-round raw keys derived host-side as
+``split(fold_in(PRNGKey(sel_seed), fold), R)`` with the per-cell fold
+``p·S + s`` — the exact derivation of ``CommConfig.round_masks``, which is
+what makes the uniform policy bitwise-reproduce the precomputed
+mask-schedule path at equal seeds. Probing policies fold a domain tag into
+each round key for their value-oracle subkeys, so probe and mask draws
+never collide.
+
+The per-round mask feeds the comm bits ledger unchanged (the closed forms
+in ``repro.comm.config`` apply to whatever set the policy picked); probing
+policies additionally bill one float32 uplink per client per round
+(``policies.probe_bits``). ``sweep.run_selection_sweep`` runs policies ×
+problems × seeds × stepsizes grids on the vmapped AND sharded engines,
+bitwise identical cell-for-cell.
+"""
+from repro.selection.policies import (SelectionPolicy, probe_bits,
+                                      probe_values, round_select, top_s_mask)
+from repro.selection.state import (POLICY_IDS, PROBING_POLICIES,
+                                   PolicyParams, PolicyState, init_state,
+                                   make_params)
+from repro.selection.sweep import (SelectionSweepResult,
+                                   run_selection_sweep,
+                                   selection_grid_operands)
+
+__all__ = [
+    "POLICY_IDS", "PROBING_POLICIES", "PolicyParams", "PolicyState",
+    "SelectionPolicy", "SelectionSweepResult", "init_state", "make_params",
+    "probe_bits", "probe_values", "round_select", "run_selection_sweep",
+    "selection_grid_operands", "top_s_mask",
+]

@@ -1,0 +1,81 @@
+"""Policy operands and state leaves for the client-selection subsystem.
+
+``PolicyParams`` is the executor OPERAND: every field is a jnp scalar so a
+whole policies × problems × seeds grid reuses one compiled executor — the
+policy choice is an int32 switch index (``policy_id``) dispatched by
+``jax.lax.switch`` inside the scanned round body, exactly like the comm
+``Compressor``'s ``comp_id``. Changing the policy or any hyperparameter
+changes DATA, never the trace.
+
+``PolicyState`` is the per-run policy memory, carried through the executor
+scan as ordinary pytree leaves next to the algorithm state.  All leaves are
+float32 and sized by the client count only, so every policy shares one
+structure (uniform simply leaves the probe/value tables untouched):
+
+* ``counts``     [N] — how many rounds each client has been selected
+* ``values``     [N] — UCB running mean of observed per-client rewards
+                       (loss reduction over the round the client served in)
+* ``contrib``    [N] — EMA of GTG-style marginal-contribution estimates
+                       (greedy-Shapley score table)
+* ``last_probe`` [N] — the previous round's probed per-client loss values
+* ``last_mask``  [N] — the previous round's participation mask
+* ``t``          []  — rounds elapsed
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+# lax.switch branch order — must match the branch list in
+# ``policies.round_select``
+POLICY_IDS = {
+    "uniform": 0,
+    "power_of_choice": 1,
+    "ucb": 2,
+    "shapley": 3,
+}
+
+#: policies that broadcast a value probe to all N clients each round (and
+#: are billed for the returned scalars — see ``policies.probe_bits``)
+PROBING_POLICIES = ("power_of_choice", "ucb", "shapley")
+
+
+class PolicyParams(NamedTuple):
+    """Traced policy hyperparameters — scan-invariant executor operands."""
+
+    policy_id: jnp.ndarray  # int32 switch index into POLICY_IDS
+    s_sel: jnp.ndarray      # int32 clients selected per round
+    ucb_c: jnp.ndarray      # float32 UCB exploration coefficient
+    ema: jnp.ndarray        # float32 EMA rate for Shapley contributions
+
+
+def make_params(policy: str, s_sel: int, ucb_c: float = 1.0,
+                ema: float = 0.5) -> PolicyParams:
+    if policy not in POLICY_IDS:
+        raise ValueError(
+            f"unknown selection policy {policy!r}; "
+            f"known: {sorted(POLICY_IDS)}")
+    return PolicyParams(
+        policy_id=jnp.asarray(POLICY_IDS[policy], jnp.int32),
+        s_sel=jnp.asarray(s_sel, jnp.int32),
+        ucb_c=jnp.asarray(ucb_c, jnp.float32),
+        ema=jnp.asarray(ema, jnp.float32),
+    )
+
+
+class PolicyState(NamedTuple):
+    """Per-run policy memory, scanned as pytree leaves (all float32)."""
+
+    counts: jnp.ndarray      # [N]
+    values: jnp.ndarray      # [N]
+    contrib: jnp.ndarray     # [N]
+    last_probe: jnp.ndarray  # [N]
+    last_mask: jnp.ndarray   # [N]
+    t: jnp.ndarray           # []
+
+
+def init_state(num_clients: int) -> PolicyState:
+    z = jnp.zeros((num_clients,), jnp.float32)
+    return PolicyState(counts=z, values=z, contrib=z, last_probe=z,
+                       last_mask=z, t=jnp.zeros((), jnp.float32))

@@ -1,0 +1,261 @@
+"""Client-selection policy subsystem (``repro.selection``) contracts.
+
+The policy protocol's load-bearing guarantees:
+
+(a) the UNIFORM policy is bitwise identical — history, bits_up, bits_down —
+    to the pre-existing mask-schedule path (``CommConfig.participation`` +
+    ``mask_seed``): the uniform branch consumes the raw per-round selection
+    key exactly the way ``CommConfig.round_masks`` does, so rebasing a
+    harness onto the policy executors can never move a published number;
+(b) policy choice is OPERAND DATA: swapping every policy and every
+    hyperparameter at a fixed grid shape re-traces nothing
+    (``runner.TRACE_COUNTS``-asserted) — one ``lax.switch`` executor serves
+    all four policies;
+(c) every policy emits valid masks (0/1 entries, exactly S per round) and a
+    consistent ``PolicyState`` round-trip (counts == column sums of the
+    mask history, t == rounds, last_mask == final mask);
+(d) bits ledgers follow the closed forms: S·32·D uplink/downlink per round
+    for identity compression, plus one f32 probe per client (32·N uplink)
+    for probing policies and exactly zero probe bits for uniform;
+(e) the sharded engine (1-device debug mesh) agrees bitwise with the
+    vmapped engine, including the bits ledgers and every PolicyState leaf;
+(f) ``core.selection.empirical_values`` (now vmapped over the stacked
+    candidates) is bitwise identical to the per-candidate loop it replaced.
+
+Hypothesis property tests ride behind per-function ``importorskip`` so the
+deterministic tier stays runnable without hypothesis installed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig
+from repro.core import algorithms as A, chain, runner, selection, sweep
+from repro.data import spec as spec_lib
+from repro.selection import (
+    POLICY_IDS, PROBING_POLICIES, SelectionPolicy, probe_bits,
+    run_selection_sweep, top_s_mask,
+)
+from repro.selection.state import make_params
+
+N, DIM, ROUNDS = 8, 12, 10
+SEEDS = (0, 1)
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return spec_lib.quadratic_spec(
+        jax.random.PRNGKey(7), num_clients=N, dim=DIM, mu=0.1, beta=1.0,
+        zeta=2.0, sigma=0.2, sigma_f=0.05, curvature_spread=0.5)
+
+
+def _algo():
+    return A.SGD(eta=0.4, k=8, mu_avg=0.1)
+
+
+def _chain():
+    return chain.fedchain(
+        A.FedAvg(eta=0.3, local_steps=3, inner_batch=4),
+        A.SGD(eta=0.4, k=8, mu_avg=0.1),
+        selection_k=8, select_between_stages=True)
+
+
+def _all_policies(participation=0.5):
+    return tuple(SelectionPolicy(p, participation=participation,
+                                 ucb_c=0.5, ema=0.3)
+                 for p in sorted(POLICY_IDS, key=POLICY_IDS.get))
+
+
+# ---------------- (a) uniform == mask-schedule path, bitwise ----------------
+
+def test_uniform_bitwise_matches_mask_schedule(spec):
+    algo = _algo()
+    pol = SelectionPolicy("uniform", participation=0.5, sel_seed=3)
+    res = run_selection_sweep(algo, None, None, ROUNDS, policies=(pol,),
+                              problems=[spec], seeds=SEEDS, etas=(1.0,))
+    ref = sweep.run_sweep(algo, spec, spec.x0, ROUNDS, seeds=SEEDS,
+                          etas=(1.0,),
+                          comm=CommConfig(participation=0.5, mask_seed=3))
+    # selection axes are [Q, P, S, E, ...]; the reference has [S, E, ...]
+    for sel_v, ref_v in ((res.history[0, 0], ref.history),
+                         (res.bits_up[0, 0], ref.bits_up),
+                         (res.bits_down[0, 0], ref.bits_down)):
+        np.testing.assert_array_equal(np.asarray(sel_v), np.asarray(ref_v))
+
+
+# ---------------- (b) policy switch is data, not a re-trace -----------------
+
+def test_policy_switch_retraces_nothing(spec):
+    ch = _chain()
+
+    def grid(pols):
+        out = run_selection_sweep(ch, None, None, ROUNDS, policies=pols,
+                                  problems=[spec], seeds=SEEDS, etas=(1.0,))
+        jax.block_until_ready(out.history)
+        return out
+
+    grid(_all_policies(0.5))
+    before = dict(runner.TRACE_COUNTS)
+    # every operand changed: policy order permuted, participation +
+    # hyperparameters + selection seed all different, same grid SHAPE
+    switched = (
+        SelectionPolicy("shapley", participation=0.25, ema=0.9, sel_seed=9),
+        SelectionPolicy("ucb", participation=0.75, ucb_c=2.0, sel_seed=9),
+        SelectionPolicy("power_of_choice", participation=0.25, sel_seed=9),
+        SelectionPolicy("uniform", participation=0.75, sel_seed=9),
+    )
+    grid(switched)
+    moved = {k: v - before.get(k, 0) for k, v in runner.TRACE_COUNTS.items()
+             if v != before.get(k, 0)}
+    assert not moved, f"policy switch must be pure operand data: {moved}"
+
+
+# ---------------- (c) mask validity + state round-trip ----------------------
+
+@pytest.mark.parametrize("method", ["algo", "chain"])
+def test_masks_valid_and_state_consistent(spec, method):
+    m = _algo() if method == "algo" else _chain()
+    pols = _all_policies(0.5)
+    res = run_selection_sweep(m, None, None, ROUNDS, policies=pols,
+                              problems=[spec], seeds=SEEDS, etas=(1.0,))
+    masks = np.asarray(res.masks)  # [Q, P, S, E, R, N]
+    n_sched = masks.shape[-2]  # chains add Lemma H.2 selection rounds
+    s_sel = pols[0].clients_per_round(N)
+    assert set(np.unique(masks)) <= {0.0, 1.0}
+    np.testing.assert_array_equal(masks.sum(axis=-1),
+                                  np.full(masks.shape[:-1], s_sel))
+    st = res.policy_state
+    np.testing.assert_array_equal(np.asarray(st.t),
+                                  np.full(np.asarray(st.t).shape, n_sched))
+    np.testing.assert_array_equal(np.asarray(st.counts),
+                                  masks.sum(axis=-2))
+    np.testing.assert_array_equal(np.asarray(st.last_mask),
+                                  masks[..., -1, :])
+
+
+# ---------------- (d) bits closed forms -------------------------------------
+
+def test_bits_closed_forms(spec):
+    pols = _all_policies(0.5)
+    res = run_selection_sweep(_algo(), None, None, ROUNDS, policies=pols,
+                              problems=[spec], seeds=SEEDS, etas=(1.0,))
+    bits_up = np.asarray(res.bits_up)  # [Q, P, S, E, R]
+    bits_down = np.asarray(res.bits_down)
+    s_sel = pols[0].clients_per_round(N)
+    base = float(s_sel * 32 * DIM)  # identity compression, S transmitters
+    for qi, pol in enumerate(pols):
+        probe = float(32 * N) if pol.probing else 0.0
+        assert pol.probing == (pol.policy in PROBING_POLICIES)
+        np.testing.assert_array_equal(
+            bits_up[qi], np.full(bits_up[qi].shape, base + probe))
+        np.testing.assert_array_equal(
+            bits_down[qi], np.full(bits_down[qi].shape, base))
+    # probe_bits itself: uniform bills zero, probing policies one f32/client
+    assert float(probe_bits(make_params("uniform", s_sel), N)) == 0.0
+    assert float(probe_bits(make_params("ucb", s_sel), N)) == 32.0 * N
+
+
+# ---------------- (e) sharded engine bitwise parity -------------------------
+
+def test_sharded_matches_vmapped_bitwise(spec):
+    from repro.dist import make_grid_mesh
+
+    pols = _all_policies(0.5)
+    kw = dict(policies=pols, problems=[spec], seeds=SEEDS, etas=(1.0,))
+    ch = _chain()
+    ref = run_selection_sweep(ch, None, None, ROUNDS, **kw)
+    shd = run_selection_sweep(ch, None, None, ROUNDS, mesh=make_grid_mesh(1),
+                              **kw)
+    for field in ("history", "final_sub", "bits_up", "bits_down", "masks"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref, field)),
+                                      np.asarray(getattr(shd, field)),
+                                      err_msg=field)
+    for leaf_a, leaf_b in zip(jax.tree.leaves(ref.policy_state),
+                              jax.tree.leaves(shd.policy_state)):
+        np.testing.assert_array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+
+
+# ---------------- (f) empirical_values vectorization is bitwise -------------
+
+def test_empirical_values_vmap_matches_loop(spec):
+    key = jax.random.PRNGKey(21)
+    k1, k2 = jax.random.split(key)
+    candidates = [spec.x0, jax.tree.map(
+        lambda t: t + 0.1 * jax.random.normal(k1, t.shape), spec.x0)]
+
+    def loop_reference(problem, cands, k, *, s, k_samples):
+        k_sample, k_vals = jax.random.split(k)
+        from repro.core.algorithms import base
+        cids = base.sample_clients(k_sample, problem.num_clients, s)
+        keys = jax.random.split(k_vals, s * k_samples).reshape(
+            s, k_samples, -1)
+
+        def value_of(x):
+            def per_client(cid, ks):
+                vs = jax.vmap(
+                    lambda kk: problem.value_oracle(x, cid, kk))(ks)
+                return jnp.mean(vs)
+
+            return jnp.mean(jax.vmap(per_client)(cids, keys))
+
+        return jnp.stack([value_of(x) for x in cands])
+
+    got = selection.empirical_values(spec, candidates, k2, s=4, k=3)
+    want = loop_reference(spec, candidates, k2, s=4, k_samples=3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------- hypothesis properties -------------------------------------
+
+def test_prop_top_s_mask_valid():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=40)
+    @given(seed=st.integers(0, 2**30), n=st.integers(2, 24),
+           data=st.data())
+    def prop(seed, n, data):
+        s = data.draw(st.integers(1, n))
+        score = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+        mask = np.asarray(top_s_mask(score, s))
+        assert set(np.unique(mask)) <= {0.0, 1.0}
+        assert mask.sum() == s
+        # the S selected entries are exactly the S largest scores
+        kept = np.sort(np.asarray(score)[mask > 0])
+        assert np.array_equal(kept, np.sort(np.asarray(score))[n - s:])
+
+    prop()
+
+
+def test_prop_probe_bits_closed_form():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=40)
+    @given(n=st.integers(1, 64),
+           policy=st.sampled_from(sorted(POLICY_IDS)))
+    def prop(n, policy):
+        expect = 0.0 if policy == "uniform" else 32.0 * n
+        assert float(probe_bits(make_params(policy, 1), n)) == expect
+
+    prop()
+
+
+def test_prop_params_round_trip():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=40)
+    @given(policy=st.sampled_from(sorted(POLICY_IDS)),
+           s=st.integers(1, 32),
+           c=st.floats(0.0, 8.0, allow_nan=False),
+           ema=st.floats(0.01, 1.0, allow_nan=False))
+    def prop(policy, s, c, ema):
+        p = make_params(policy, s, ucb_c=c, ema=ema)
+        assert int(p.policy_id) == POLICY_IDS[policy]
+        assert int(p.s_sel) == s
+        assert float(p.ucb_c) == pytest.approx(c, rel=1e-6)
+        assert float(p.ema) == pytest.approx(ema, rel=1e-6)
+
+    prop()
