@@ -1,0 +1,61 @@
+"""Trace-discipline analyzer harness: the AST lint (R1–R6) plus the jaxpr
+const-capture audit over every cached executor family, landed in
+``BENCH_analysis.json`` at the repo root.
+
+The JSON is the machine-readable artifact the bench-regression gate
+consumes (``check_regression._analysis_const_failures``): per-family const
+bytes must stay under the per-executor ceiling, the per-rule suppression
+inventory is visible debt, and the unsuppressed-violation count must be
+zero. The harness RAISES on any unsuppressed lint violation or audit
+failure — an analyzer red is a correctness bug, not a slow benchmark.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import emit
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+OUT = os.path.join(ROOT, "BENCH_analysis.json")
+
+
+def main(quick: bool = True):
+    from repro.analysis import jaxpr_audit
+    from repro.analysis import report as report_lib
+    from repro.analysis.cli import DEFAULT_LINT_PATHS, detect_root
+    from repro.analysis.lint import run_lint
+
+    rows = []
+    root = detect_root()
+
+    t0 = time.perf_counter()
+    violations, inventory = run_lint(root, DEFAULT_LINT_PATHS)
+    lint_us = (time.perf_counter() - t0) * 1e6
+    active, suppressed = report_lib.split_violations(violations)
+    if active:
+        raise AssertionError(
+            "unsuppressed lint violations:\n"
+            + "\n".join(v.format() for v in active))
+
+    t0 = time.perf_counter()
+    audit_report, audit_failures = jaxpr_audit.run_audit()
+    audit_us = (time.perf_counter() - t0) * 1e6
+    if audit_failures:
+        raise AssertionError(
+            "jaxpr const audit failed:\n" + "\n".join(audit_failures))
+
+    doc = report_lib.build_report(violations, inventory, audit_report)
+    report_lib.write_json(doc, OUT)
+
+    rows.append(emit("analysis/lint", lint_us,
+                     f"active=0;suppressed={len(suppressed)}"))
+    rows.append(emit(
+        "analysis/audit", audit_us,
+        f"families={len(audit_report['families'])};"
+        f"const_bytes={audit_report['total_const_bytes']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

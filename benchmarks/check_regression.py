@@ -22,6 +22,10 @@ are machine- and cache-noisy, so only warm metrics gate:
 * ``BENCH_selection.json``: ``warm.selection_s`` — the chained policy grid's
   warm path (the harness itself raises on any warm re-trace or any re-trace
   across a full policy switch before timing)
+* ``BENCH_analysis.json``: named const-byte gates, not timings — every
+  executor family in the committed jaxpr audit must still trace with const
+  bytes under the per-family ceiling, and the tree must lint clean (the
+  analyzer harness raises on any unsuppressed violation)
 
 The warm metrics are tens of milliseconds, where a noisy-neighbor scheduler
 blip alone can exceed the threshold — so each harness runs ``--samples``
@@ -55,6 +59,7 @@ PROBLEM_JSON = os.path.join(ROOT, "BENCH_problem_sweep.json")
 DIST_JSON = os.path.join(ROOT, "BENCH_dist.json")
 MEMORY_JSON = os.path.join(ROOT, "BENCH_memory.json")
 SELECTION_JSON = os.path.join(ROOT, "BENCH_selection.json")
+ANALYSIS_JSON = os.path.join(ROOT, "BENCH_analysis.json")
 
 
 def _load(path):
@@ -101,6 +106,31 @@ def _memory_byte_failures(base_doc, fresh_doc):
             f"memory/reduction_x: {fresh_b['reduction_x']:.2f}x < "
             f"S={n_seeds} (indexed layout must shrink spec-operand bytes "
             f"by at least the seed count)")
+    return failures
+
+
+def _analysis_const_failures(base_doc, fresh_doc):
+    """Named gates on BENCH_analysis.json. Const bytes are deterministic
+    (jaxpr structure, not timings), so there is no slack: every executor
+    family present in the committed baseline must still trace, stay under
+    the per-family byte ceiling, and the tree must lint clean."""
+    failures = []
+    ceiling = fresh_doc["audit"]["const_ceiling_bytes"]
+    fresh_fams = fresh_doc["audit"]["families"]
+    for fam in sorted(base_doc["audit"]["families"]):
+        if fam not in fresh_fams:
+            failures.append(
+                f"analysis/{fam}: executor family missing from fresh audit")
+            continue
+        bytes_ = fresh_fams[fam]["const_bytes"]
+        if bytes_ > ceiling:
+            failures.append(
+                f"analysis/{fam}: {bytes_} jaxpr const bytes > per-family "
+                f"ceiling {ceiling}")
+    if fresh_doc["lint"]["violations"]:
+        failures.append(
+            f"analysis/lint: unsuppressed violations "
+            f"{fresh_doc['lint']['violations']}")
     return failures
 
 
@@ -157,15 +187,8 @@ def _assert_zero_warm_retrace():
     run = lambda: sweep.run_sweep(  # noqa: E731
         algo, p, p.x0, 10, seeds=(0, 1), etas=(0.5, 1.0), eta_mode="scale")
     run()  # compile (or reuse problem_sweep's compile)
-    before = dict(runner.TRACE_COUNTS)
-    run()
-    after = dict(runner.TRACE_COUNTS)
-    if after != before:
-        moved = {k: after[k] - before.get(k, 0) for k in after
-                 if after[k] != before.get(k, 0)}
-        raise AssertionError(
-            f"warm re-run re-traced executors (re-trace count must stay "
-            f"exactly 0): {moved}")
+    with runner.assert_no_retrace(what="the post-bench warm sweep"):
+        run()
 
 
 def main(argv=None) -> None:
@@ -185,8 +208,8 @@ def main(argv=None) -> None:
                     "device count)")
     args = ap.parse_args(argv)
 
-    baselines = [SWEEP_JSON, PROBLEM_JSON, MEMORY_JSON, SELECTION_JSON] + (
-        [DIST_JSON] if args.dist else [])
+    baselines = [SWEEP_JSON, PROBLEM_JSON, MEMORY_JSON, SELECTION_JSON,
+                 ANALYSIS_JSON] + ([DIST_JSON] if args.dist else [])
     missing = [p for p in baselines if not os.path.exists(p)]
     if missing:
         print(f"no committed baseline(s): {missing}", file=sys.stderr)
@@ -195,6 +218,7 @@ def main(argv=None) -> None:
     prob_raw, prob_base = _load(PROBLEM_JSON)
     mem_raw, mem_base = _load(MEMORY_JSON)
     sel_raw, sel_base = _load(SELECTION_JSON)
+    analysis_raw, analysis_base = _load(ANALYSIS_JSON)
     base = {**_warm_metrics_sweep(sweep_base),
             **_warm_metrics_problem(prob_base),
             **_warm_metrics_memory(mem_base),
@@ -235,6 +259,13 @@ def main(argv=None) -> None:
                 sample.update(_warm_metrics_dist(dist_fresh))
             fresh = {k: min(v, fresh.get(k, v)) for k, v in sample.items()}
         _assert_zero_warm_retrace()
+        # the analyzer runs AFTER the timing samples: its jaxpr audit clears
+        # and re-traces the executor cache, which would otherwise feed the
+        # next sample's cold-trace accounting
+        from benchmarks import analysis_audit
+
+        analysis_audit.main(quick=True)  # raises on lint/audit failure
+        _, analysis_fresh = _load(ANALYSIS_JSON)
     finally:
         if not args.keep_new:
             with open(SWEEP_JSON, "w") as f:
@@ -245,11 +276,14 @@ def main(argv=None) -> None:
                 f.write(mem_raw)
             with open(SELECTION_JSON, "w") as f:
                 f.write(sel_raw)
+            with open(ANALYSIS_JSON, "w") as f:
+                f.write(analysis_raw)
             if dist_raw is not None:
                 with open(DIST_JSON, "w") as f:
                     f.write(dist_raw)
     failures, rows = _compare(base, fresh, args.threshold)
     failures += _memory_byte_failures(mem_base, mem_fresh)
+    failures += _analysis_const_failures(analysis_base, analysis_fresh)
     print("\n".join(rows))
     if failures:
         print("\nbench-gate FAILED:", file=sys.stderr)

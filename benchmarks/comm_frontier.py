@@ -130,7 +130,7 @@ def main(quick: bool = True):
         "methods": {},
     }
     for name, algo in frontier_methods.items():
-        before = dict(runner.TRACE_COUNTS)
+        before = runner.snapshot_traces()
         res, us = timed(lambda a=algo: sweep.run_sweep(
             a, None, x0, rounds, seeds=seeds, etas=(1.0,), eta_mode="scale",
             comm=cfg, problems=specs))

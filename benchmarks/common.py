@@ -51,11 +51,12 @@ def walled(fn):
 
 
 def trace_deltas(before: dict) -> dict:
-    """TRACE_COUNTS movement since the ``before`` snapshot (only nonzero)."""
+    """TRACE_COUNTS movement since the ``before`` snapshot (only nonzero).
+    Thin alias for ``runner.trace_deltas`` — kept so harnesses keep one
+    import surface for timing + trace accounting."""
     from repro.core import runner
 
-    return {k: v - before.get(k, 0) for k, v in runner.TRACE_COUNTS.items()
-            if v != before.get(k, 0)}
+    return runner.trace_deltas(before)
 
 
 def assert_single_compile(deltas: dict, keys, what: str = "grid") -> None:

@@ -81,24 +81,21 @@ def _worker(devices: int, quick: bool) -> None:
         _timed(lambda: block(sweep.run_sweep(algo, None, None, rounds, **kw)))
         for _ in range(cfg["reps"]))
 
-    before = dict(runner.TRACE_COUNTS)
+    before = runner.snapshot_traces()
     t0 = time.perf_counter()
     res = block(sweep.run_sweep(algo, None, None, rounds, mesh=mesh, **kw))
     cold_s = time.perf_counter() - t0
-    deltas = {k: v - before.get(k, 0) for k, v in runner.TRACE_COUNTS.items()
-              if v != before.get(k, 0)}
+    deltas = runner.trace_deltas(before)
     if deltas.get("dist-probs/sgd") != 1:
         raise AssertionError(f"sharded executor traced != once: {deltas}")
     if not np.array_equal(np.asarray(ref.history), np.asarray(res.history)):
         raise AssertionError("sharded sweep diverged from vmapped engine")
 
-    before = dict(runner.TRACE_COUNTS)
-    warm_s = min(
-        _timed(lambda: block(
-            sweep.run_sweep(algo, None, None, rounds, mesh=mesh, **kw)))
-        for _ in range(cfg["reps"]))
-    if dict(runner.TRACE_COUNTS) != before:
-        raise AssertionError("warm sharded re-run re-traced")
+    with runner.assert_no_retrace(what="warm sharded re-runs"):
+        warm_s = min(
+            _timed(lambda: block(
+                sweep.run_sweep(algo, None, None, rounds, mesh=mesh, **kw)))
+            for _ in range(cfg["reps"]))
 
     n_cells = cfg["n_problems"] * cfg["n_seeds"]
     lanes = n_cells * len(cfg["etas"])

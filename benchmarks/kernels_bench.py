@@ -23,10 +23,11 @@ def main(quick: bool = True):
 
     # aggregate
     s, d = 8, 1 << 16
-    x = jax.random.normal(key, (d,))
-    g = jax.random.normal(key, (s, d))
-    ci = jax.random.normal(key, (s, d))
-    c = jax.random.normal(key, (d,))
+    k_x, k_g, k_ci, k_c = jax.random.split(key, 4)
+    x = jax.random.normal(k_x, (d,))
+    g = jax.random.normal(k_g, (s, d))
+    ci = jax.random.normal(k_ci, (s, d))
+    c = jax.random.normal(k_c, (d,))
     w = jnp.full((s,), 1.0 / s)
     ref, us_ref = timed(lambda: chain_aggregate_ref(x, g, ci, c, lr=0.1, weights=w))
     out, us_k = timed(lambda: chain_aggregate(x, g, ci, c, w, lr=0.1, interpret=True))
@@ -56,9 +57,10 @@ def main(quick: bool = True):
 
     # flash attention
     b, s2, h, kv, hd = 1, 512, 4, 2, 64
-    q = jax.random.normal(key, (b, s2, h, hd), jnp.float32)
-    k2 = jax.random.normal(key, (b, s2, kv, hd), jnp.float32)
-    v2 = jax.random.normal(key, (b, s2, kv, hd), jnp.float32)
+    k_q, k_k, k_v = jax.random.split(key, 3)
+    q = jax.random.normal(k_q, (b, s2, h, hd), jnp.float32)
+    k2 = jax.random.normal(k_k, (b, s2, kv, hd), jnp.float32)
+    v2 = jax.random.normal(k_v, (b, s2, kv, hd), jnp.float32)
     ref2, us_ref2 = timed(lambda: attention_ref(q, k2, v2, causal=True))
     out2, us_k2 = timed(lambda: flash_attention(q, k2, v2, causal=True,
                                                 interpret=True))

@@ -108,13 +108,8 @@ def main(quick: bool = True, check: bool = False):
 
     # warm re-trace discipline: repeating the indexed grid must not move
     # TRACE_COUNTS by a single trace
-    before = dict(runner.TRACE_COUNTS)
-    _walled(lambda: grid("indexed"))
-    moved = {k: v - before.get(k, 0) for k, v in runner.TRACE_COUNTS.items()
-             if v != before.get(k, 0)}
-    if moved:
-        raise AssertionError(
-            f"warm indexed-layout re-run re-traced executors: {moved}")
+    with runner.assert_no_retrace(what="the warm indexed-layout re-run"):
+        _walled(lambda: grid("indexed"))
 
     report = {
         "grid": {"problems": n_probs, "seeds": list(SEEDS),

@@ -71,7 +71,7 @@ def main(quick: bool = True):
 
     for name, algo in (("sgd", sgd), ("fedavg->sgd", ch)):
         eta_mode = None if isinstance(algo, chain.Chain) else "scale"
-        before = dict(runner.TRACE_COUNTS)
+        before = runner.snapshot_traces()
 
         def grid_call():
             return sweep.run_sweep(
@@ -94,12 +94,10 @@ def main(quick: bool = True):
                     for p in specs]
 
         loop_res, _ = walled(lambda: loop_call()[-1])  # warm the loop path
-        before_loop = dict(runner.TRACE_COUNTS)
-        loop_res, us_loop = walled(lambda: loop_call()[-1])
-        if dict(runner.TRACE_COUNTS) != before_loop:
-            raise AssertionError(
-                "warm per-problem loop re-traced: specs as operands must "
-                "share one compile across instances")
+        with runner.assert_no_retrace(
+                what="the warm per-problem loop (specs as operands must "
+                     "share one compile across instances)"):
+            loop_res, us_loop = walled(lambda: loop_call()[-1])
 
         # grid vs loop equivalence on the final grid cell
         last = sweep.run_sweep(algo, specs[-1], x0, rounds, seeds=seeds,
@@ -139,7 +137,7 @@ def main(quick: bool = True):
     # multi-method stacking: SGD at several mu_avg, one compiled call
     methods = [A.SGD(eta=0.5, k=k, mu_avg=m, name="sgd") for m in
                (0.0, 0.5 * mu, mu)]
-    before = dict(runner.TRACE_COUNTS)
+    before = runner.snapshot_traces()
     res_m, us_m_cold = walled(lambda: sweep.run_method_sweep(
         methods, specs[0], x0, rounds, seeds=seeds))
     res_m, us_m_warm = walled(lambda: sweep.run_method_sweep(
@@ -161,7 +159,7 @@ def main(quick: bool = True):
     from repro.comm import CommConfig
 
     cfg = CommConfig(compressor="qsgd", qsgd_bits=4, participation=0.5)
-    before = dict(runner.TRACE_COUNTS)
+    before = runner.snapshot_traces()
 
     def comm_grid_call():
         return sweep.run_sweep(sgd, None, x0, rounds, seeds=seeds, etas=etas,

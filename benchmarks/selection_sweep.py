@@ -108,14 +108,8 @@ def _frontier(res, uniform_q: int):
 def _assert_no_switch_retrace(run_fn):
     """Re-running with every policy operand changed must keep TRACE_COUNTS
     frozen — the switch-index/no-retrace guarantee."""
-    before = dict(runner.TRACE_COUNTS)
-    _walled(run_fn)
-    moved = {k: v - before.get(k, 0) for k, v in runner.TRACE_COUNTS.items()
-             if v != before.get(k, 0)}
-    if moved:
-        raise AssertionError(
-            f"policy switch re-traced executors (policy choice must be "
-            f"operand data): {moved}")
+    with runner.assert_no_retrace(what="the policy switch (operand data)"):
+        _walled(run_fn)
 
 
 def main(quick: bool = True, check: bool = False):
@@ -146,12 +140,8 @@ def main(quick: bool = True, check: bool = False):
 
     # warm re-trace discipline, then the policy-switch guarantee (same
     # shapes, all-new policy operands) — both raise on any trace movement
-    before = dict(runner.TRACE_COUNTS)
-    _walled(lambda: chain_grid(policies))
-    moved = {k: v - before.get(k, 0) for k, v in runner.TRACE_COUNTS.items()
-             if v != before.get(k, 0)}
-    if moved:
-        raise AssertionError(f"warm selection re-run re-traced: {moved}")
+    with runner.assert_no_retrace(what="the warm selection re-run"):
+        _walled(lambda: chain_grid(policies))
     _assert_no_switch_retrace(lambda: chain_grid(_policies_switched()))
     _assert_no_switch_retrace(lambda: algo_grid(_policies_switched()))
 

@@ -97,7 +97,7 @@ def main(quick: bool = True):
     }
     for name, (algo, grid_etas, mode) in methods.items():
         is_chain = isinstance(algo, chain.Chain)
-        before = dict(runner.TRACE_COUNTS)
+        before = runner.snapshot_traces()
 
         def grid_call(a=algo, ge=grid_etas, m=mode):
             return sweep.run_sweep(
@@ -129,7 +129,7 @@ def main(quick: bool = True):
     # the comm mask schedule, so the algorithm's own s must be 0)
     cfg = CommConfig(compressor="qsgd", qsgd_bits=4, participation=0.6)
     comm_sgd = A.SGD(eta=0.5, k=20, output_mode="last", name="sgd")
-    before = dict(runner.TRACE_COUNTS)
+    before = runner.snapshot_traces()
 
     def comm_call():
         return sweep.run_sweep(comm_sgd, None, None, rounds, seeds=seeds,
@@ -171,7 +171,7 @@ def main(quick: bool = True):
         A.SGD(eta=0.5, k=20, output_mode="last"),
         selection_k=20, selection_s=s, name="fedavg->sgd-frac")
     mid_spec = specs[len(specs) // 2]
-    before = dict(runner.TRACE_COUNTS)
+    before = runner.snapshot_traces()
 
     def frac_call():
         return sweep.run_fraction_sweep(

@@ -1,0 +1,103 @@
+"""Trace-discipline analyzer: AST lint + jaxpr const-capture audit.
+
+Every performance number in this reproduction rests on invariants the
+compiler cannot check: executors compile ONCE per structure, problems /
+comm configs / policies ride as operands (never closures), donated buffers
+are de-aliased, and both engines derive identical key streams. This package
+makes those invariants machine-checkable:
+
+* **Layer 1 — AST lint** (``repro.analysis.lint``): rules R1–R6 below,
+  run over ``src/repro`` and ``benchmarks``.
+* **Layer 2 — jaxpr audit** (``repro.analysis.jaxpr_audit``): runs tiny
+  workloads through every cached executor family (runner / chain / sweep /
+  selection on both the vmapped and sharded engines), re-traces each
+  executor on its real operands, and walks the ``ClosedJaxpr`` consts —
+  the DYNAMIC proof that operand discipline actually held. Any family
+  carrying more than ``CONST_BYTE_CEILING`` bytes of array constants fails.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.analysis --all   [--json BENCH_analysis.json]
+    PYTHONPATH=src python -m repro.analysis --lint  [paths ...]
+    PYTHONPATH=src python -m repro.analysis --audit
+
+Exit status 0 iff there are zero unsuppressed lint violations and the
+audit's const ceilings hold.
+
+The rules
+=========
+
+**R1 — no closure-captured or host-materialized arrays in traced code.**
+A module-level ``jnp``/``np`` array referenced inside a traced body — or a
+``np.array(...)`` materialized there — bakes into the jaxpr as a constant:
+it pins host memory for the cache entry's lifetime and silently decouples
+the executor from the operand it was supposed to consume (the exact bug
+class PR 3 removed by making problems ``ProblemSpec`` operands). Arrays
+enter traced code as ARGUMENTS; legacy closure problems ride the registered
+weak-token path in ``runner.problem_key``.
+
+**R2 — no Python side effects in traced bodies except TRACE_COUNTS.**
+A traced body executes once per TRACE, not once per call: a ``print``, a
+``list.append`` on a module global, or a dict write runs zero times on the
+warm path. The single whitelisted side effect is the
+``runner.TRACE_COUNTS[...] += 1`` bump — it is the repo's trace PROBE and
+exploits exactly this semantics.
+
+**R3 — tagged fold_in streams; no key consumed twice.** Both engines must
+derive bitwise-identical randomness from the same round key, so every
+constant-stream derivation uses a REGISTERED tag
+(``REGISTERED_KEY_TAGS`` below) rather than a bare literal — two call sites
+independently choosing ``fold_in(key, 1)`` collide silently. Data-dependent
+folds (round indices, cell indices) are fine. A key fed to two SAMPLERS
+without an intervening ``split``/``fold_in`` replays randomness.
+
+**R4 — donation threads through the executor cache key.** Donation is part
+of an executor's identity: two structurally-equal jits that differ only in
+``donate_argnums`` must never be served interchangeably from the cache
+(PR 6). So every ``donate_argnums=`` is a NAMED tuple that also appears in
+the cache key, and caller-owned leaves route through
+``runner.dealias_donated`` before the call. Donation sites outside the
+cached-executor machinery need an explicit ``allow[R4]``.
+
+**R5 — every kernel ships ref.py + ops.py.** A Pallas kernel without a jnp
+reference cannot be tested bitwise, and without an ops dispatch gate
+(TPU → kernel, ``REPRO_FORCE_PALLAS`` → interpret, else ref) it is
+unreachable from the backend-keyed executor cache.
+
+**R6 — BENCH-writing harnesses are gated.** A harness registered in
+``benchmarks/run.py`` that writes a ``BENCH_*.json`` baseline must appear
+in ``benchmarks/check_regression.py``, else its baseline rots while CI
+stays green. Harnesses with no stable warm metric carry ``allow[R6]`` with
+a rationale.
+
+Suppression syntax
+==================
+
+``# repro: allow[R1]`` (or ``allow[R1,R4]``) on the violating line or the
+line directly above suppresses that rule there. Suppressed findings and
+the full per-rule suppression inventory are part of the report
+(``BENCH_analysis.json``) — suppressions are visible debt, not deletions.
+"""
+from __future__ import annotations
+
+# The key-stream tag registry (R3). Every constant fold_in stream in the
+# tree derives from one of these names; the VALUES live next to their
+# streams (comm/config.py, selection/policies.py) — this registry is the
+# single place a reviewer checks for collisions.
+REGISTERED_KEY_TAGS = {
+    "_COMM_KEY_TAG",       # 0x636D comm/config.py — quantization randomness
+    "_PROBE_KEY_TAG",      # 0x736C selection/policies.py — value probes
+    "_SECOND_UPLINK_TAG",  # 1 comm/config.py — SAGA/SCAFFOLD second uplink
+}
+
+# Per-executor-family ceiling on TOTAL array-const bytes in the traced
+# jaxpr (Layer 2). Spec-path executors carry no array consts at all; the
+# ceiling leaves room for stray control scalars, never for a data shard.
+CONST_BYTE_CEILING = 4096
+
+from repro.analysis.lint import run_lint  # noqa: E402
+from repro.analysis.lint.base import Violation  # noqa: E402
+
+__all__ = [
+    "CONST_BYTE_CEILING", "REGISTERED_KEY_TAGS", "Violation", "run_lint",
+]

@@ -1,0 +1,6 @@
+"""``python -m repro.analysis`` → the analyzer CLI (see ``cli.py``)."""
+import sys
+
+from repro.analysis.cli import main
+
+sys.exit(main())

@@ -1,0 +1,80 @@
+"""CLI entry point: ``python -m repro.analysis``.
+
+  --lint          run the AST lint (R1–R6) over src/repro + benchmarks
+  --audit         run the jaxpr const-capture audit (all executor families)
+  --all           both layers (what CI runs)
+  --json PATH     write the machine-readable report (BENCH_analysis.json)
+  --root DIR      repo root (default: auto-detected from this package)
+  --verbose       also print suppressed findings
+  [paths ...]     override the linted paths (relative to root)
+
+Exit status: 0 iff zero unsuppressed lint violations and zero audit
+failures. Tests are deliberately NOT linted by default — fixture snippets
+there exist to violate the rules on purpose.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+DEFAULT_LINT_PATHS = ("src/repro", "benchmarks")
+
+
+def detect_root(start: Optional[str] = None) -> str:
+    """Walk up from this package (or ``start``) to the directory holding
+    ``src/repro`` — the repo root the path rules are anchored to."""
+    cur = os.path.abspath(start or os.path.dirname(__file__))
+    while True:
+        if os.path.isdir(os.path.join(cur, "src", "repro")):
+            return cur
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            return os.getcwd()
+        cur = parent
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--lint", action="store_true")
+    ap.add_argument("--audit", action="store_true")
+    ap.add_argument("--all", action="store_true", dest="all_layers")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--root", default=None)
+    ap.add_argument("--verbose", action="store_true")
+    ap.add_argument("paths", nargs="*", default=[])
+    args = ap.parse_args(argv)
+
+    do_lint = args.lint or args.all_layers or not (args.lint or args.audit)
+    do_audit = args.audit or args.all_layers
+    root = args.root or detect_root()
+
+    from repro.analysis import report as report_lib
+    from repro.analysis.lint import run_lint
+
+    violations, inventory = (None, {})
+    if do_lint:
+        paths = tuple(args.paths) or DEFAULT_LINT_PATHS
+        violations, inventory = run_lint(root, paths)
+
+    audit_report, audit_failures = None, []
+    if do_audit:
+        from repro.analysis import jaxpr_audit
+
+        audit_report, audit_failures = jaxpr_audit.run_audit()
+
+    print(report_lib.format_console(
+        violations, inventory, audit_report, audit_failures,
+        verbose=args.verbose))
+    if args.json:
+        doc = report_lib.build_report(violations, inventory, audit_report)
+        report_lib.write_json(doc, args.json)
+        print(f"report written to {args.json}")
+
+    active, _ = report_lib.split_violations(violations or [])
+    return 1 if (active or audit_failures) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

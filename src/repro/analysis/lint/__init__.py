@@ -1,0 +1,69 @@
+"""Layer 1 of ``repro.analysis``: the AST lint.
+
+``run_lint(root, paths)`` parses every ``.py`` under the given paths into a
+``ModuleContext`` (traced-scope detection + suppression table, see
+``lint.base``) and runs the R1–R4 AST checkers plus the R5–R6 repo-structure
+checkers over the tree. Returns every finding, suppressed included — the
+caller splits them for reporting.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Sequence, Tuple
+
+from repro.analysis.lint.base import Checker, ModuleContext, Violation
+from repro.analysis.lint.checkers import AST_CHECKERS
+from repro.analysis.lint.repo_rules import REPO_CHECKERS
+
+__all__ = [
+    "AST_CHECKERS", "Checker", "ModuleContext", "REPO_CHECKERS",
+    "Violation", "iter_sources", "run_lint",
+]
+
+_SKIP_DIRS = {"__pycache__", ".git", ".github", "node_modules"}
+
+
+def iter_sources(root: str, paths: Sequence[str]) -> List[str]:
+    """All ``.py`` files under ``paths`` (relative to ``root``), sorted."""
+    out = []
+    for rel in paths:
+        top = os.path.join(root, rel)
+        if os.path.isfile(top):
+            out.append(top)
+            continue
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
+            out.extend(os.path.join(dirpath, f)
+                       for f in filenames if f.endswith(".py"))
+    return sorted(out)
+
+
+def run_lint(root: str, paths: Sequence[str]
+             ) -> Tuple[List[Violation], Dict[str, int]]:
+    """(all findings incl. suppressed, {rule: declared-suppression count}).
+
+    The suppression inventory counts every ``# repro: allow[Rn]`` comment
+    found in the linted sources per rule — the report surfaces them so a
+    stale suppression can't hide forever.
+    """
+    violations: List[Violation] = []
+    suppression_inventory: Dict[str, int] = {}
+    for path in iter_sources(root, paths):
+        with open(path) as f:
+            source = f.read()
+        try:
+            ctx = ModuleContext(os.path.relpath(path, root), source)
+        except SyntaxError as e:
+            violations.append(Violation(
+                rule="parse", path=os.path.relpath(path, root),
+                line=e.lineno or 1, message=f"syntax error: {e.msg}"))
+            continue
+        for rules in ctx.suppressions.values():
+            for rule in rules:
+                suppression_inventory[rule] = (
+                    suppression_inventory.get(rule, 0) + 1)
+        for checker_cls in AST_CHECKERS:
+            violations.extend(checker_cls().check(ctx))
+    for checker_cls in REPO_CHECKERS:
+        violations.extend(checker_cls().check_repo(root))
+    return violations, suppression_inventory

@@ -1,0 +1,123 @@
+"""Repo-structure checkers R5–R6: rules about the TREE, not one module.
+
+R5 walks ``src/repro/kernels/`` directly; R6 cross-references the harness
+registry in ``benchmarks/run.py`` against ``benchmarks/check_regression.py``.
+Both return the same ``Violation`` records as the AST checkers so the CLI
+reports them uniformly.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import List
+
+from repro.analysis.lint.base import (
+    Violation, parse_suppressions, terminal_name,
+)
+
+
+class KernelPairingChecker:
+    """R5: every kernel directory ships a ``ref.py`` (the jnp reference the
+    Pallas kernel is tested bitwise against) and an ``ops.py`` dispatch gate
+    (TPU → kernel, ``REPRO_FORCE_PALLAS`` → interpret mode, else ref) — a
+    kernel without them is unverifiable off-TPU and unreachable from the
+    executors' backend-keyed cache."""
+
+    rule = "R5"
+    title = "every kernel has a ref.py counterpart and an ops.py gate"
+
+    def check_repo(self, root: str) -> List[Violation]:
+        out = []
+        kdir = os.path.join(root, "src", "repro", "kernels")
+        if not os.path.isdir(kdir):
+            return out
+        for name in sorted(os.listdir(kdir)):
+            sub = os.path.join(kdir, name)
+            if not os.path.isdir(sub) or name.startswith("__"):
+                continue
+            files = {f for f in os.listdir(sub) if f.endswith(".py")}
+            if not (files - {"__init__.py"}):
+                continue
+            for required, why in (
+                    ("ref.py", "a jnp reference implementation to test the "
+                               "kernel bitwise against"),
+                    ("ops.py", "a dispatch gate (TPU/interpret/ref) keyed "
+                               "by the executor cache's backend env")):
+                if required not in files:
+                    out.append(Violation(
+                        rule=self.rule,
+                        path=os.path.relpath(sub, root),
+                        line=1,
+                        message=f"kernel {name!r} has no {required}: every "
+                                f"kernel needs {why}"))
+        return out
+
+
+class BenchGateChecker:
+    """R6: every harness registered in ``benchmarks/run.py`` that WRITES a
+    ``BENCH_*.json`` baseline must be gated by
+    ``benchmarks/check_regression.py`` — an ungated baseline silently rots
+    while CI stays green. Suppress with ``# repro: allow[R6]`` on the
+    registry line for harnesses whose output has no stable warm metric."""
+
+    rule = "R6"
+    title = "BENCH-writing harnesses in run.py are gated in check_regression"
+
+    def check_repo(self, root: str) -> List[Violation]:
+        out = []
+        run_path = os.path.join(root, "benchmarks", "run.py")
+        gate_path = os.path.join(root, "benchmarks", "check_regression.py")
+        if not (os.path.exists(run_path) and os.path.exists(gate_path)):
+            return out
+        with open(run_path) as f:
+            run_src = f.read()
+        with open(gate_path) as f:
+            gate_src = f.read()
+        suppressions = parse_suppressions(run_src.splitlines())
+        tree = ast.parse(run_src, filename=run_path)
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Assign) and node.targets
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id == "harnesses"
+                    and isinstance(node.value, ast.Dict)):
+                continue
+            for key_node, val_node in zip(node.value.keys,
+                                          node.value.values):
+                module = self._module_of(val_node)
+                if module is None:
+                    continue
+                mod_path = os.path.join(root, "benchmarks", f"{module}.py")
+                if not os.path.exists(mod_path):
+                    continue
+                with open(mod_path) as f:
+                    if "BENCH_" not in f.read():
+                        continue  # writes no baseline: nothing to gate
+                if module in gate_src:
+                    continue
+                line = key_node.lineno
+                suppressed = any(
+                    self.rule in suppressions.get(at, set())
+                    for at in (line, line - 1))
+                out.append(Violation(
+                    rule=self.rule,
+                    path=os.path.relpath(run_path, root),
+                    line=line,
+                    message=f"harness {module!r} writes a BENCH_*.json "
+                            f"baseline but is not gated in "
+                            f"check_regression.py",
+                    suppressed=suppressed))
+        return out
+
+    @staticmethod
+    def _module_of(val_node):
+        """``table1_strongly_convex.main`` → ``table1_strongly_convex``."""
+        if isinstance(val_node, ast.Attribute):
+            base = val_node.value
+            if isinstance(base, ast.Name):
+                return base.id
+            if isinstance(base, ast.Attribute):
+                return terminal_name(base)
+        return None
+
+
+REPO_CHECKERS = (KernelPairingChecker, BenchGateChecker)

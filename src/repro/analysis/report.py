@@ -1,0 +1,81 @@
+"""Report assembly for the analyzer: console text + BENCH_analysis.json.
+
+The JSON document is the machine-readable artifact the bench-regression
+gate consumes: per-family const bytes (Layer 2), per-rule violation counts
+(unsuppressed — must all be zero for the tree to pass), and the per-rule
+suppression inventory (visible debt)."""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+from repro.analysis.lint.base import Violation
+
+
+def split_violations(violations: List[Violation]):
+    """(unsuppressed, suppressed)."""
+    active = [v for v in violations if not v.suppressed]
+    suppressed = [v for v in violations if v.suppressed]
+    return active, suppressed
+
+
+def rule_counts(violations: List[Violation]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for v in violations:
+        out[v.rule] = out.get(v.rule, 0) + 1
+    return out
+
+
+def build_report(violations: Optional[List[Violation]],
+                 suppression_inventory: Dict[str, int],
+                 audit_report: Optional[dict]) -> dict:
+    active, suppressed = split_violations(violations or [])
+    doc = {
+        "lint": {
+            "violations": rule_counts(active),
+            "suppressed": rule_counts(suppressed),
+            "suppression_inventory": dict(sorted(
+                suppression_inventory.items())),
+        },
+    }
+    if audit_report is not None:
+        doc["audit"] = audit_report
+    return doc
+
+
+def write_json(doc: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def format_console(violations: Optional[List[Violation]],
+                   suppression_inventory: Dict[str, int],
+                   audit_report: Optional[dict],
+                   audit_failures: Optional[List[str]],
+                   verbose: bool = False) -> str:
+    lint_ran = violations is not None
+    active, suppressed = split_violations(violations or [])
+    lines = [v.format() for v in sorted(
+        active, key=lambda v: (v.path, v.line, v.rule))]
+    if verbose:
+        lines += [v.format() for v in sorted(
+            suppressed, key=lambda v: (v.path, v.line, v.rule))]
+    if audit_failures:
+        lines += [f"audit: {f}" for f in audit_failures]
+    summary = []
+    if lint_ran:
+        summary.append(f"lint: {len(active)} unsuppressed violation(s), "
+                       f"{len(suppressed)} suppressed")
+    if suppression_inventory:
+        inv = ", ".join(f"{r}×{n}" for r, n in sorted(
+            suppression_inventory.items()))
+        summary.append(f"suppression inventory: {inv}")
+    if audit_report is not None:
+        fams = audit_report["families"]
+        summary.append(
+            f"audit: {len(fams)} executor families, "
+            f"{audit_report['total_const_bytes']} total const bytes "
+            f"(ceiling {audit_report['const_ceiling_bytes']}/family), "
+            f"{len(audit_failures or [])} failure(s)")
+    return "\n".join(lines + summary)

@@ -77,6 +77,7 @@ from repro.comm.config import (
     leaf_dims,
     masked_keep,
     participation_scale,
+    second_uplink_key,
     selection_round_bits,
     total_dim,
     uplink,
@@ -89,7 +90,7 @@ __all__ = [
     "COMP_IDENTITY", "COMP_QSGD", "COMP_TOPK", "COMP_RANDK",
     "CommParams", "CommConfig", "CommState",
     "compress_rows", "compress_tree", "uplink", "uplink_fused_apply",
-    "account_round", "comm_key",
+    "account_round", "comm_key", "second_uplink_key",
     "participation_scale", "masked_keep", "ef_enabled",
     "leaf_dims", "total_dim",
     "uplink_bits_per_client", "uplink_bits_per_client_tree",

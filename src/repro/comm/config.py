@@ -22,6 +22,9 @@ from repro.core import tree_math as tm
 # disturbing the key splits the algorithms already perform (bit-exactness of
 # identity-compressor runs depends on this).
 _COMM_KEY_TAG = 0x636D
+# second-uplink stream tag (see second_uplink_key); registered in
+# repro.analysis.REGISTERED_KEY_TAGS
+_SECOND_UPLINK_TAG = 1
 
 
 class CommState(NamedTuple):
@@ -83,6 +86,13 @@ def total_dim(x) -> int:
 def comm_key(key):
     """The comm PRNG stream for a round key (quantization randomness)."""
     return jax.random.fold_in(key, _COMM_KEY_TAG)
+
+
+def second_uplink_key(key):
+    """The comm stream for a round's SECOND compressed uplink (SAGA's fresh
+    gradients, SCAFFOLD's control deltas). The tag value predates the
+    registry and stays 1 so existing trajectories remain bitwise intact."""
+    return jax.random.fold_in(comm_key(key), _SECOND_UPLINK_TAG)
 
 
 def participation_scale(mask, cids):

@@ -124,8 +124,7 @@ class SAGA(base.FederatedAlgorithm):
                 # fresh gradients are a second compressed uplink (no EF:
                 # the residual stream belongs to the step gradients)
                 g2, comm = comm_lib.uplink(
-                    comm, g2, cids2,
-                    jax.random.fold_in(comm_lib.comm_key(key), 1),
+                    comm, g2, cids2, comm_lib.second_uplink_key(key),
                     use_ef=False)
                 m2 = comm.mask[cids2]
             old2 = jax.tree.map(lambda t: t[cids2], state.c_table)

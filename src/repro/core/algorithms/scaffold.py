@@ -88,7 +88,7 @@ class Scaffold(base.FederatedAlgorithm):
                 comm, y_final, cids, k_comm, ref=state.x)
             # control deltas ride a second uplink (per-row reference, no EF)
             ci_new, comm = comm_lib.uplink(
-                comm, ci_new, cids, jax.random.fold_in(k_comm, 1),
+                comm, ci_new, cids, comm_lib.second_uplink_key(key),
                 ref=c_i, use_ef=False)
             from repro.comm import config as comm_cfg
 

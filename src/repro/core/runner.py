@@ -36,6 +36,7 @@ inside the traced body) — tests assert single-compile behaviour with it.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import itertools
 import warnings
@@ -80,6 +81,64 @@ def dealias_donated(donated, *others):
 # Trace counter: the executor bodies bump this when (re)traced. A cached,
 # single-compile executor leaves the count unchanged on repeated calls.
 TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def snapshot_traces() -> dict:
+    """A point-in-time copy of ``TRACE_COUNTS`` for later ``trace_deltas``."""
+    return dict(TRACE_COUNTS)
+
+
+def trace_deltas(before: dict) -> dict:
+    """TRACE_COUNTS movement since the ``before`` snapshot (nonzero only)."""
+    return {k: v - before.get(k, 0) for k, v in TRACE_COUNTS.items()
+            if v != before.get(k, 0)}
+
+
+class _TraceProbe:
+    """Exposes ``.deltas`` (the TRACE_COUNTS movement) after the
+    ``assert_no_retrace`` block exits."""
+
+    deltas: dict = {}
+
+
+@contextlib.contextmanager
+def assert_no_retrace(traced=(), *, what: str = "with-block"):
+    """Assert executor-trace discipline across the block.
+
+    Each counter named in ``traced`` must move by EXACTLY one (the block
+    pays that executor's single compile) and every other ``TRACE_COUNTS``
+    entry must not move at all. ``traced=()`` is the warm contract: zero
+    movement anywhere — re-running an already-compiled grid, swapping
+    operands (problems, comm configs, policies) at a fixed structure, or a
+    repeat call of any cached executor must all pass it.
+
+    Yields a probe whose ``.deltas`` holds the observed movement at exit,
+    for tests that want to report or further inspect the counters.
+    """
+    probe = _TraceProbe()
+    before = dict(TRACE_COUNTS)
+    yield probe
+    probe.deltas = deltas = trace_deltas(before)
+    traced = tuple(traced)
+    problems = [f"{name!r} traced {deltas.get(name, 0)} times "
+                f"(expected exactly 1)"
+                for name in traced if deltas.get(name, 0) != 1]
+    extra = {k: v for k, v in deltas.items() if k not in traced}
+    if extra:
+        problems.append(f"unexpected re-traces: {extra}")
+    if problems:
+        raise AssertionError(
+            f"trace discipline violated across {what}: "
+            + "; ".join(problems))
+
+
+# jaxpr-audit hook (``repro.analysis.jaxpr_audit``): while ``AUDIT_SINK`` is
+# a list, every top-level call of a cached executor records
+# ``(cache_key, fn, args, kwargs)`` so the audit can re-trace the EXACT
+# executor object on its real operands and walk the ClosedJaxpr consts.
+# Calls made during tracing (the unjitted bodies run inside jit/vmap with
+# Tracer arguments) are skipped — recording them would leak tracers.
+AUDIT_SINK: Optional[list] = None
 
 # cache key -> executor fn. A bounded LRU; entries hold NO problem objects
 # (spec-path executors take the problem as an operand; legacy closure
@@ -165,8 +224,20 @@ def _cache_get(key):
     return fn
 
 
+def _audit_wrap(key, fn):
+    def wrapped(*args, **kwargs):
+        if AUDIT_SINK is not None and not any(
+                isinstance(leaf, jax.core.Tracer)
+                for leaf in jax.tree.leaves((args, kwargs))):
+            AUDIT_SINK.append((key, fn, args, kwargs))
+        return fn(*args, **kwargs)
+
+    return wrapped
+
+
 def _cache_put(key, fn):
     full = (key, _env_key())
+    fn = _audit_wrap(key, fn)
     _EXECUTOR_CACHE[full] = fn
     _EXECUTOR_CACHE.move_to_end(full)
     while len(_EXECUTOR_CACHE) > _EXECUTOR_CACHE_MAX:

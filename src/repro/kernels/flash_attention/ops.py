@@ -1,0 +1,31 @@
+"""Backend-dispatching wrapper for the flash-attention kernel.
+
+TPU: the Pallas kernel. CPU: interpret-mode Pallas when ``force_pallas`` or
+``REPRO_FORCE_PALLAS=1`` (tests / kernel-path debugging), else the jnp
+reference (XLA:CPU can't lower Mosaic) — the same gate every kernel
+directory ships (``kernels/aggregate/ops.py`` is the template), so callers
+never pick a backend themselves and the executor cache's env key
+(``runner._env_key``) stays the single source of dispatch truth.
+"""
+from __future__ import annotations
+
+from repro.kernels.aggregate.ops import _force_pallas_env, _on_tpu
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention as _kernel,
+)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0, scale=None,
+              force_pallas: bool = False):
+    """Dispatched flash attention: q [B, S, H, D]; k, v [B, S, KV, D]
+    (GQA: H % KV == 0); returns [B, S, H, D]. The Pallas paths need S to be
+    a multiple of the kernel block sizes; the reference has no constraint.
+    """
+    if _on_tpu():
+        return _kernel(q, k, v, causal=causal, window=window, scale=scale)
+    if force_pallas or _force_pallas_env():
+        return _kernel(q, k, v, causal=causal, window=window, scale=scale,
+                       interpret=True)
+    return ref.attention_ref(q, k, v, causal=causal, window=window,
+                             scale=scale)

@@ -1,0 +1,345 @@
+"""Trace-discipline analyzer tests: each rule R1–R6 fires on a minimal
+violating fixture and stays silent on the idiomatic counterpart, suppression
+comments downgrade (never delete) findings, and the Layer-2 jaxpr audit
+proves the sweep executor carries no array consts above the byte ceiling.
+
+The fixture snippets VIOLATE the rules on purpose — which is why ``tests/``
+is excluded from the default lint paths (``repro.analysis.cli``).
+"""
+import textwrap
+
+import pytest
+
+from repro.analysis import CONST_BYTE_CEILING
+from repro.analysis.lint.base import ModuleContext
+from repro.analysis.lint.checkers import (
+    ClosureArrayChecker, DonationChecker, KeyStreamChecker, SideEffectChecker,
+)
+from repro.analysis.lint.repo_rules import BenchGateChecker, KernelPairingChecker
+from repro.core import runner
+
+
+def _lint(checker_cls, src):
+    ctx = ModuleContext("fixture.py", textwrap.dedent(src))
+    return checker_cls().check(ctx)
+
+
+def _active(violations):
+    return [v for v in violations if not v.suppressed]
+
+
+# ------------------------------ R1 ------------------------------------------
+
+def test_r1_flags_module_array_closure():
+    vs = _lint(ClosureArrayChecker, """
+        import jax
+        import jax.numpy as jnp
+
+        W = jnp.ones((4, 4))
+
+        @jax.jit
+        def apply(x):
+            return x @ W
+    """)
+    assert [v.rule for v in vs] == ["R1"]
+    assert "captured by closure" in vs[0].message
+
+
+def test_r1_flags_numpy_ctor_in_traced_body():
+    vs = _lint(ClosureArrayChecker, """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            return x + np.zeros(3)
+    """)
+    assert [v.rule for v in vs] == ["R1"]
+    assert "jaxpr const" in vs[0].message
+
+
+def test_r1_passes_operand_argument():
+    vs = _lint(ClosureArrayChecker, """
+        import jax
+        import jax.numpy as jnp
+
+        W = jnp.ones((4, 4))
+
+        @jax.jit
+        def apply(x, w):
+            return x @ w
+
+        def call(x):
+            return apply(x, W)  # host call site: not a traced scope
+    """)
+    assert vs == []
+
+
+# ------------------------------ R2 ------------------------------------------
+
+def test_r2_flags_module_mutation_in_traced_body():
+    vs = _lint(SideEffectChecker, """
+        import jax
+
+        LOG = []
+
+        @jax.jit
+        def f(x):
+            LOG.append(1)
+            return x
+    """)
+    assert [v.rule for v in vs] == ["R2"]
+    assert "trace-time side effect" in vs[0].message
+
+
+def test_r2_passes_trace_counts_bump():
+    vs = _lint(SideEffectChecker, """
+        import collections
+        import jax
+
+        TRACE_COUNTS = collections.Counter()
+
+        @jax.jit
+        def f(x):
+            TRACE_COUNTS["f"] += 1
+            return x
+    """)
+    assert vs == []
+
+
+# ------------------------------ R3 ------------------------------------------
+
+def test_r3_flags_bare_literal_fold_in_tag():
+    vs = _lint(KeyStreamChecker, """
+        import jax
+
+        def stream(key):
+            return jax.random.fold_in(key, 7)
+    """)
+    assert [v.rule for v in vs] == ["R3"]
+    assert "bare literal" in vs[0].message
+
+
+def test_r3_flags_unregistered_tag_name():
+    vs = _lint(KeyStreamChecker, """
+        import jax
+
+        _ROGUE_TAG = 99
+
+        def stream(key):
+            return jax.random.fold_in(key, _ROGUE_TAG)
+    """)
+    assert [v.rule for v in vs] == ["R3"]
+    assert "not registered" in vs[0].message
+
+
+def test_r3_flags_key_consumed_twice():
+    vs = _lint(KeyStreamChecker, """
+        import jax
+
+        def sample(key):
+            a = jax.random.normal(key, (2,))
+            b = jax.random.normal(key, (2,))
+            return a + b
+    """)
+    assert [v.rule for v in vs] == ["R3"]
+    assert "consumed twice" in vs[0].message
+
+
+def test_r3_passes_split_and_registered_tag():
+    vs = _lint(KeyStreamChecker, """
+        import jax
+
+        _COMM_KEY_TAG = 0x636D  # registered in REGISTERED_KEY_TAGS
+
+        def sample(key):
+            k1, k2 = jax.random.split(jax.random.fold_in(key, _COMM_KEY_TAG))
+            a = jax.random.normal(k1, (2,))
+            b = jax.random.normal(k2, (2,))
+            return a + b
+    """)
+    assert vs == []
+
+
+def test_r3_allows_same_key_on_exclusive_branches():
+    vs = _lint(KeyStreamChecker, """
+        import jax
+
+        def sample(key, flip):
+            if flip:
+                return jax.random.normal(key, (2,))
+            else:
+                return jax.random.uniform(key, (2,))
+    """)
+    assert vs == []
+
+
+# ------------------------------ R4 ------------------------------------------
+
+def test_r4_flags_literal_donate_argnums():
+    vs = _lint(DonationChecker, """
+        import jax
+
+        def build(fn):
+            return jax.jit(fn, donate_argnums=(0, 1))
+    """)
+    assert [v.rule for v in vs] == ["R4"]
+    assert "literal donate_argnums" in vs[0].message
+
+
+def test_r4_flags_donate_name_absent_from_cache_key():
+    vs = _lint(DonationChecker, """
+        import jax
+
+        def build(fn):
+            donate = (0, 1)
+            return jax.jit(fn, donate_argnums=donate)
+    """)
+    assert [v.rule for v in vs] == ["R4"]
+    assert "cache key" in vs[0].message
+
+
+def test_r4_passes_donate_threaded_through_cache_key():
+    vs = _lint(DonationChecker, """
+        import jax
+
+        CACHE = {}
+
+        def build(name, fn):
+            donate = (0, 1)
+            key = (name, donate)
+            if key not in CACHE:
+                CACHE[key] = jax.jit(fn, donate_argnums=donate)
+            return CACHE[key]
+    """)
+    assert vs == []
+
+
+# --------------------------- suppressions -----------------------------------
+
+def test_suppression_downgrades_but_keeps_finding():
+    vs = _lint(DonationChecker, """
+        import jax
+
+        def build(fn):
+            # repro: allow[R4] fixture: one-shot jit
+            return jax.jit(fn, donate_argnums=(0,))
+    """)
+    assert len(vs) == 1 and vs[0].suppressed
+    assert _active(vs) == []
+
+
+def test_suppression_is_rule_specific():
+    vs = _lint(DonationChecker, """
+        import jax
+
+        def build(fn):
+            # repro: allow[R1] wrong rule: does not cover R4
+            return jax.jit(fn, donate_argnums=(0,))
+    """)
+    assert len(vs) == 1 and not vs[0].suppressed
+
+
+def test_rule_syntax_in_docstrings_is_not_a_suppression():
+    vs = _lint(DonationChecker, '''
+        import jax
+
+        def build(fn):
+            """Docstrings quoting `# repro: allow[R4]` must not suppress."""
+            return jax.jit(fn, donate_argnums=(0,))
+    ''')
+    assert len(vs) == 1 and not vs[0].suppressed
+
+
+# ------------------------------ R5 ------------------------------------------
+
+def _kernel_dir(tmp_path, name, files):
+    d = tmp_path / "src" / "repro" / "kernels" / name
+    d.mkdir(parents=True)
+    for fname, body in files.items():
+        (d / fname).write_text(body)
+    return tmp_path
+
+
+def test_r5_flags_kernel_missing_ref_and_ops(tmp_path):
+    root = _kernel_dir(tmp_path, "mykernel", {"kernel.py": "x = 1\n"})
+    vs = KernelPairingChecker().check_repo(str(root))
+    assert sorted(v.rule for v in vs) == ["R5", "R5"]
+    assert {m for v in vs for m in ("ref.py", "ops.py") if m in v.message} \
+        == {"ref.py", "ops.py"}
+
+
+def test_r5_passes_paired_kernel(tmp_path):
+    root = _kernel_dir(tmp_path, "mykernel", {
+        "kernel.py": "x = 1\n", "ref.py": "x = 1\n", "ops.py": "x = 1\n"})
+    assert KernelPairingChecker().check_repo(str(root)) == []
+
+
+# ------------------------------ R6 ------------------------------------------
+
+def _bench_repo(tmp_path, gate_src):
+    b = tmp_path / "benchmarks"
+    b.mkdir()
+    (b / "run.py").write_text(textwrap.dedent("""
+        from benchmarks import writer_bench
+
+        harnesses = {
+            "writer": writer_bench.main,
+        }
+    """))
+    (b / "writer_bench.py").write_text(
+        'PATH = "BENCH_writer.json"\n\ndef main(quick=True):\n    return []\n')
+    (b / "check_regression.py").write_text(gate_src)
+    return tmp_path
+
+
+def test_r6_flags_ungated_bench_writer(tmp_path):
+    root = _bench_repo(tmp_path, "def main():\n    pass\n")
+    vs = BenchGateChecker().check_repo(str(root))
+    assert [v.rule for v in vs] == ["R6"]
+    assert "writer_bench" in vs[0].message
+
+
+def test_r6_passes_gated_bench_writer(tmp_path):
+    root = _bench_repo(
+        tmp_path, "from benchmarks import writer_bench  # gated\n")
+    assert BenchGateChecker().check_repo(str(root)) == []
+
+
+# --------------------- assert_no_retrace helper ------------------------------
+
+def test_assert_no_retrace_warm_contract_flags_movement():
+    with pytest.raises(AssertionError, match="unexpected re-traces"):
+        with runner.assert_no_retrace(what="a manual counter bump"):
+            runner.TRACE_COUNTS["fake/executor"] += 1
+    del runner.TRACE_COUNTS["fake/executor"]
+
+
+def test_assert_no_retrace_traced_names_must_move_exactly_once():
+    with runner.assert_no_retrace(traced=("fake/cold",)) as probe:
+        runner.TRACE_COUNTS["fake/cold"] += 1
+    assert probe.deltas == {"fake/cold": 1}
+    with pytest.raises(AssertionError, match="expected exactly 1"):
+        with runner.assert_no_retrace(traced=("fake/cold",),
+                                      what="a block that never traced"):
+            pass
+    del runner.TRACE_COUNTS["fake/cold"]
+
+
+# --------------------------- Layer 2: jaxpr audit ----------------------------
+
+def test_jaxpr_audit_sweep_executor_has_no_large_consts():
+    """The indexed-layout sweep executor must trace with ZERO array consts
+    above the per-executor byte ceiling — operands (problems, seeds, etas)
+    ride as arguments, never baked into the jaxpr."""
+    from repro.analysis import jaxpr_audit
+
+    report, failures = jaxpr_audit.run_audit(only=["sweep"])
+    assert failures == []
+    fams = {k: v for k, v in report["families"].items()
+            if k.startswith("sweep/")}
+    assert fams, f"sweep workload recorded no executors: {report['families']}"
+    for fam, summary in fams.items():
+        assert summary["max_const_bytes"] <= CONST_BYTE_CEILING, (
+            f"{fam} bakes an array const of {summary['max_const_bytes']} "
+            f"bytes into its jaxpr (ceiling {CONST_BYTE_CEILING})")

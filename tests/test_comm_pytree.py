@@ -173,22 +173,18 @@ def test_comm_problems_axis_single_compile_and_per_cell_repro():
     cfg = CommConfig(compressor="qsgd", qsgd_bits=4, participation=0.5)
     algo = A.SGD(eta=0.4, k=4, mu_avg=0.1, name="cxp-sgd")
     seeds, etas = (0, 1), (0.3, 0.5)
-    before = dict(runner.TRACE_COUNTS)
-    res = sweep.run_sweep(algo, None, x0, 8, seeds=seeds, etas=etas,
-                          problems=specs, comm=cfg)
-    deltas = {k: v - before.get(k, 0)
-              for k, v in runner.TRACE_COUNTS.items()
-              if v != before.get(k, 0)}
-    assert deltas == {"sweep-comm-probs/cxp-sgd": 1, "runner-comm/cxp-sgd": 1}
+    with runner.assert_no_retrace(
+            traced=("sweep-comm-probs/cxp-sgd", "runner-comm/cxp-sgd"),
+            what="cold comm problems-axis grid"):
+        res = sweep.run_sweep(algo, None, x0, 8, seeds=seeds, etas=etas,
+                              problems=specs, comm=cfg)
     assert res.bits_up.shape == (4, 2, 2, 8)
     assert res.problems == tuple(s.name for s in specs)
     # switching compressor / participation must not add a compile
-    for other in [CommConfig(), CommConfig(compressor="randk", spars_k=4)]:
-        sweep.run_sweep(algo, None, x0, 8, seeds=seeds, etas=etas,
-                        problems=specs, comm=other)
-    assert {k: v - before.get(k, 0)
-            for k, v in runner.TRACE_COUNTS.items()
-            if v != before.get(k, 0)} == deltas
+    with runner.assert_no_retrace(what="compressor/participation switch"):
+        for other in [CommConfig(), CommConfig(compressor="randk", spars_k=4)]:
+            sweep.run_sweep(algo, None, x0, 8, seeds=seeds, etas=etas,
+                            problems=specs, comm=other)
     # per-cell reproducibility: cell (p, s) uses mask fold p·S + s
     pi, si, ei = 3, 1, 0
     rr = runner.run(algo, specs[pi], x0, 8, jax.random.PRNGKey(seeds[si]),
@@ -209,14 +205,11 @@ def test_vision_comm_problems_axis(vspec):
         homogeneous_frac=f) for f in (0.25, 0.75)]
     algo = A.SGD(eta=0.2, k=2, output_mode="last", name="cxp-vis-sgd")
     cfg = CommConfig(compressor="qsgd", qsgd_bits=4, participation=0.5)
-    before = dict(runner.TRACE_COUNTS)
-    res = sweep.run_sweep(algo, None, None, 5, seeds=(0, 1), etas=(0.1, 0.2),
-                          problems=specs, comm=cfg)
-    deltas = {k: v - before.get(k, 0)
-              for k, v in runner.TRACE_COUNTS.items()
-              if v != before.get(k, 0)}
-    assert deltas == {"sweep-comm-probs/cxp-vis-sgd": 1,
-                      "runner-comm/cxp-vis-sgd": 1}
+    with runner.assert_no_retrace(
+            traced=("sweep-comm-probs/cxp-vis-sgd", "runner-comm/cxp-vis-sgd"),
+            what="cold vision comm problems-axis grid"):
+        res = sweep.run_sweep(algo, None, None, 5, seeds=(0, 1),
+                              etas=(0.1, 0.2), problems=specs, comm=cfg)
     h = np.asarray(res.history)
     assert h.shape == (2, 2, 2, 5) and np.isfinite(h).all()
     acc = vision_accuracy(specs[0])(

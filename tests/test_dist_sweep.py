@@ -168,10 +168,9 @@ def test_fraction_sweep_matches_per_fraction_chain_run():
             assert bool(res.selected_initial[si, fi, 0]) == \
                 r.selected_initial[0]
     # the whole fraction grid shares ONE compile; re-running stays compiled
-    before = dict(runner.TRACE_COUNTS)
-    sweep.run_fraction_sweep(ch, quad, None, 16, seeds=(2, 3),
-                             fractions=fractions)
-    assert dict(runner.TRACE_COUNTS) == before
+    with runner.assert_no_retrace(what="warm fraction grid"):
+        sweep.run_fraction_sweep(ch, quad, None, 16, seeds=(2, 3),
+                                 fractions=fractions)
 
 
 def test_fraction_sweep_validates_inputs():
@@ -231,11 +230,10 @@ def test_sharded_sweep_bitwise_on_debug_mesh():
 
         ref = sweep.run_sweep(algo, None, None, 12, seeds=seeds, etas=etas,
                               problems=specs)
-        before = dict(runner.TRACE_COUNTS)
+        before = runner.snapshot_traces()
         res = sweep.run_sweep(algo, None, None, 12, seeds=seeds, etas=etas,
                               problems=specs, mesh=mesh)
-        deltas = {k: v - before.get(k, 0) for k, v in runner.TRACE_COUNTS.items()
-                  if v != before.get(k, 0)}
+        deltas = runner.trace_deltas(before)
         checks['algo_probs'] = (bw(ref.history, res.history)
                                 and bw(ref.final_sub, res.final_sub)
                                 and all(bw(a, b) for a, b in zip(
@@ -243,10 +241,10 @@ def test_sharded_sweep_bitwise_on_debug_mesh():
                                     jax.tree.leaves(res.x_hat))))
         checks['algo_single_trace'] = (deltas.get('dist-probs/sgd') == 1)
         # warm path: no re-trace
-        before = dict(runner.TRACE_COUNTS)
+        before = runner.snapshot_traces()
         sweep.run_sweep(algo, None, None, 12, seeds=seeds, etas=etas,
                         problems=specs, mesh=mesh)
-        checks['algo_warm_no_retrace'] = dict(runner.TRACE_COUNTS) == before
+        checks['algo_warm_no_retrace'] = not runner.trace_deltas(before)
 
         cfg = CommConfig(compressor='qsgd', qsgd_bits=4, participation=0.5,
                          error_feedback=True)
@@ -307,10 +305,9 @@ def test_fraction_sweep_sharded_bitwise_on_debug_mesh():
             A.SGD(eta=0.3, k=4, mu_avg=0.1), selection_k=4, name='frac-ch')
         kw = dict(seeds=(0, 1, 2), fractions=(0.2, 0.4, 0.6, 0.8))
         ref = sweep.run_fraction_sweep(ch, quad, None, 16, **kw)
-        before = dict(runner.TRACE_COUNTS)
+        before = runner.snapshot_traces()
         res = sweep.run_fraction_sweep(ch, quad, None, 16, mesh=mesh, **kw)
-        deltas = {k: v - before.get(k, 0) for k, v in runner.TRACE_COUNTS.items()
-                  if v != before.get(k, 0)}
+        deltas = runner.trace_deltas(before)
         bw = lambda a, b: np.array_equal(np.asarray(a), np.asarray(b))
         print(json.dumps({
             'bitwise': bw(ref.history, res.history)

@@ -116,12 +116,9 @@ def test_indexed_zero_warm_retraces():
     specs = _zeta_specs()
     algo = A.SGD(eta=0.4, k=3, mu_avg=0.1)
     _grid(algo, specs, "indexed")  # compile
-    before = dict(runner.TRACE_COUNTS)
-    out = _grid(algo, specs, "indexed")
-    jax.block_until_ready(out.history)
-    moved = {k: v - before.get(k, 0) for k, v in runner.TRACE_COUNTS.items()
-             if v != before.get(k, 0)}
-    assert moved == {}, f"warm indexed re-run re-traced: {moved}"
+    with runner.assert_no_retrace(what="warm indexed re-run"):
+        out = _grid(algo, specs, "indexed")
+        jax.block_until_ready(out.history)
 
 
 def test_operand_layout_rejects_unknown():

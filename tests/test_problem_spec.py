@@ -131,10 +131,9 @@ def test_zeta_grid_single_compile_flat_algo():
     specs2 = [spec_lib.quadratic_spec(
         jax.random.PRNGKey(5), num_clients=6, dim=12, mu=0.1, beta=1.0,
         zeta=z, sigma=0.2, sigma_f=0.05) for z in ZETAS]
-    sweep.run_sweep(algo, None, None, 10, seeds=(0, 1), etas=(0.5, 1.0),
-                    eta_mode="scale", problems=specs2)
-    assert runner.TRACE_COUNTS["sweep-probs/cc-spec-sgd"] == 1
-    assert runner.TRACE_COUNTS["runner/cc-spec-sgd"] == 1
+    with runner.assert_no_retrace(what="fresh same-shaped problem instances"):
+        sweep.run_sweep(algo, None, None, 10, seeds=(0, 1), etas=(0.5, 1.0),
+                        eta_mode="scale", problems=specs2)
     # grid cells match per-problem sweeps
     for i, s in enumerate(specs):
         per = sweep.run_sweep(algo, s, s.x0, 10, seeds=(0, 1),
@@ -155,10 +154,9 @@ def test_zeta_grid_single_compile_chain():
     assert res.selected_initial.shape == (len(ZETAS), 2, 2, 1)
     assert runner.TRACE_COUNTS["sweep-probs/cc-spec-chain"] == 1
     assert runner.TRACE_COUNTS["chain/cc-spec-chain"] == 1
-    sweep.run_sweep(ch, None, None, 12, seeds=(2, 3), etas=(0.5, 1.0),
-                    problems=specs)
-    assert runner.TRACE_COUNTS["sweep-probs/cc-spec-chain"] == 1
-    assert runner.TRACE_COUNTS["chain/cc-spec-chain"] == 1
+    with runner.assert_no_retrace(what="warm chain problems grid"):
+        sweep.run_sweep(ch, None, None, 12, seeds=(2, 3), etas=(0.5, 1.0),
+                        problems=specs)
     for i, s in enumerate(specs):
         per = sweep.run_sweep(ch, s, s.x0, 12, seeds=(0, 1), etas=(0.5, 1.0))
         np.testing.assert_allclose(np.asarray(res.history[i]),
@@ -171,11 +169,10 @@ def test_run_no_retrace_across_instances():
     p1 = quad_problem(zeta=0.5, seed=0)
     x0 = p1.init_params(None)
     runner.run(algo, p1, x0, 6, jax.random.PRNGKey(0))
-    count = runner.TRACE_COUNTS["runner/cc-spec-fresh"]
-    for seed, zeta in ((1, 1.0), (2, 4.0)):
-        p = quad_problem(zeta=zeta, seed=seed)
-        runner.run(algo, p, x0, 6, jax.random.PRNGKey(0))
-    assert runner.TRACE_COUNTS["runner/cc-spec-fresh"] == count
+    with runner.assert_no_retrace(what="fresh same-shaped problem instances"):
+        for seed, zeta in ((1, 1.0), (2, 4.0)):
+            p = quad_problem(zeta=zeta, seed=seed)
+            runner.run(algo, p, x0, 6, jax.random.PRNGKey(0))
 
 
 def test_stack_specs_rejects_structural_mismatch():
@@ -261,8 +258,8 @@ def test_method_sweep_matches_per_method_runs():
                                        np.asarray(r.history),
                                        rtol=2e-4, atol=1e-6)
     # warm call (same grid shape): no new traces
-    sweep.run_method_sweep(methods, p, x0, 8, seeds=(2, 3))
-    assert runner.TRACE_COUNTS["runner-methods/cc-msgd+cc-msgd+cc-msgd"] == 1
+    with runner.assert_no_retrace(what="warm method grid"):
+        sweep.run_method_sweep(methods, p, x0, 8, seeds=(2, 3))
 
 
 def test_method_sweep_fedavg_local_steps():

@@ -96,7 +96,6 @@ def test_policy_switch_retraces_nothing(spec):
         return out
 
     grid(_all_policies(0.5))
-    before = dict(runner.TRACE_COUNTS)
     # every operand changed: policy order permuted, participation +
     # hyperparameters + selection seed all different, same grid SHAPE
     switched = (
@@ -105,10 +104,8 @@ def test_policy_switch_retraces_nothing(spec):
         SelectionPolicy("power_of_choice", participation=0.25, sel_seed=9),
         SelectionPolicy("uniform", participation=0.75, sel_seed=9),
     )
-    grid(switched)
-    moved = {k: v - before.get(k, 0) for k, v in runner.TRACE_COUNTS.items()
-             if v != before.get(k, 0)}
-    assert not moved, f"policy switch must be pure operand data: {moved}"
+    with runner.assert_no_retrace(what="policy operand switch"):
+        grid(switched)
 
 
 # ---------------- (c) mask validity + state round-trip ----------------------

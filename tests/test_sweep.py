@@ -68,11 +68,10 @@ def test_runner_single_compile(quad):
     algo = A.SGD(eta=0.35, k=3, mu_avg=quad.mu, name="cc-sgd")
     x0 = quad.init_params(jax.random.PRNGKey(0))
     runner.run(algo, quad, x0, 10, jax.random.PRNGKey(0))
-    count = runner.TRACE_COUNTS["runner/cc-sgd"]
-    assert count >= 1
-    for s in range(1, 4):
-        runner.run(algo, quad, x0, 10, jax.random.PRNGKey(s))
-    assert runner.TRACE_COUNTS["runner/cc-sgd"] == count  # no re-trace
+    assert runner.TRACE_COUNTS["runner/cc-sgd"] >= 1
+    with runner.assert_no_retrace(what="warm runner.run re-runs"):
+        for s in range(1, 4):
+            runner.run(algo, quad, x0, 10, jax.random.PRNGKey(s))
 
 
 def test_chain_single_compile_with_selection_and_decay(quad):
@@ -85,11 +84,10 @@ def test_chain_single_compile_with_selection_and_decay(quad):
     x0 = quad.init_params(jax.random.PRNGKey(0))
     decay = {"decay_first": 0.4, "decay_factor": 0.5}
     ch.run(quad, x0, 24, jax.random.PRNGKey(0), decay=decay)
-    count = runner.TRACE_COUNTS["chain/cc-chain"]
-    assert count == 1  # the whole chain traced exactly once
-    for s in range(1, 4):
-        res = ch.run(quad, x0, 24, jax.random.PRNGKey(s), decay=decay)
-    assert runner.TRACE_COUNTS["chain/cc-chain"] == 1
+    assert runner.TRACE_COUNTS["chain/cc-chain"] == 1  # one trace, whole chain
+    with runner.assert_no_retrace(what="warm chain re-runs"):
+        for s in range(1, 4):
+            res = ch.run(quad, x0, 24, jax.random.PRNGKey(s), decay=decay)
     assert res.history.shape == (24,)
     assert len(res.selected_initial) == 2
 
@@ -98,10 +96,10 @@ def test_sweep_single_compile(quad):
     algo = A.SGD(eta=0.35, k=3, mu_avg=quad.mu, name="cc-sweep")
     x0 = quad.init_params(jax.random.PRNGKey(0))
     sweep.run_sweep(algo, quad, x0, 8, seeds=SEEDS, etas=ETAS)
-    count = runner.TRACE_COUNTS["sweep/cc-sweep"]
-    assert count == 1  # vmap traces the cell once for the whole grid
-    sweep.run_sweep(algo, quad, x0, 8, seeds=(2, 3), etas=(0.1, 0.3))
+    # vmap traces the cell once for the whole grid
     assert runner.TRACE_COUNTS["sweep/cc-sweep"] == 1
+    with runner.assert_no_retrace(what="second sweep grid"):
+        sweep.run_sweep(algo, quad, x0, 8, seeds=(2, 3), etas=(0.1, 0.3))
 
 
 def test_sweep_eta_scale_mode(quad):
