@@ -26,6 +26,11 @@ are machine- and cache-noisy, so only warm metrics gate:
   executor family in the committed jaxpr audit must still trace with const
   bytes under the per-family ceiling, and the tree must lint clean (the
   analyzer harness raises on any unsuppressed violation)
+* ``BENCH_comm.json``: ``bidirectional.plans[*].warm_us`` — the chained
+  FedAvg→ASG plan grid's warm sweep times (compressed momentum + downlink
+  EF vs the unidirectional baselines), plus a named zero-retrace gate on
+  ``bidirectional.warm_retraces`` (the harness itself raises if any leg
+  swap re-traces)
 
 The warm metrics are tens of milliseconds, where a noisy-neighbor scheduler
 blip alone can exceed the threshold — so each harness runs ``--samples``
@@ -60,6 +65,7 @@ DIST_JSON = os.path.join(ROOT, "BENCH_dist.json")
 MEMORY_JSON = os.path.join(ROOT, "BENCH_memory.json")
 SELECTION_JSON = os.path.join(ROOT, "BENCH_selection.json")
 ANALYSIS_JSON = os.path.join(ROOT, "BENCH_analysis.json")
+COMM_JSON = os.path.join(ROOT, "BENCH_comm.json")
 
 
 def _load(path):
@@ -141,6 +147,25 @@ def _warm_metrics_selection(doc):
     return {"selection/warm_s": doc["warm"]["selection_s"]}
 
 
+def _warm_metrics_comm(doc):
+    """The bidirectional plan grid's warm sweep times. The comm_frontier
+    harness asserts the leg-swap trace discipline in-process (exactly one
+    compile per executor across the plan grid, zero warm re-traces), so the
+    timings — plus the named ``warm_retraces`` gate below — are what
+    compares here."""
+    return {f"comm/bidirectional/{m}/warm_us": v["warm_us"]
+            for m, v in doc["bidirectional"]["plans"].items()}
+
+
+def _comm_retrace_failures(fresh_doc):
+    """Named zero-retrace gate on the recorded bidirectional counters."""
+    warm = fresh_doc["bidirectional"].get("warm_retraces")
+    if warm != 0:
+        return [f"comm/bidirectional/warm_retraces: {warm} != 0 (every "
+                f"uplink/downlink/momentum leg swap must be operand data)"]
+    return []
+
+
 def _warm_metrics_problem(doc):
     out = {f"problem_sweep/{m}/grid_warm_us": v["grid_warm_us"]
            for m, v in doc["methods"].items()}
@@ -209,7 +234,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     baselines = [SWEEP_JSON, PROBLEM_JSON, MEMORY_JSON, SELECTION_JSON,
-                 ANALYSIS_JSON] + ([DIST_JSON] if args.dist else [])
+                 ANALYSIS_JSON, COMM_JSON] + ([DIST_JSON] if args.dist
+                                              else [])
     missing = [p for p in baselines if not os.path.exists(p)]
     if missing:
         print(f"no committed baseline(s): {missing}", file=sys.stderr)
@@ -219,20 +245,24 @@ def main(argv=None) -> None:
     mem_raw, mem_base = _load(MEMORY_JSON)
     sel_raw, sel_base = _load(SELECTION_JSON)
     analysis_raw, analysis_base = _load(ANALYSIS_JSON)
+    comm_raw, comm_base = _load(COMM_JSON)
     base = {**_warm_metrics_sweep(sweep_base),
             **_warm_metrics_problem(prob_base),
             **_warm_metrics_memory(mem_base),
-            **_warm_metrics_selection(sel_base)}
+            **_warm_metrics_selection(sel_base),
+            **_warm_metrics_comm(comm_base)}
     dist_raw = None
     if args.dist:
         dist_raw, dist_base = _load(DIST_JSON)
         base.update(_warm_metrics_dist(dist_base))
 
     from benchmarks import (
-        memory_bench, problem_sweep, selection_sweep, sweep_bench)
+        comm_frontier, memory_bench, problem_sweep, selection_sweep,
+        sweep_bench)
 
     fresh: dict = {}
     mem_fresh: dict = {}
+    comm_fresh: dict = {}
     try:
         for _ in range(max(1, args.samples)):
             # each sample must pay its own cold trace: problem_sweep asserts
@@ -243,14 +273,17 @@ def main(argv=None) -> None:
             problem_sweep.main(quick=True)  # raises on any grid re-trace
             memory_bench.main(quick=True)  # asserts bitwise + 0 re-traces
             selection_sweep.main(quick=True)  # raises on any policy retrace
+            comm_frontier.main(quick=True)  # raises on any leg-swap retrace
             _, sweep_fresh = _load(SWEEP_JSON)
             _, prob_fresh = _load(PROBLEM_JSON)
             _, mem_fresh = _load(MEMORY_JSON)
             _, sel_fresh = _load(SELECTION_JSON)
+            _, comm_fresh = _load(COMM_JSON)
             sample = {**_warm_metrics_sweep(sweep_fresh),
                       **_warm_metrics_problem(prob_fresh),
                       **_warm_metrics_memory(mem_fresh),
-                      **_warm_metrics_selection(sel_fresh)}
+                      **_warm_metrics_selection(sel_fresh),
+                      **_warm_metrics_comm(comm_fresh)}
             if args.dist:
                 from benchmarks import dist_scaling
 
@@ -278,12 +311,15 @@ def main(argv=None) -> None:
                 f.write(sel_raw)
             with open(ANALYSIS_JSON, "w") as f:
                 f.write(analysis_raw)
+            with open(COMM_JSON, "w") as f:
+                f.write(comm_raw)
             if dist_raw is not None:
                 with open(DIST_JSON, "w") as f:
                     f.write(dist_raw)
     failures, rows = _compare(base, fresh, args.threshold)
     failures += _memory_byte_failures(mem_base, mem_fresh)
     failures += _analysis_const_failures(analysis_base, analysis_fresh)
+    failures += _comm_retrace_failures(comm_fresh)
     print("\n".join(rows))
     if failures:
         print("\nbench-gate FAILED:", file=sys.stderr)

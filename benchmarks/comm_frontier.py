@@ -156,6 +156,61 @@ def main(quick: bool = True):
             ";".join(f"z={z}:sub={v['final_sub']:.2e}"
                      for z, v in zip(zetas, per_zeta.values()))))
 
+    # -- bidirectional: compressed momentum + downlink EF in one plan -------
+    # Chained FedAvg→ASG: the accelerated stage ships its gradients on the
+    # momentum leg and receives lookahead broadcasts through the downlink-EF
+    # chain. Every plan keeps uplink error_feedback=True (a bitwise no-op
+    # under identity legs) so the residual-table shape — the ONE trace-time
+    # comm choice — is fixed and the whole plan grid shares its compiles.
+    from repro.comm import CommPlan, Leg
+
+    asg = A.NesterovSGD(mu=float(p.mu), beta=float(p.beta), k=32,
+                        name="asg")
+    ch_asg = chain.fedchain(A.FedAvg.from_k(32, eta=0.5), asg,
+                            selection_k=32, name="fedavg->asg")
+    plans = {
+        "full32": CommPlan(uplink=Leg(error_feedback=True)),
+        "up-qsgd4": CommPlan(
+            uplink=Leg("qsgd", qsgd_bits=4, error_feedback=True),
+            momentum=Leg("qsgd", qsgd_bits=4)),
+        "bidir-qsgd4": CommPlan(
+            uplink=Leg("qsgd", qsgd_bits=4, error_feedback=True),
+            downlink=Leg("qsgd", qsgd_bits=4),
+            momentum=Leg("qsgd", qsgd_bits=4)),
+    }
+    report["bidirectional"] = {"method": "fedavg->asg", "plans": {}}
+    before = runner.snapshot_traces()
+    run_plan = lambda pl: sweep.run_sweep(  # noqa: E731
+        ch_asg, p, x0, rounds, seeds=seeds, etas=(1.0,), eta_mode="scale",
+        comm=pl)
+    for name, plan in plans.items():
+        res, us = timed(lambda pl=plan: run_plan(pl))
+        med = np.median(np.asarray(res.history)[:, 0, :], axis=0)
+        cum = np.median(res.cumulative_bits()[:, 0, :], axis=0)
+        report["bidirectional"]["plans"][name] = {
+            "plan": plan.name,
+            "warm_us": us,
+            "final_sub": float(med[-1]),
+            "total_bits": float(cum[-1]),
+            "bits_to_target": _bits_to_target(cum, med, target),
+        }
+        to_t = report["bidirectional"]["plans"][name]["bits_to_target"]
+        to_s = f"{to_t:.3e}" if to_t is not None else "miss"
+        rows.append(emit(f"comm/bidir/{name}", us,
+                         f"sub={med[-1]:.3e};bits={cum[-1]:.3e};"
+                         f"bits_to_target={to_s}"))
+    deltas = trace_deltas(before)
+    multi = {k: v for k, v in deltas.items() if v != 1}
+    if multi:
+        raise AssertionError(
+            f"bidirectional plan grid re-traced: {multi} — uplink/downlink/"
+            f"momentum legs must be operand data at a fixed residual shape")
+    with runner.assert_no_retrace(what="the warm bidirectional plan grid"):
+        for plan in plans.values():
+            run_plan(plan)
+    report["bidirectional"]["trace_deltas"] = deltas
+    report["bidirectional"]["warm_retraces"] = 0  # assert_no_retrace passed
+
     with open(os.path.join(ROOT, "BENCH_comm.json"), "w") as f:
         json.dump(report, f, indent=2)
     return rows

@@ -64,7 +64,6 @@ def main(argv=None) -> None:
         "appj1": appj1_large_k.main,  # App J.1 (large K)
         "ablation_selection": ablation_selection.main,  # Lemma H.2 on/off
         "selection": selection_sweep.main,  # policy bits-to-target frontiers
-        # repro: allow[R6] BENCH_comm has no stable warm-timing metric to gate
         "comm_frontier": comm_frontier.main,  # suboptimality-vs-bits frontier
         "dist_scaling": dist_scaling.main,  # sharded sweep, 1/2/4/8 devices
         "memory": memory_bench.main,  # indexed vs stacked operand layouts

@@ -85,9 +85,11 @@ from __future__ import annotations
 # streams (comm/config.py, selection/policies.py) — this registry is the
 # single place a reviewer checks for collisions.
 REGISTERED_KEY_TAGS = {
-    "_COMM_KEY_TAG",       # 0x636D comm/config.py — quantization randomness
-    "_PROBE_KEY_TAG",      # 0x736C selection/policies.py — value probes
-    "_SECOND_UPLINK_TAG",  # 1 comm/config.py — SAGA/SCAFFOLD second uplink
+    "_COMM_KEY_TAG",         # 0x636D comm/config.py — quantization randomness
+    "_PROBE_KEY_TAG",        # 0x736C selection/policies.py — value probes
+    "_SECOND_UPLINK_TAG",    # 1 comm/config.py — SAGA/SCAFFOLD second uplink
+    "_DOWNLINK_KEY_TAG",     # 2 comm/config.py — downlink-EF broadcasts
+    "_MOMENTUM_UPLINK_TAG",  # 3 comm/config.py — compressed-momentum uplinks
 }
 
 # Per-executor-family ceiling on TOTAL array-const bytes in the traced

@@ -1,5 +1,6 @@
-"""Communication subsystem: compressed uplinks, partial participation, and
-exact bits accounting for the FedChain experiment harnesses.
+"""Communication subsystem: compressed uplinks AND downlinks, partial
+participation, and exact bits accounting for the FedChain experiment
+harnesses.
 
 The paper's objective is *communication* cost, but rounds R are only a proxy
 for it — this package makes cost first-class, so every sweep can report
@@ -10,16 +11,21 @@ Design: comm config is DATA, not a trace trigger
 All comm behavior threads through the single-compile executors
 (``core.runner``/``core.chain``) as runtime operands:
 
-* the compressor choice is an integer ``comp_id`` selecting a branch of one
-  ``lax.switch`` (every branch is traced once; only the selected one runs),
+* the compressor choice PER LEG (uplink / downlink / momentum uplink — a
+  ``CommPlan`` is one ``Leg`` per wire direction) is an integer ``comp_id``
+  selecting a branch of one ``lax.switch`` (every branch is traced once;
+  only the selected one runs),
 * QSGD bit-width and top-k/rand-k sparsity ``k`` are traced scalars,
 * partial participation is a precomputed per-round client-mask schedule
   ``[R, N]`` fed to the ``lax.scan`` alongside the PRNG keys,
+* the downlink error-feedback state (``down_ref``/``down_residual``, one
+  params-sized pytree each) is carried unconditionally,
 
-so changing participation fraction, compressor, or bit-width never
-recompiles an executor (``runner.TRACE_COUNTS`` stays flat). The only
-trace-time comm choice is *enabling* error feedback, which changes the state
-structure (the residual table goes from ``[N, 0]`` to ``[N, D]``).
+so changing participation fraction, any leg's compressor, or bit-width
+never recompiles an executor (``runner.TRACE_COUNTS`` stays flat). The only
+trace-time comm choice is *enabling* uplink/momentum error feedback, which
+changes the state structure (the per-client residual table goes from
+``[N, 0]`` to ``[N, D]``).
 
 Compression is simulated as a quantize→dequantize round trip: algorithms see
 the server-side reconstruction of each client's uplink, while the bits that
@@ -47,11 +53,18 @@ parameter pytree, bits are the SUM over leaves of the per-leaf closed form:
                                               LEAF, float32 value + index
                                               each)
 
-Downlinks are uncompressed: ``32·Σ_l d_l`` per broadcast pytree per
-participant (SCAFFOLD broadcasts x and the server variate: 2 pytrees). A
-Lemma H.2 selection round costs ``2·32·Σ_l d_l`` down and ``2·32`` up per
-sampled client (both candidates broadcast; one scalar empirical value
-returned each).
+Downlinks bill the SAME per-leaf closed forms, evaluated at the DOWNLINK
+leg's params (the wire format is direction-symmetric): an identity downlink
+leg reduces exactly to the full-precision ``32·Σ_l d_l`` per broadcast
+pytree per participant (SCAFFOLD broadcasts x and the server variate: 2
+pytrees; SSNM broadcasts x and the snapshot point). Compressed-momentum
+uplinks (ASG's lookahead gradients, SSNM's sampled-negative-momentum and
+snapshot gradients) bill the uplink closed forms at the MOMENTUM leg's
+params — e.g. a QSGD(b) momentum leg ships ``Σ_l 32 + d_l·(b+1)`` bits per
+accelerated gradient instead of ``Σ_l 32·d_l``. A Lemma H.2 selection round
+stays full-precision: ``2·32·Σ_l d_l`` down and ``2·32`` up per sampled
+client (both candidates broadcast; one scalar empirical value returned
+each).
 ``CommState.bits_up``/``bits_down`` meter ONE round at a time (executors
 zero them each scan step and emit them as the per-round [R] meters);
 cumulative totals are summed in float64 outside the scan
@@ -69,14 +82,21 @@ from repro.comm.compressors import (
 )
 from repro.comm.config import (
     CommConfig,
+    CommPlan,
     CommState,
+    Leg,
     account_round,
     comm_key,
+    downlink,
     downlink_bits_per_client,
+    downlink_key,
+    downlink_second,
     ef_enabled,
     leaf_dims,
     masked_keep,
+    momentum_uplink_key,
     participation_scale,
+    second_downlink_key,
     second_uplink_key,
     selection_round_bits,
     total_dim,
@@ -88,9 +108,11 @@ from repro.comm.config import (
 
 __all__ = [
     "COMP_IDENTITY", "COMP_QSGD", "COMP_TOPK", "COMP_RANDK",
-    "CommParams", "CommConfig", "CommState",
+    "CommParams", "CommConfig", "CommPlan", "Leg", "CommState",
     "compress_rows", "compress_tree", "uplink", "uplink_fused_apply",
+    "downlink", "downlink_second",
     "account_round", "comm_key", "second_uplink_key",
+    "downlink_key", "second_downlink_key", "momentum_uplink_key",
     "participation_scale", "masked_keep", "ef_enabled",
     "leaf_dims", "total_dim",
     "uplink_bits_per_client", "uplink_bits_per_client_tree",

@@ -17,7 +17,7 @@ The closed-form x-update solves Algo 3's argmin exactly.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -84,6 +84,7 @@ class NesterovState(NamedTuple):
     v: object  # momentum buffer
     eta: jnp.ndarray
     r: jnp.ndarray
+    comm: Optional[object] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +93,13 @@ class NesterovSGD(base.FederatedAlgorithm):
 
     This is what the paper's experiments use for "ASG"; momentum defaults to
     the strongly-convex optimal (√κ−1)/(√κ+1) when μ>0.
+
+    Comm-aware: the server broadcasts the LOOKAHEAD point x + m·v through
+    the downlink leg (the only point clients query) and the accelerated
+    gradients ride the MOMENTUM uplink leg through the compressed +
+    error-feedback path — the momentum buffer itself is server state and
+    never crosses the wire. Identity legs and full participation are
+    bit-exact with the plain path.
     """
 
     mu: float = 0.0
@@ -114,15 +122,38 @@ class NesterovSGD(base.FederatedAlgorithm):
 
     def round(self, problem, state, key):
         k_sample, k_grad = jax.random.split(key)
-        s = self.participation(problem)
-        cids = base.sample_clients(k_sample, problem.num_clients, s)
+        comm = state.comm
         m = self._momentum()
         # lookahead point
         x_look = tm.tree_axpy(m, state.v, state.x)
-        g = base.client_mean(state.x, base.grad_k(problem, x_look, cids, k_grad, self.k))
+        if comm is not None:
+            from repro import comm as comm_lib
+            from repro.comm import config as comm_cfg
+
+            comm_cfg.reject_algo_participation(self.s, self.name)
+            n = problem.num_clients
+            cids = base.sample_clients(k_sample, n, n)
+            # broadcast the lookahead point through the downlink-EF chain
+            # (bitwise = x_look under an identity downlink leg)
+            x_look_b, comm = comm_lib.downlink(
+                comm, x_look, comm_lib.downlink_key(key))
+            g_per = base.grad_k(problem, x_look_b, cids, k_grad, self.k)
+            g_hat, comm = comm_lib.uplink(
+                comm, g_per, cids, comm_lib.momentum_uplink_key(key),
+                leg="mom")
+            scale = comm_lib.participation_scale(comm.mask, cids)
+            g = base.client_mean(state.x, g_hat, weight_scale=scale)
+            comm = comm_lib.account_round(
+                comm, state.x, mom_vectors=1, down_vectors=1)
+        else:
+            s = self.participation(problem)
+            cids = base.sample_clients(k_sample, problem.num_clients, s)
+            g = base.client_mean(
+                state.x, base.grad_k(problem, x_look, cids, k_grad, self.k))
         v = jax.tree.map(lambda vv, gg: m * vv - state.eta * gg, state.v, g)
         x = tm.tree_add(state.x, v)
-        return NesterovState(x=x, v=v, eta=state.eta, r=state.r + 1)
+        return NesterovState(x=x, v=v, eta=state.eta, r=state.r + 1,
+                             comm=comm)
 
     def output(self, state):
         return state.x

@@ -70,11 +70,19 @@ class FedAvg(base.FederatedAlgorithm):
              else self.participation(problem))
         cids = base.sample_clients(k_sample, problem.num_clients, s)
         keys = jax.random.split(k_local, s)
-        y_final = jax.vmap(
-            lambda cid, kk: self._local(problem, state.x, cid, kk, state.eta)
-        )(cids, keys)
+        x_start = state.x
         if comm is not None:
             from repro import comm as comm_lib
+
+            # clients local-step from the downlink reconstruction (bitwise
+            # = state.x under an identity downlink leg) and the same point
+            # is the delta wire reference
+            x_start, comm = comm_lib.downlink(
+                comm, state.x, comm_lib.downlink_key(key))
+        y_final = jax.vmap(
+            lambda cid, kk: self._local(problem, x_start, cid, kk, state.eta)
+        )(cids, keys)
+        if comm is not None:
             from repro.kernels.aggregate import ops as agg_ops
 
             if comm_cfg.ef_enabled(comm) and agg_ops.use_fused_aggregate():
@@ -85,10 +93,10 @@ class FedAvg(base.FederatedAlgorithm):
                 # reconstruct-then-lerp to float tolerance)
                 x, comm = comm_lib.uplink_fused_apply(
                     comm, y_final, cids, comm_lib.comm_key(key), state.x,
-                    -self.server_lr, ref=state.x)
+                    -self.server_lr, ref=x_start)
             else:
                 y_hat, comm = comm_lib.uplink(
-                    comm, y_final, cids, comm_lib.comm_key(key), ref=state.x)
+                    comm, y_final, cids, comm_lib.comm_key(key), ref=x_start)
                 scale = comm_lib.participation_scale(comm.mask, cids)
                 y_mean = base.client_mean(state.x, y_hat, weight_scale=scale)
                 x = tm.tree_lerp(self.server_lr, state.x, y_mean)

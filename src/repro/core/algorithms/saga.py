@@ -79,14 +79,20 @@ class SAGA(base.FederatedAlgorithm):
     def round(self, problem, state, key):
         k_sample, k_grad, k_sample2, k_grad2 = jax.random.split(key, 4)
         comm = state.comm
+        x_b = state.x
         if comm is not None:
+            from repro import comm as comm_lib
             from repro.comm import config as comm_cfg
 
             comm_cfg.reject_algo_participation(self.s, self.name)
+            # clients evaluate gradients at the downlink reconstruction
+            # (bitwise = state.x under an identity downlink leg)
+            x_b, comm = comm_lib.downlink(
+                comm, state.x, comm_lib.downlink_key(key))
         s = (problem.num_clients if comm is not None
              else self.participation(problem))
         cids = base.sample_clients(k_sample, problem.num_clients, s)
-        g_per = base.grad_k(problem, state.x, cids, k_grad, self.k)
+        g_per = base.grad_k(problem, x_b, cids, k_grad, self.k)
         c_i = jax.tree.map(lambda t: t[cids], state.c_table)
         if comm is not None:
             from repro import comm as comm_lib
@@ -116,7 +122,7 @@ class SAGA(base.FederatedAlgorithm):
                 state, cids, masked(g_per, c_i, m))
         else:  # Option II: independent sample + fresh gradients at x^{(r)}
             cids2 = base.sample_clients(k_sample2, problem.num_clients, s)
-            g2 = base.grad_k(problem, state.x, cids2, k_grad2, self.k)
+            g2 = base.grad_k(problem, x_b, cids2, k_grad2, self.k)
             m2 = None
             if comm is not None:
                 from repro import comm as comm_lib

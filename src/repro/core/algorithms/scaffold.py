@@ -63,29 +63,38 @@ class Scaffold(base.FederatedAlgorithm):
         cids = base.sample_clients(k_sample, problem.num_clients, s)
         keys = jax.random.split(k_local, s)
         c_i = jax.tree.map(lambda t: t[cids], state.c_table)
+        x_start, c_start = state.x, state.c
+        if comm is not None:
+            from repro import comm as comm_lib
+
+            # both broadcasts ride the downlink leg: the iterate through
+            # the bidirectional-EF chain, the server variate stateless —
+            # bitwise pass-throughs under an identity downlink leg
+            x_start, comm = comm_lib.downlink(
+                comm, state.x, comm_lib.downlink_key(key))
+            c_start = comm_lib.downlink_second(
+                comm, state.c, comm_lib.second_downlink_key(key))
 
         def local(cid, ci, kk):
             def step(y, k_step):
                 ks = jax.random.split(k_step, self.inner_batch)
                 gs = jax.vmap(lambda k2: problem.grad_oracle(y, cid, k2))(ks)
                 g = tm.tree_mean_leading(gs)
-                corr = jax.tree.map(lambda gg, cc, sc: gg - cc + sc, g, ci, state.c)
+                corr = jax.tree.map(lambda gg, cc, sc: gg - cc + sc, g, ci, c_start)
                 return tm.tree_axpy(-state.eta, corr, y), None
 
-            y, _ = jax.lax.scan(step, state.x, jax.random.split(kk, self.local_steps))
+            y, _ = jax.lax.scan(step, x_start, jax.random.split(kk, self.local_steps))
             ci_new = jax.tree.map(
                 lambda cc, sc, x0_, yf: cc - sc + (x0_ - yf) / (self.local_steps * state.eta),
-                ci, state.c, state.x, y,
+                ci, c_start, x_start, y,
             )
             return y, ci_new
 
         y_final, ci_new = jax.vmap(local)(cids, c_i, keys)
         if comm is not None:
-            from repro import comm as comm_lib
-
             k_comm = comm_lib.comm_key(key)
             y_final, comm = comm_lib.uplink(
-                comm, y_final, cids, k_comm, ref=state.x)
+                comm, y_final, cids, k_comm, ref=x_start)
             # control deltas ride a second uplink (per-row reference, no EF)
             ci_new, comm = comm_lib.uplink(
                 comm, ci_new, cids, comm_lib.second_uplink_key(key),

@@ -67,7 +67,12 @@ class SGD(base.FederatedAlgorithm):
             comm_cfg.reject_algo_participation(self.s, self.name)
             n = problem.num_clients
             cids = base.sample_clients(k_sample, n, n)
-            g_per = base.grad_k(problem, state.x, cids, k_grad, self.k)
+            # broadcast the iterate through the downlink leg: clients
+            # compute at the reconstruction (bitwise = state.x under an
+            # identity downlink); the server step stays at the exact iterate
+            x_b, comm = comm_lib.downlink(
+                comm, state.x, comm_lib.downlink_key(key))
+            g_per = base.grad_k(problem, x_b, cids, k_grad, self.k)
             if comm_cfg.ef_enabled(comm) and agg_ops.use_fused_aggregate():
                 # one fused kernel pass: masked weighted mean + EF residual
                 # update + server step — bitwise identical to the unfused

@@ -427,10 +427,17 @@ class Chain:
                     # handoff: the incoming stage's uplink payloads have
                     # different semantics (iterate deltas vs gradients), and
                     # the residual mass may belong to a trajectory selection
-                    # just discarded
-                    comm_st = comm_st._replace(residual=jax.tree.map(
-                        lambda r: jnp.where(hmd > 0, 0.0, r),
-                        comm_st.residual))
+                    # just discarded; the server-side downlink residual
+                    # resets for the same reason (the selection broadcast is
+                    # full-precision, so clients hold the handoff point
+                    # exactly)
+                    comm_st = comm_st._replace(
+                        residual=jax.tree.map(
+                            lambda r: jnp.where(hmd > 0, 0.0, r),
+                            comm_st.residual),
+                        down_residual=jax.tree.map(
+                            lambda r: jnp.where(hmd > 0, 0.0, r),
+                            comm_st.down_residual))
                     states, anchor, h_kept = ops.handoff(
                         p, states, anchor, sid, hmd, k_sel)
 
@@ -554,9 +561,13 @@ class Chain:
                 states, anchor, comm_st, pstate = carry
                 k_round, k_sel, sid, knd, hmd, scale, k_pol = xs
                 comm_st = comm_cfg.zero_round_bits(comm_st)
-                comm_st = comm_st._replace(residual=jax.tree.map(
-                    lambda r: jnp.where(hmd > 0, 0.0, r),
-                    comm_st.residual))
+                comm_st = comm_st._replace(
+                    residual=jax.tree.map(
+                        lambda r: jnp.where(hmd > 0, 0.0, r),
+                        comm_st.residual),
+                    down_residual=jax.tree.map(
+                        lambda r: jnp.where(hmd > 0, 0.0, r),
+                        comm_st.down_residual))
                 states, anchor, h_kept = ops.handoff(
                     p, states, anchor, sid, hmd, k_sel)
                 mask, pstate = pol.round_select(

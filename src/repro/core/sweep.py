@@ -698,50 +698,13 @@ def _as_stacked_specs(problems):
     return spec_lib.stack_specs(specs), names
 
 
-def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
-              seeds: Sequence[int], etas: Sequence[float],
-              eta_mode: Optional[str] = None, eval_output: bool = True,
-              decay: Optional[dict] = None, comm=None,
-              problems=None, mesh=None,
-              operand_layout: str = "indexed") -> SweepResult:
-    """Run every (seed, η) — and optionally (problem, seed, η) — grid cell
-    in one compiled, vmapped call.
-
-    ``seeds`` are PRNG seeds (cell s uses ``jax.random.PRNGKey(seeds[s])``,
-    so results match per-call ``runner.run``/``Chain.run`` with those keys);
-    ``etas`` follow the stepsize semantics in the module docstring.
-    ``eta_mode`` defaults to "absolute" for plain algorithms; chains only
-    accept "scale" (their grid values are per-stage multipliers), so passing
-    "absolute" with a chain is an error rather than a silent reinterpretation.
-
-    ``problems`` adds the problem axis: a sequence of same-family,
-    same-shaped ``ProblemSpec``s (or one pre-stacked spec from
-    ``spec.stack_specs``) — e.g. a ζ grid, a σ grid, or fresh instances.
-    The whole problems × seeds × stepsizes grid runs through ONE compiled
-    executor; results gain a leading problem axis and ``x0`` may be None
-    (each problem then starts from its own ``spec.x0``), a single point
-    (shared), or a [P, …] stack. Memory note: the problems × seeds axes
-    run as one flattened cells axis (the layout the device-sharded engine
-    partitions — what makes ``mesh=`` bitwise); under the default
-    ``operand_layout="indexed"`` the call carries ONE O(P) stacked spec
-    plus a per-cell problem index, so spec-operand memory does not grow
-    with the seed count. ``operand_layout="stacked"`` keeps the historical
-    O(P·S) repeated-leaf layout — bitwise identical results, kept as the
-    reference layout ``benchmarks/memory_bench.py`` measures against (see
-    the module docstring's memory model).
-
-    ``comm`` (a ``repro.comm.CommConfig``) enables compressed uplinks /
-    partial participation / bits accounting; seed s uses the config's mask
-    schedule derived with ``fold=s`` (``runner.run(..., comm_masks=...)``
-    reproduces any single cell). With a ``problems=`` axis, cell (p, s)
-    uses ``fold=p*len(seeds)+s`` — independent schedules per problem AND
-    seed, still reproducible per cell.
-
-    ``mesh`` (a 1-D ``('grid',)`` device mesh — ``repro.dist.make_grid_mesh``)
-    shards the flattened problems × seeds cells across devices via
-    ``shard_map`` (``repro.dist.grid``): same semantics, same bits, bitwise
-    identical results, one compile per executor structure.
-    """
+def _run_grid_sweep(algo_or_chain, problem, x0, rounds: int, *,
+                    seeds: Sequence[int], etas: Sequence[float],
+                    eta_mode: Optional[str] = None, eval_output: bool = True,
+                    decay: Optional[dict] = None, comm=None,
+                    problems=None, mesh=None,
+                    operand_layout: str = "indexed") -> SweepResult:
+    """The (seed, η) / (problem, seed, η) grid family — see ``run()``."""
     if mesh is not None:
         from repro.dist import grid as dist_grid
 
@@ -937,16 +900,10 @@ def run_method_sweep(methods, problem, x0, rounds: int, *,
                        methods=tuple(m.name for m in methods))
 
 
-def run_decay_sweep(chain, problem, x0, rounds: int, *,
-                    seeds: Sequence[int], decay_factors: Sequence[float],
-                    decay_first: float = 0.3) -> SweepResult:
-    """Sweep the "M-" ``decay_factor`` grid in one compiled, vmapped call.
-
-    Decay multipliers are executor operands ([R] η-scale rows, one per
-    factor), so the whole grid — and any later ``run_sweep``/``Chain.run`` on
-    the same chain — shares ONE compiled executor. Returns a ``SweepResult``
-    whose ``etas`` axis carries the decay factors.
-    """
+def _run_decay_sweep(chain, problem, x0, rounds: int, *,
+                     seeds: Sequence[int], decay_factors: Sequence[float],
+                     decay_first: float = 0.3) -> SweepResult:
+    """The "M-" ``decay_factor`` grid family — see ``run()``."""
     if not isinstance(chain, chain_lib.Chain):
         raise TypeError("run_decay_sweep takes a Chain (wrap plain "
                         "algorithms in a single-stage Chain)")
@@ -1035,26 +992,11 @@ def gather_selection_flags(kept, sel_indices):
         [kept_np[:, fi, idx] for fi, idx in enumerate(sel_indices)], axis=1))
 
 
-def run_fraction_sweep(chain, problem, x0, rounds: int, *,
-                       seeds: Sequence[int], fractions: Sequence[float],
-                       decay: Optional[dict] = None,
-                       mesh=None) -> SweepResult:
-    """Sweep a two-stage chain's ``local_fraction`` (App. I.2 tuning grid)
-    in one compiled, vmapped call.
-
-    The per-round schedule — which stage runs each round, where the
-    Lemma H.2 selection sits, the stage-aligned key streams and η decay —
-    is an executor OPERAND (``Chain.fraction_executor_body``), so the whole
-    fraction grid shares ONE compile, and every (seed, fraction) cell
-    replays ``Chain.run`` on ``chain.with_local_fraction(f)`` with
-    ``PRNGKey(seed)`` — same RNG streams, equal to float tolerance under
-    vmap batching (exactly like ``run_sweep`` vs per-call ``Chain.run``).
-    Results carry seeds × fractions with the fraction
-    grid in the ``etas`` slot (like ``run_decay_sweep``). ``x0=None`` uses
-    the problem spec's own initial point. ``mesh`` shards the seeds ×
-    fractions cells across a ``('grid',)`` device mesh
-    (``repro.dist.grid.run_fraction_sweep_sharded``), bitwise identically.
-    """
+def _run_fraction_sweep(chain, problem, x0, rounds: int, *,
+                        seeds: Sequence[int], fractions: Sequence[float],
+                        decay: Optional[dict] = None,
+                        mesh=None) -> SweepResult:
+    """The two-stage ``local_fraction`` grid family — see ``run()``."""
     if not isinstance(chain, chain_lib.Chain):
         raise TypeError("run_fraction_sweep takes a Chain")
     seeds = tuple(int(s) for s in seeds)
@@ -1086,6 +1028,150 @@ def run_fraction_sweep(chain, problem, x0, rounds: int, *,
         history=history, final_sub=final, x_hat=x_hat, seeds=seeds,
         etas=fractions,
         selected_initial=gather_selection_flags(kept, sel_indices))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepRequest:
+    """One description for every sweep family the engine runs.
+
+    Exactly one grid FAMILY is selected by which axis field is set —
+    ``run()`` dispatches on it:
+
+    * none of the below → the (seed, η) grid over ``etas`` (optionally ×
+      ``problems``), vmapped through one compiled executor per structure;
+    * ``decay_factors`` → the "M-" decay grid (η-scale rows as operands;
+      ``decay_first`` sets the undecayed prefix fraction);
+    * ``fractions`` → the two-stage chain ``local_fraction`` grid (App. I.2;
+      the whole per-round schedule is an operand);
+    * ``policies`` → the client-selection grid (policies × problems ×
+      seeds × etas through the ``lax.switch`` policy operand).
+
+    Shared operand axes and options, identical across families:
+
+    * ``seeds``: PRNG seeds — cell s uses ``jax.random.PRNGKey(seeds[s])``,
+      so any cell is reproducible by the corresponding per-call runner
+      (``runner.run`` / ``Chain.run``) with that key.
+    * ``etas``: stepsize grid. ``eta_mode`` defaults to "absolute" for
+      plain algorithms; chains only accept "scale" (per-stage multipliers)
+      — passing "absolute" with a chain is an error, not a silent
+      reinterpretation. Decay/fraction families carry their own grid in the
+      result's ``etas`` slot instead.
+    * ``problems``: a sequence of same-family, same-shaped ``ProblemSpec``s
+      (or one pre-stacked spec from ``spec.stack_specs``). Problems × seeds
+      flatten to ONE cells axis c = p·S + s; under the default
+      ``operand_layout="indexed"`` the call carries ONE O(P) stacked spec
+      plus an int32 per-cell index ("stacked" keeps the O(P·S)
+      repeated-leaf reference layout, bitwise identical). ``x0`` may be
+      None (each problem starts from its spec's own x0), a single shared
+      point, or a [P, …] stack.
+    * ``comm``: a ``repro.comm.CommPlan`` (or legacy ``CommConfig`` shim)
+      enabling compressed uplinks/downlinks, partial participation, and
+      the bits ledgers. Cell (p, s) uses the plan's mask schedule with
+      ``fold=p·len(seeds)+s`` (``fold=s`` without a problem axis), so
+      ``runner.run(..., comm_masks=...)`` reproduces any cell.
+    * ``mesh``: a 1-D ``('grid',)`` device mesh (``dist.make_grid_mesh``)
+      shard_maps the flattened cells axis — same semantics, same bits,
+      bitwise identical results including the ledgers.
+
+    The legacy entry points (``run_sweep``, ``run_decay_sweep``,
+    ``run_fraction_sweep``, ``selection.run_selection_sweep``) are thin
+    keyword shims constructing a ``SweepRequest`` and calling ``run()`` —
+    same code path, bitwise identical.
+    """
+
+    algo_or_chain: object
+    problem: object
+    x0: object
+    rounds: int
+    seeds: Sequence[int]
+    etas: Sequence[float] = (1.0,)
+    # family-selecting axes (at most one)
+    decay_factors: Optional[Sequence[float]] = None
+    fractions: Optional[Sequence[float]] = None
+    policies: Optional[Sequence] = None
+    # shared options
+    eta_mode: Optional[str] = None
+    eval_output: bool = True
+    decay: Optional[dict] = None
+    decay_first: float = 0.3
+    comm: object = None
+    problems: object = None
+    mesh: object = None
+    operand_layout: str = "indexed"
+
+
+def run(req: SweepRequest) -> SweepResult:
+    """Run the sweep family ``req`` describes — see ``SweepRequest`` for
+    the operand axes. Returns a ``SweepResult`` (``SelectionSweepResult``
+    for the policy family)."""
+    families = [name for name, axis in (
+        ("decay_factors", req.decay_factors),
+        ("fractions", req.fractions),
+        ("policies", req.policies)) if axis is not None]
+    if len(families) > 1:
+        raise ValueError(
+            f"SweepRequest selects at most one sweep family; got "
+            f"{families} together")
+    if req.policies is not None:
+        from repro.selection import sweep as sel_sweep
+
+        return sel_sweep._run_selection_sweep(
+            req.algo_or_chain, req.problem, req.x0, req.rounds,
+            policies=req.policies, seeds=req.seeds, etas=req.etas,
+            eta_mode=req.eta_mode, comm=req.comm, problems=req.problems,
+            eval_output=req.eval_output, mesh=req.mesh)
+    if req.fractions is not None:
+        return _run_fraction_sweep(
+            req.algo_or_chain, req.problem, req.x0, req.rounds,
+            seeds=req.seeds, fractions=req.fractions, decay=req.decay,
+            mesh=req.mesh)
+    if req.decay_factors is not None:
+        return _run_decay_sweep(
+            req.algo_or_chain, req.problem, req.x0, req.rounds,
+            seeds=req.seeds, decay_factors=req.decay_factors,
+            decay_first=req.decay_first)
+    return _run_grid_sweep(
+        req.algo_or_chain, req.problem, req.x0, req.rounds,
+        seeds=req.seeds, etas=req.etas, eta_mode=req.eta_mode,
+        eval_output=req.eval_output, decay=req.decay, comm=req.comm,
+        problems=req.problems, mesh=req.mesh,
+        operand_layout=req.operand_layout)
+
+
+def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
+              seeds: Sequence[int], etas: Sequence[float],
+              eta_mode: Optional[str] = None, eval_output: bool = True,
+              decay: Optional[dict] = None, comm=None,
+              problems=None, mesh=None,
+              operand_layout: str = "indexed") -> SweepResult:
+    """Thin keyword shim over ``run()`` for the (seed, η) grid family —
+    ``SweepRequest`` documents the operand axes."""
+    return run(SweepRequest(
+        algo_or_chain=algo_or_chain, problem=problem, x0=x0, rounds=rounds,
+        seeds=seeds, etas=etas, eta_mode=eta_mode, eval_output=eval_output,
+        decay=decay, comm=comm, problems=problems, mesh=mesh,
+        operand_layout=operand_layout))
+
+
+def run_decay_sweep(chain, problem, x0, rounds: int, *,
+                    seeds: Sequence[int], decay_factors: Sequence[float],
+                    decay_first: float = 0.3) -> SweepResult:
+    """Thin keyword shim over ``run()`` for the decay-factor grid family —
+    ``SweepRequest`` documents the operand axes."""
+    return run(SweepRequest(
+        algo_or_chain=chain, problem=problem, x0=x0, rounds=rounds,
+        seeds=seeds, decay_factors=decay_factors, decay_first=decay_first))
+
+
+def run_fraction_sweep(chain, problem, x0, rounds: int, *,
+                       seeds: Sequence[int], fractions: Sequence[float],
+                       decay: Optional[dict] = None,
+                       mesh=None) -> SweepResult:
+    """Thin keyword shim over ``run()`` for the local-fraction grid family —
+    ``SweepRequest`` documents the operand axes."""
+    return run(SweepRequest(
+        algo_or_chain=chain, problem=problem, x0=x0, rounds=rounds,
+        seeds=seeds, fractions=fractions, decay=decay, mesh=mesh))
 
 
 def best_cell(result: SweepResult):

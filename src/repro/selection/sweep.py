@@ -189,15 +189,30 @@ def run_selection_sweep(algo_or_chain, problem, x0, rounds: int, *,
                         eta_mode: Optional[str] = None, comm=None,
                         problems=None, eval_output: bool = True,
                         mesh=None) -> SelectionSweepResult:
-    """Run the policies × problems × seeds × stepsizes grid in ONE compiled
-    call per executor structure.
+    """Thin keyword shim over ``core.sweep.run()`` for the policy grid
+    family — ``core.sweep.SweepRequest`` documents the operand axes."""
+    return sweep_lib.run(sweep_lib.SweepRequest(
+        algo_or_chain=algo_or_chain, problem=problem, x0=x0, rounds=rounds,
+        seeds=seeds, etas=etas, policies=tuple(policies),
+        eta_mode=eta_mode, comm=comm, problems=problems,
+        eval_output=eval_output, mesh=mesh))
+
+
+def _run_selection_sweep(algo_or_chain, problem, x0, rounds: int, *,
+                         policies, seeds: Sequence[int],
+                         etas: Sequence[float] = (1.0,),
+                         eta_mode: Optional[str] = None, comm=None,
+                         problems=None, eval_output: bool = True,
+                         mesh=None) -> SelectionSweepResult:
+    """The policies × problems × seeds × stepsizes grid family, ONE
+    compiled call per executor structure (see ``core.sweep.run``).
 
     ``policies`` is a sequence of ``SelectionPolicy`` (or policy-name
-    strings); ``problems`` follows ``run_sweep``'s semantics (None keeps a
-    singleton problem axis from ``problem``). ``comm`` configures the
-    compressed-uplink ledger (participation must stay 1.0 — the policy owns
-    who participates). ``mesh`` shards the flattened cells axis
-    (bitwise identical to the vmapped path, including bits_up/bits_down).
+    strings); ``problems`` follows the grid family's semantics (None keeps
+    a singleton problem axis from ``problem``). ``comm`` configures the
+    compressed ledger (participation must stay 1.0 — the policy owns who
+    participates). ``mesh`` shards the flattened cells axis (bitwise
+    identical to the vmapped path, including bits_up/bits_down).
     """
     if mesh is not None:
         from repro.dist import grid as dist_grid

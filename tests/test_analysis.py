@@ -133,6 +133,37 @@ def test_r3_flags_unregistered_tag_name():
     assert "not registered" in vs[0].message
 
 
+def test_r3_flags_unregistered_downlink_stream():
+    # A new broadcast stream must REGISTER its tag — deriving a downlink
+    # key from a homegrown name is exactly the collision R3 exists to catch.
+    vs = _lint(KeyStreamChecker, """
+        import jax
+
+        _MY_DOWNLINK_TAG = 2
+
+        def downlink_key(key):
+            return jax.random.fold_in(key, _MY_DOWNLINK_TAG)
+    """)
+    assert [v.rule for v in vs] == ["R3"]
+    assert "not registered" in vs[0].message
+
+
+def test_r3_passes_registered_downlink_and_momentum_tags():
+    vs = _lint(KeyStreamChecker, """
+        import jax
+
+        _DOWNLINK_KEY_TAG = 2  # registered in REGISTERED_KEY_TAGS
+        _MOMENTUM_UPLINK_TAG = 3  # registered in REGISTERED_KEY_TAGS
+
+        def downlink_key(key):
+            return jax.random.fold_in(key, _DOWNLINK_KEY_TAG)
+
+        def momentum_uplink_key(key):
+            return jax.random.fold_in(key, _MOMENTUM_UPLINK_TAG)
+    """)
+    assert vs == []
+
+
 def test_r3_flags_key_consumed_twice():
     vs = _lint(KeyStreamChecker, """
         import jax

@@ -231,8 +231,10 @@ def test_comm_unaware_algorithm_raises(quad, x0):
     with pytest.raises(TypeError, match="not comm-aware"):
         runner.run(A.ACSA(mu=quad.mu, beta=quad.beta, k=2), quad, x0, 3,
                    jax.random.PRNGKey(0), comm=CommConfig())
+    # ... and the same check fires through a chain stage (ACSA again — ASG
+    # and SSNM graduated to comm-aware, so ACSA is the remaining fixture)
     with pytest.raises(TypeError, match="not comm-aware"):
-        ch = chain.fedchain(A.FedAvg(eta=0.3), A.SSNM(mu_h=quad.mu,
+        ch = chain.fedchain(A.FedAvg(eta=0.3), A.ACSA(mu=quad.mu,
                                                       beta=quad.beta, k=2),
                             name="unaware-chain")
         ch.run(quad, x0, 6, jax.random.PRNGKey(0), comm=CommConfig())
@@ -320,6 +322,195 @@ def test_run_decay_sweep_matches_per_call(quad, x0):
             np.testing.assert_allclose(
                 np.asarray(res.history[i, j]), np.asarray(r.history),
                 rtol=2e-4, atol=1e-6)
+
+
+# ----------------- direction-symmetric CommPlan (PR 9) ----------------------
+
+def test_commplan_identity_legs_bitexact_vs_commconfig(quad, x0):
+    """An all-identity CommPlan (and the CommConfig shim's plan()) bitwise-
+    reproduces the CommConfig trajectories AND bits ledgers — the plan API
+    is a superset, not a fork, of the uplink-only config."""
+    from repro.comm import CommPlan, Leg
+
+    assert CommConfig().plan() == CommPlan()
+    for algo in [A.SGD(eta=0.4, k=4, mu_avg=quad.mu),
+                 A.FedAvg(eta=0.3, local_steps=3, inner_batch=2),
+                 A.Scaffold(eta=0.3)]:
+        ref = runner.run(algo, quad, x0, 8, jax.random.PRNGKey(3),
+                         comm=CommConfig())
+        res = runner.run(algo, quad, x0, 8, jax.random.PRNGKey(3),
+                         comm=CommPlan())
+        for fld in ("history", "x_hat", "bits_up", "bits_down"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, fld)), np.asarray(getattr(res, fld)),
+                err_msg=f"{algo.name}.{fld}")
+    # the equivalence also holds leg-for-leg under a LOSSY uplink: the shim
+    # maps compressor/bits/k/EF onto the uplink leg verbatim
+    cfg = CommConfig(compressor="qsgd", qsgd_bits=4, error_feedback=True,
+                     participation=0.5)
+    plan = CommPlan(uplink=Leg("qsgd", qsgd_bits=4, error_feedback=True),
+                    participation=0.5)
+    algo = A.SGD(eta=0.4, k=4, mu_avg=quad.mu)
+    ref = runner.run(algo, quad, x0, 8, jax.random.PRNGKey(3), comm=cfg)
+    res = runner.run(algo, quad, x0, 8, jax.random.PRNGKey(3), comm=plan)
+    np.testing.assert_array_equal(np.asarray(ref.history),
+                                  np.asarray(res.history))
+    np.testing.assert_array_equal(np.asarray(ref.bits_up),
+                                  np.asarray(res.bits_up))
+
+
+def test_commplan_identity_bitexact_on_sharded_engine():
+    """CommConfig vs identity CommPlan on BOTH engines: the vmapped sweep
+    and the 1-device shard_map mesh agree bitwise, ledgers included."""
+    from repro.comm import CommPlan
+    from repro.data import spec as spec_lib
+    from repro.dist import make_grid_mesh
+
+    specs = [spec_lib.quadratic_spec(
+        jax.random.PRNGKey(0), num_clients=N_CLIENTS, dim=DIM, mu=0.1,
+        beta=1.0, zeta=z, sigma=0.2, sigma_f=0.05) for z in (0.0, 1.0)]
+    algo = A.SGD(eta=0.4, k=3, mu_avg=0.1)
+    runs = {}
+    for tag, kw in [("cfg-vmap", dict(comm=CommConfig())),
+                    ("plan-vmap", dict(comm=CommPlan())),
+                    ("cfg-mesh", dict(comm=CommConfig(),
+                                      mesh=make_grid_mesh(1))),
+                    ("plan-mesh", dict(comm=CommPlan(),
+                                       mesh=make_grid_mesh(1)))]:
+        runs[tag] = sweep.run_sweep(algo, None, None, 6, seeds=(0, 1),
+                                    etas=(0.3,), problems=specs, **kw)
+    ref = runs.pop("cfg-vmap")
+    for tag, res in runs.items():
+        for fld in ("history", "bits_up", "bits_down"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, fld)), np.asarray(getattr(res, fld)),
+                err_msg=f"{tag}.{fld}")
+
+
+def test_commplan_leg_swap_is_operand_only(quad, x0):
+    """Swapping uplink/downlink compressor pairs or the momentum leg at
+    fixed shapes re-traces NOTHING: every leg's params ride the scanned
+    CommState as operand data (only the uplink-EF residual table's shape is
+    trace-time, held fixed here via error_feedback=True throughout)."""
+    from repro.comm import CommPlan, Leg
+
+    algo = A.NesterovSGD(mu=quad.mu, beta=quad.beta, k=2, name="cp-asg")
+    runner.run(algo, quad, x0, 6, jax.random.PRNGKey(0),
+               comm=CommPlan(uplink=Leg(error_feedback=True)))
+    assert runner.TRACE_COUNTS["runner-comm/cp-asg"] >= 1
+    with runner.assert_no_retrace(what="CommPlan leg grid"):
+        for plan in [
+            CommPlan(uplink=Leg("qsgd", qsgd_bits=4, error_feedback=True)),
+            CommPlan(uplink=Leg("topk", spars_k=2, error_feedback=True),
+                     downlink=Leg("qsgd", qsgd_bits=8)),
+            CommPlan(uplink=Leg("qsgd", qsgd_bits=6, error_feedback=True),
+                     downlink=Leg("randk", spars_k=4),
+                     momentum=Leg("qsgd", qsgd_bits=2)),
+            CommPlan(uplink=Leg("randk", spars_k=6, error_feedback=True),
+                     downlink=Leg("topk", spars_k=2),
+                     momentum=Leg("topk", spars_k=4), participation=0.5),
+        ]:
+            runner.run(algo, quad, x0, 6, jax.random.PRNGKey(0), comm=plan)
+
+
+def test_asg_ssnm_identity_comm_matches_plain(quad, x0):
+    """The newly comm-aware accelerated methods keep guarantee (a): identity
+    legs + full participation reproduce the plain executors. ASG is bitwise;
+    SSNM's round math short-circuits bitwise too (every wire op is an
+    identity ``where``), but its gradient producer gains the compressor as a
+    second consumer, which changes XLA's fusion of the SHARED subgraph by an
+    ulp — so SSNM compares at float tolerance. The parity this PR actually
+    guarantees — CommPlan vs CommConfig on one executor — stays bitwise
+    (test_commplan_identity_legs_bitexact_vs_commconfig)."""
+    asg = A.NesterovSGD(mu=quad.mu, beta=quad.beta, k=2)
+    plain = runner.run(asg, quad, x0, 10, jax.random.PRNGKey(3))
+    comm = runner.run(asg, quad, x0, 10, jax.random.PRNGKey(3),
+                      comm=CommConfig())
+    np.testing.assert_array_equal(np.asarray(plain.history),
+                                  np.asarray(comm.history))
+    np.testing.assert_array_equal(np.asarray(plain.x_hat),
+                                  np.asarray(comm.x_hat))
+
+    ssnm = A.SSNM(mu_h=quad.mu, beta=quad.beta, k=2)
+    plain = runner.run(ssnm, quad, x0, 10, jax.random.PRNGKey(3))
+    comm = runner.run(ssnm, quad, x0, 10, jax.random.PRNGKey(3),
+                      comm=CommConfig())
+    np.testing.assert_allclose(np.asarray(plain.history),
+                               np.asarray(comm.history),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(plain.x_hat),
+                               np.asarray(comm.x_hat),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_commplan_bidirectional_bits_closed_forms(quad, x0):
+    """Downlinks bill the SAME per-leaf closed forms as uplinks, evaluated
+    at the downlink leg's params; momentum uplinks bill at the momentum
+    leg's params (ASG: 1 each way, SSNM: 2 each way)."""
+    from repro.comm import CommPlan, Leg
+
+    idx_bits = math.ceil(math.log2(DIM))
+    qsgd4 = 32.0 + DIM * 5.0
+    plan = CommPlan(uplink=Leg("qsgd", qsgd_bits=4),
+                    downlink=Leg("topk", spars_k=2), participation=0.5)
+    res = runner.run(A.SGD(eta=0.4, k=4, mu_avg=quad.mu), quad, x0, 5,
+                     jax.random.PRNGKey(0), comm=plan)
+    s_r = plan.clients_per_round(N_CLIENTS)
+    np.testing.assert_array_equal(np.asarray(res.bits_up),
+                                  np.full(5, s_r * qsgd4))
+    np.testing.assert_array_equal(np.asarray(res.bits_down),
+                                  np.full(5, s_r * 2.0 * (32 + idx_bits)))
+
+    asg = runner.run(A.NesterovSGD(mu=quad.mu, beta=quad.beta, k=2), quad,
+                     x0, 5, jax.random.PRNGKey(0),
+                     comm=CommPlan(momentum=Leg("qsgd", qsgd_bits=4),
+                                   downlink=Leg("qsgd", qsgd_bits=4)))
+    np.testing.assert_array_equal(np.asarray(asg.bits_up),
+                                  np.full(5, N_CLIENTS * qsgd4))
+    np.testing.assert_array_equal(np.asarray(asg.bits_down),
+                                  np.full(5, N_CLIENTS * qsgd4))
+
+    ssnm = runner.run(A.SSNM(mu_h=quad.mu, beta=quad.beta, k=2), quad, x0, 5,
+                      jax.random.PRNGKey(0),
+                      comm=CommPlan(momentum=Leg("qsgd", qsgd_bits=4)))
+    np.testing.assert_array_equal(np.asarray(ssnm.bits_up),
+                                  np.full(5, N_CLIENTS * 2.0 * qsgd4))
+    np.testing.assert_array_equal(np.asarray(ssnm.bits_down),
+                                  np.full(5, N_CLIENTS * 2.0 * 32.0 * DIM))
+
+
+def test_bidirectional_ef_converges_across_chain(quad, x0):
+    """Lossy BOTH ways (uplink EF + the always-on downlink EF chain) across
+    a chained handoff stays finite and converges — both residual streams
+    reset at the stage boundary."""
+    from repro.comm import CommPlan, Leg
+
+    ch = chain.fedchain(
+        A.FedAvg(eta=0.3, local_steps=2, inner_batch=2),
+        A.SGD(eta=0.3, k=4, mu_avg=quad.mu), selection_k=4,
+        name="bidir-ef-chain")
+    plan = CommPlan(uplink=Leg("topk", spars_k=4, error_feedback=True),
+                    downlink=Leg("topk", spars_k=4))
+    res = ch.run(quad, x0, 20, jax.random.PRNGKey(0), comm=plan)
+    h = np.asarray(res.history)
+    assert np.isfinite(h).all()
+    assert h[-1] < h[0]
+
+
+def test_commplan_validation():
+    from repro.comm import CommPlan, Leg
+
+    with pytest.raises(ValueError, match="compressor"):
+        Leg("gzip")
+    with pytest.raises(ValueError, match="participation"):
+        CommPlan(participation=0.0)
+    # every leg's sparsifier is dimension-checked, with the leg named
+    with pytest.raises(ValueError, match=r"exceeds the parameter.*downlink"):
+        CommPlan(downlink=Leg("topk", spars_k=DIM + 1)).init_state(
+            N_CLIENTS, DIM)
+    with pytest.raises(ValueError, match=r"exceeds the parameter.*momentum"):
+        CommPlan(momentum=Leg("randk", spars_k=DIM + 1)).init_state(
+            N_CLIENTS, DIM)
 
 
 def test_logreg_zeta_estimation():

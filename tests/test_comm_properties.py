@@ -110,6 +110,46 @@ def test_identity_is_bitwise_noop():
     assert bool(jnp.all(out == v))
 
 
+@given(dims=st.lists(st.integers(1, 64), min_size=1, max_size=5),
+       bits=st.integers(1, 8), k=st.integers(1, 64),
+       compressor=st.sampled_from(["identity", "qsgd", "topk", "randk"]))
+@settings(max_examples=50, deadline=None)
+def test_downlink_bits_per_leaf_closed_form(dims, bits, k, compressor):
+    """Downlink bits equal the sum of per-leaf closed forms evaluated at the
+    downlink leg's params — written out here INDEPENDENTLY of the library's
+    arithmetic, on degenerate pytrees (1-element leaves, repeated dims):
+
+      identity: 32·d     qsgd_b: 32 + d·(b+1)     top/rand-k: k·(32+⌈log₂d⌉)
+
+    and an identity leg reduces to the full-precision 32·Σ_l d_l broadcast
+    exactly (the pre-plan hardcoded form) — exact integers in float32."""
+    import math
+
+    from repro.comm.config import downlink_bits_per_client
+
+    params = _params(compressor, bits=bits, k=min(k, min(dims)))
+    kk = min(k, min(dims))
+
+    def leaf_bits(d):
+        if compressor == "identity":
+            return 32.0 * d
+        if compressor == "qsgd":
+            return 32.0 + d * (bits + 1.0)
+        idx = float(max(1, math.ceil(math.log2(d)))) if d > 1 else 1.0
+        return kk * (32.0 + idx)
+
+    expect = sum(leaf_bits(d) for d in dims)
+    # a pytree with one [d] leaf per entry — dict keys keep insertion order
+    tree = {f"l{i}": jnp.zeros((d,), jnp.float32)
+            for i, d in enumerate(dims)}
+    got = float(downlink_bits_per_client(params, tree))
+    assert got == expect
+    # tuple-of-dims and int (single-leaf) signatures agree with the pytree
+    assert float(downlink_bits_per_client(params, tuple(dims))) == expect
+    if len(dims) == 1:
+        assert float(downlink_bits_per_client(params, dims[0])) == expect
+
+
 def test_compressor_switch_is_operand_data():
     """One jitted function serves all four compressors: comp_id is data."""
     v = jax.random.normal(jax.random.PRNGKey(0), (2, 32))
