@@ -31,6 +31,12 @@ are machine- and cache-noisy, so only warm metrics gate:
   EF vs the unidirectional baselines), plus a named zero-retrace gate on
   ``bidirectional.warm_retraces`` (the harness itself raises if any leg
   swap re-traces)
+* ``BENCH_obs.json``: ``warm.taps_off_s`` / ``warm.taps_on_s`` through the
+  standard warm gate, PLUS the named telemetry-overhead gate — the
+  taps-on/taps-off warm ratio (recomputed from the min-of-samples warm
+  times) must stay ≤ 1.15× and the harness's recorded warm re-trace count
+  must be exactly 0 (the harness itself also asserts the taps-off run is
+  bitwise identical to the taps-on history before timing)
 
 The warm metrics are tens of milliseconds, where a noisy-neighbor scheduler
 blip alone can exceed the threshold — so each harness runs ``--samples``
@@ -66,6 +72,12 @@ MEMORY_JSON = os.path.join(ROOT, "BENCH_memory.json")
 SELECTION_JSON = os.path.join(ROOT, "BENCH_selection.json")
 ANALYSIS_JSON = os.path.join(ROOT, "BENCH_analysis.json")
 COMM_JSON = os.path.join(ROOT, "BENCH_comm.json")
+OBS_JSON = os.path.join(ROOT, "BENCH_obs.json")
+
+# the acceptance bound on the telemetry round taps: a taps-on warm grid may
+# cost at most this multiple of the taps-off one (O(N·d) tap reductions vs
+# an O(N·d²) round body — parity-ish, with headroom for scheduler noise)
+OBS_TAPS_CEILING = 1.15
 
 
 def _load(path):
@@ -157,6 +169,36 @@ def _warm_metrics_comm(doc):
             for m, v in doc["bidirectional"]["plans"].items()}
 
 
+def _warm_metrics_obs(doc):
+    """Both legs of the telemetry benchmark through the standard warm gate;
+    the on/off RATIO gets its own named gate below."""
+    return {"obs/warm/taps_off_s": doc["warm"]["taps_off_s"],
+            "obs/warm/taps_on_s": doc["warm"]["taps_on_s"]}
+
+
+def _obs_overhead_failures(fresh_metrics, fresh_doc):
+    """Named telemetry-overhead gates on BENCH_obs.json. The ratio is
+    recomputed from the min-of-samples warm times (each min estimates the
+    true cost of its own path, so their quotient is the cleanest overhead
+    estimate this machine can produce)."""
+    failures = []
+    off = fresh_metrics.get("obs/warm/taps_off_s")
+    on = fresh_metrics.get("obs/warm/taps_on_s")
+    if off and on is not None:
+        ratio = on / off
+        if ratio > OBS_TAPS_CEILING:
+            failures.append(
+                f"obs/taps_ratio: taps-on warm grid {ratio:.3f}x the "
+                f"taps-off one > ceiling {OBS_TAPS_CEILING}x (the round "
+                f"taps must stay in-scan, not host callbacks)")
+    warm = fresh_doc.get("warm_retraces")
+    if warm != 0:
+        failures.append(
+            f"obs/warm_retraces: {warm} != 0 (toggling telemetry must land "
+            f"on a cached executor after the first compile of each variant)")
+    return failures
+
+
 def _comm_retrace_failures(fresh_doc):
     """Named zero-retrace gate on the recorded bidirectional counters."""
     warm = fresh_doc["bidirectional"].get("warm_retraces")
@@ -234,8 +276,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     baselines = [SWEEP_JSON, PROBLEM_JSON, MEMORY_JSON, SELECTION_JSON,
-                 ANALYSIS_JSON, COMM_JSON] + ([DIST_JSON] if args.dist
-                                              else [])
+                 ANALYSIS_JSON, COMM_JSON, OBS_JSON] + ([DIST_JSON]
+                                                        if args.dist else [])
     missing = [p for p in baselines if not os.path.exists(p)]
     if missing:
         print(f"no committed baseline(s): {missing}", file=sys.stderr)
@@ -246,23 +288,26 @@ def main(argv=None) -> None:
     sel_raw, sel_base = _load(SELECTION_JSON)
     analysis_raw, analysis_base = _load(ANALYSIS_JSON)
     comm_raw, comm_base = _load(COMM_JSON)
+    obs_raw, obs_base = _load(OBS_JSON)
     base = {**_warm_metrics_sweep(sweep_base),
             **_warm_metrics_problem(prob_base),
             **_warm_metrics_memory(mem_base),
             **_warm_metrics_selection(sel_base),
-            **_warm_metrics_comm(comm_base)}
+            **_warm_metrics_comm(comm_base),
+            **_warm_metrics_obs(obs_base)}
     dist_raw = None
     if args.dist:
         dist_raw, dist_base = _load(DIST_JSON)
         base.update(_warm_metrics_dist(dist_base))
 
     from benchmarks import (
-        comm_frontier, memory_bench, problem_sweep, selection_sweep,
-        sweep_bench)
+        comm_frontier, memory_bench, obs_bench, problem_sweep,
+        selection_sweep, sweep_bench)
 
     fresh: dict = {}
     mem_fresh: dict = {}
     comm_fresh: dict = {}
+    obs_fresh: dict = {}
     try:
         for _ in range(max(1, args.samples)):
             # each sample must pay its own cold trace: problem_sweep asserts
@@ -274,16 +319,19 @@ def main(argv=None) -> None:
             memory_bench.main(quick=True)  # asserts bitwise + 0 re-traces
             selection_sweep.main(quick=True)  # raises on any policy retrace
             comm_frontier.main(quick=True)  # raises on any leg-swap retrace
+            obs_bench.main(quick=True)  # asserts bitwise taps-off parity
             _, sweep_fresh = _load(SWEEP_JSON)
             _, prob_fresh = _load(PROBLEM_JSON)
             _, mem_fresh = _load(MEMORY_JSON)
             _, sel_fresh = _load(SELECTION_JSON)
             _, comm_fresh = _load(COMM_JSON)
+            _, obs_fresh = _load(OBS_JSON)
             sample = {**_warm_metrics_sweep(sweep_fresh),
                       **_warm_metrics_problem(prob_fresh),
                       **_warm_metrics_memory(mem_fresh),
                       **_warm_metrics_selection(sel_fresh),
-                      **_warm_metrics_comm(comm_fresh)}
+                      **_warm_metrics_comm(comm_fresh),
+                      **_warm_metrics_obs(obs_fresh)}
             if args.dist:
                 from benchmarks import dist_scaling
 
@@ -313,6 +361,8 @@ def main(argv=None) -> None:
                 f.write(analysis_raw)
             with open(COMM_JSON, "w") as f:
                 f.write(comm_raw)
+            with open(OBS_JSON, "w") as f:
+                f.write(obs_raw)
             if dist_raw is not None:
                 with open(DIST_JSON, "w") as f:
                     f.write(dist_raw)
@@ -320,6 +370,7 @@ def main(argv=None) -> None:
     failures += _memory_byte_failures(mem_base, mem_fresh)
     failures += _analysis_const_failures(analysis_base, analysis_fresh)
     failures += _comm_retrace_failures(comm_fresh)
+    failures += _obs_overhead_failures(fresh, obs_fresh)
     print("\n".join(rows))
     if failures:
         print("\nbench-gate FAILED:", file=sys.stderr)

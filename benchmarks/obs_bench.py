@@ -1,0 +1,162 @@
+"""Telemetry round-tap overhead benchmark: taps-on vs taps-off warm grids.
+
+The obs subsystem's Layer-1 round taps (``repro.obs.Telemetry``) ride the
+compiled sweep executors as extra ``lax.scan`` outputs. This harness prices
+them on a comm-enabled quadratic grid whose taps exercise every channel —
+update/gradient norms, all three ``CommPlan`` error-feedback residual legs,
+participation counts and the per-leg bits passthrough:
+
+* warm wall time of the taps-off grid vs the taps-on grid (min over
+  repeats; the per-round taps are O(N·d) reductions against an O(N·d²)
+  round body, so the ratio must stay inside the 1.15× regression gate),
+* zero warm re-traces on BOTH paths (``runner.TRACE_COUNTS``),
+* taps-off results bitwise identical to a run without telemetry threading
+  (``telemetry=None`` reuses the pre-obs cache keys, so this is the same
+  executor — asserted via the taps-on/off history comparison),
+* an executor event log (``repro.obs.events``) recorded around the cold
+  compiles — the JSONL artifact the CI observability job uploads.
+
+Writes ``BENCH_obs.json`` at the repo root. ``--check`` asserts the
+backend-robust invariants (bitwise parity, zero warm retraces, a loose
+overhead bound) without absolute-time gates — the CI miniature; the tight
+1.15× gate runs against committed baselines in
+``benchmarks/check_regression.py``.
+
+  PYTHONPATH=src python -m benchmarks.obs_bench [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import algorithms as A, runner, sweep
+from repro.data import problems
+from repro.obs import Telemetry, events as obs_events
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+SEEDS = (0, 1, 2)
+ETAS = (0.3, 0.5)
+REPEATS = 5
+CHECK_RATIO = 1.5  # loose CI bound; the 1.15x gate lives in check_regression
+
+
+def _plan():
+    """All three legs compressed with error feedback plus partial
+    participation — every tap channel is nonzero."""
+    from repro.comm.config import CommPlan, Leg
+
+    leg = Leg(compressor="qsgd", qsgd_bits=4, error_feedback=True)
+    return CommPlan(uplink=leg, downlink=leg, participation=0.5)
+
+
+def _walled(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out.history)
+    return out, time.perf_counter() - t0
+
+
+def main(quick: bool = True, check: bool = False):
+    rounds = 20 if quick else 80
+    dim = 48 if quick else 96
+    spec = problems.quadratic_spec(
+        jax.random.PRNGKey(5), num_clients=8, dim=dim, mu=0.1, beta=1.0,
+        zeta=1.0, sigma=0.2)
+    algo = A.SGD(eta=0.4, k=8, mu_avg=0.1)
+    tel = Telemetry(grad_norm=True)
+    plan = _plan()
+
+    def grid(telemetry):
+        return sweep.run_sweep(algo, spec, spec.x0, rounds, seeds=SEEDS,
+                               etas=ETAS, comm=plan, telemetry=telemetry)
+
+    runner.clear_executor_cache()  # both variants pay their own cold compile
+    log_path = os.path.join(ROOT, "obs_events.jsonl")
+    if os.path.exists(log_path):
+        os.remove(log_path)
+    with obs_events.recording(log_path):
+        base, _ = _walled(lambda: grid(None))
+        tapped, _ = _walled(lambda: grid(tel))
+        compile_events = [r for r in obs_events.RECORDER.records
+                          if r["kind"] == "compile"]
+
+    match = bool(np.array_equal(np.asarray(base.history),
+                                np.asarray(tapped.history))
+                 and np.array_equal(np.asarray(base.bits_up),
+                                    np.asarray(tapped.bits_up)))
+    if not match:
+        raise AssertionError(
+            "taps-on sweep results diverged bitwise from the taps-off run")
+
+    warm_off = warm_on = float("inf")
+    with runner.assert_no_retrace(what="the warm taps-on/off re-runs"):
+        for _ in range(REPEATS):
+            _, dt = _walled(lambda: grid(None))
+            warm_off = min(warm_off, dt)
+            _, dt = _walled(lambda: grid(tel))
+            warm_on = min(warm_on, dt)
+    ratio = warm_on / warm_off
+
+    taps = tapped.diagnostics
+    report = {
+        "grid": {"seeds": list(SEEDS), "etas": list(ETAS), "rounds": rounds,
+                 "dim": dim, "comm": plan.name},
+        "warm": {"taps_off_s": warm_off, "taps_on_s": warm_on},
+        "overhead": {"taps_ratio": ratio},
+        "taps": sorted(taps),
+        "compile_events": len(compile_events),
+        "match_bitwise": match,
+        "warm_retraces": 0,
+    }
+    with open(os.path.join(ROOT, "BENCH_obs.json"), "w") as f:
+        json.dump(report, f, indent=2)
+
+    rows = [
+        emit("obs/warm/taps_off", warm_off * 1e6, f"rounds={rounds}"),
+        emit("obs/warm/taps_on", warm_on * 1e6,
+             f"ratio={ratio:.3f}x;taps={len(taps)}"),
+    ]
+
+    if check:
+        # backend-robust invariants only — these hold on cpu-ref AND
+        # pallas-interpret CI legs; the tight 1.15x gate needs committed
+        # baselines (check_regression.py)
+        expected = {"update_norm", "grad_norm", "participation", "bits_up",
+                    "bits_down", "residual_up_norm", "residual_down_norm",
+                    "residual_mom_norm"}
+        missing = expected - set(taps)
+        if missing:
+            raise AssertionError(f"obs/taps: missing channels {missing}")
+        for k in ("residual_up_norm", "residual_down_norm"):
+            if not np.any(np.asarray(taps[k]) > 0.0):
+                raise AssertionError(
+                    f"obs/taps: {k} is identically zero under an "
+                    f"error-feedback plan — the EF leg is not being tapped")
+        if ratio > CHECK_RATIO:
+            raise AssertionError(
+                f"obs/warm_ratio: taps-on warm path {ratio:.2f}x slower "
+                f"than taps-off (loose CI gate {CHECK_RATIO}x)")
+        if not compile_events:
+            raise AssertionError(
+                "obs/events: the cold compiles emitted no compile events — "
+                "the recorder hook is dead")
+        print(f"obs-bench check OK: ratio={ratio:.2f}x <= {CHECK_RATIO}x, "
+              f"{len(taps)} tap channels, {len(compile_events)} compile "
+              f"events, 0 warm re-traces, bitwise match")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale rounds")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the backend-robust invariants (CI leg)")
+    args = ap.parse_args()
+    main(quick=not args.full, check=args.check)

@@ -2,16 +2,28 @@
 roofline/kernel reports. Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
-                                          [--devices N]
+                                          [--devices N] [--profile]
 
 ``--devices N`` forces N fake XLA host devices (CPU) BEFORE the first JAX
 import, so the sharded sweep paths (``repro.dist``) are runnable on
 CPU-only machines and CI; harnesses pick the debug mesh up via
 ``repro.dist.auto_grid_mesh``.
+
+``--profile`` runs the obs-instrumented variant (``repro.obs``): a run
+manifest (backend, devices, XLA flags, config hash) is written to
+``BENCH_manifest.json`` next to the ``BENCH_*.json`` numbers, an event
+recorder captures every executor compile and cache op to
+``obs_events.jsonl``, and each harness runs TWICE inside profiler-annotated
+phases — cold (carries the compiles) then warm (only what survives the
+executor cache; harnesses that clear it re-pay theirs) — the uniform
+compile-vs-warm breakdown. ``--profile-dir DIR`` additionally
+captures a ``jax.profiler`` trace. Summarize the event log afterwards with
+``python -m repro.obs report``.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import os
 import sys
 import time
@@ -40,6 +52,11 @@ def main(argv=None) -> None:
     ap.add_argument("--devices", type=int, default=0,
                     help="force N fake XLA host devices (before JAX import) "
                     "so sharded benchmarks run on CPU-only machines")
+    ap.add_argument("--profile", action="store_true",
+                    help="obs-instrumented run: BENCH_manifest.json, event "
+                    "log, and a cold/warm phase per harness (each runs twice)")
+    ap.add_argument("--profile-dir", default="",
+                    help="with --profile: capture a jax.profiler trace here")
     args = ap.parse_args(argv)
     if args.devices:
         _force_host_devices(args.devices)
@@ -47,9 +64,9 @@ def main(argv=None) -> None:
     from benchmarks import (
         ablation_selection, analysis_audit, appj1_large_k, comm_frontier,
         dist_scaling, fig2_convergence, kernels_bench, lower_bound_bench,
-        memory_bench, problem_sweep, roofline, selection_sweep, sweep_bench,
-        table1_strongly_convex, table2_general_convex, table3_nonconvex,
-        table3_vision, table4_pl,
+        memory_bench, obs_bench, problem_sweep, roofline, selection_sweep,
+        sweep_bench, table1_strongly_convex, table2_general_convex,
+        table3_nonconvex, table3_vision, table4_pl,
     )
 
     harnesses = {
@@ -70,6 +87,7 @@ def main(argv=None) -> None:
         "sweep": sweep_bench.main,  # vmapped grid vs per-call loop
         "problem_sweep": problem_sweep.main,  # ζ×σ problem grid, one compile
         "kernels": kernels_bench.main,  # Pallas kernels
+        "obs": obs_bench.main,  # telemetry round-tap overhead
         "analysis_audit": analysis_audit.main,  # lint + jaxpr const audit
         "roofline": roofline.main,  # deliverable (g) report
     }
@@ -81,18 +99,59 @@ def main(argv=None) -> None:
         print(f"unknown benchmark name(s): {', '.join(unknown)}\n"
               f"valid names: {', '.join(sorted(harnesses))}", file=sys.stderr)
         sys.exit(2)
+    profile_ctx = contextlib.nullcontext()
+    if args.profile:
+        from repro.obs import events as obs_events
+        from repro.obs import profile as obs_profile
+
+        manifest = obs_profile.write_manifest()
+        print(f"# manifest {obs_profile.MANIFEST_PATH} "
+              f"config_hash={manifest['config_hash']}", file=sys.stderr)
+        obs_events.install(obs_events.EventRecorder(obs_events.DEFAULT_PATH))
+        if args.profile_dir:
+            import jax
+
+            profile_ctx = jax.profiler.trace(args.profile_dir)
+
     print("name,us_per_call,derived")
     failures = 0
-    for name, fn in harnesses.items():
-        if only and name not in only:
-            continue
-        t0 = time.time()
-        try:
-            fn(quick=not args.full)
-            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
-        except Exception as e:  # noqa: BLE001
-            failures += 1
-            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+    with profile_ctx:
+        for name, fn in harnesses.items():
+            if only and name not in only:
+                continue
+            t0 = time.time()
+            try:
+                if args.profile:
+                    from repro.obs import profile as obs_profile
+
+                    # cold carries the harness's compiles; the warm repeat
+                    # shows what survives the executor cache — the uniform
+                    # compile-vs-warm split
+                    with obs_profile.phase(f"{name}/cold") as cold:
+                        fn(quick=not args.full)
+                    with obs_profile.phase(f"{name}/warm") as warm:
+                        fn(quick=not args.full)
+                    print(f"# {name} cold {cold['seconds']:.1f}s "
+                          f"({cold['traces']} traces), warm "
+                          f"{warm['seconds']:.1f}s ({warm['traces']} traces)",
+                          file=sys.stderr)
+                else:
+                    fn(quick=not args.full)
+                    print(f"# {name} done in {time.time()-t0:.1f}s",
+                          file=sys.stderr)
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+    if args.profile:
+        from repro.obs import events as obs_events
+
+        rec = obs_events.RECORDER
+        obs_events.uninstall()
+        if rec is not None:
+            rec.close()
+            print(f"# event log: {rec.path} ({len(rec.records)} events); "
+                  f"summarize with `python -m repro.obs report`",
+                  file=sys.stderr)
     if failures:
         sys.exit(1)
 

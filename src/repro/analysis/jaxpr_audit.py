@@ -3,7 +3,8 @@
 The lint (Layer 1) argues operand discipline from source; this module
 PROVES it dynamically. It runs tiny spec-backed workloads through every
 cached executor family — runner / chain / sweep (indexed layout) /
-selection, on BOTH the vmapped and sharded engines — with
+selection, on BOTH the vmapped and sharded engines, plus the
+telemetry-enabled (``repro.obs.Telemetry``) sweep variants — with
 ``runner.AUDIT_SINK`` armed, so each top-level executor call records
 ``(cache_key, fn, args)``. Each recorded executor is then re-traced on its
 REAL operands with ``jax.make_jaxpr`` and the ``ClosedJaxpr`` consts are
@@ -60,11 +61,13 @@ def _workloads() -> Dict[str, callable]:
     """name → thunk exercising one executor family on tiny operands."""
     spec, spec2, algo, ch, comm = _tiny_context()
     from repro.core import sweep
+    from repro.obs import Telemetry
     from repro.selection import SelectionPolicy, run_selection_sweep
 
     key = jax.random.PRNGKey(7)
     pols = (SelectionPolicy("uniform", participation=0.5),
             SelectionPolicy("ucb", participation=0.5, ucb_c=0.5))
+    tel = Telemetry(grad_norm=True)  # every tap channel on
 
     def _mesh():
         from repro.dist import make_grid_mesh
@@ -115,6 +118,20 @@ def _workloads() -> Dict[str, callable]:
         "dist-selection": lambda: run_selection_sweep(
             ch, None, None, ROUNDS, policies=pols, problems=[spec],
             seeds=_SEEDS, etas=(1.0,), mesh=_mesh()),
+        # telemetry-enabled variants: the round taps ride the scan as extra
+        # outputs and MUST NOT smuggle operands in as consts either
+        "sweep-telemetry": lambda: sweep.run_sweep(
+            algo, None, None, ROUNDS, seeds=_SEEDS, etas=_ETAS,
+            problems=[spec, spec2], comm=comm, telemetry=tel),
+        "sweep-chain-telemetry": lambda: sweep.run_sweep(
+            ch, None, None, ROUNDS, seeds=_SEEDS, etas=_ETAS,
+            problems=[spec, spec2], comm=comm, telemetry=tel),
+        "selection-telemetry": lambda: run_selection_sweep(
+            algo, None, None, ROUNDS, policies=pols, problems=[spec],
+            seeds=_SEEDS, etas=(1.0,), telemetry=tel),
+        "dist-telemetry": lambda: sweep.run_sweep(
+            algo, None, None, ROUNDS, seeds=_SEEDS, etas=_ETAS,
+            problems=[spec, spec2], comm=comm, mesh=_mesh(), telemetry=tel),
     }
 
 

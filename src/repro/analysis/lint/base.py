@@ -3,9 +3,10 @@
 A *traced scope* is a function whose Python body executes under a JAX trace
 — anything passed (by name or as a lambda) to ``jax.jit`` / ``lax.scan`` /
 ``jax.vmap`` / ``shard_map`` / ``pallas_call`` / control-flow combinators,
-anything decorated with ``jit``, anything that bumps ``TRACE_COUNTS`` (the
-repo's trace-time marker), and anything lexically nested inside one of
-those. The detection over-approximates (a name collision marks an unrelated
+anything decorated with ``jit``, anything that bumps a ``TRACE_WHITELIST``
+counter (``TRACE_COUNTS``, the repo's trace-time marker, and
+``TRACE_EVENTS``, the obs event sink mirrored beside it), and anything
+lexically nested inside one of those. The detection over-approximates (a name collision marks an unrelated
 same-named def) — acceptable for a lint whose false positives are one
 ``# repro: allow[Rn]`` away.
 
@@ -113,14 +114,22 @@ def local_bindings(fn_node) -> Set[str]:
     return out
 
 
+# the ONLY module-level objects a traced body may mutate: the trace-time
+# bookkeeping counters. TRACE_COUNTS is the retrace-discipline marker
+# (repro.core.runner); TRACE_EVENTS is the obs event sink bumped beside it
+# (repro.obs.events) — both record "this body traced", never per-call state.
+TRACE_WHITELIST = {"TRACE_COUNTS", "TRACE_EVENTS"}
+
+
 def _is_trace_counts_target(node) -> bool:
-    """True when an expression's attribute/subscript chain ends at the
-    ``TRACE_COUNTS`` counter (the one whitelisted trace-time side effect)."""
+    """True when an expression's attribute/subscript chain ends at one of
+    the ``TRACE_WHITELIST`` counters (the whitelisted trace-time side
+    effects)."""
     while isinstance(node, (ast.Subscript, ast.Attribute)):
-        if isinstance(node, ast.Attribute) and node.attr == "TRACE_COUNTS":
+        if isinstance(node, ast.Attribute) and node.attr in TRACE_WHITELIST:
             return True
         node = node.value
-    return isinstance(node, ast.Name) and node.id == "TRACE_COUNTS"
+    return isinstance(node, ast.Name) and node.id in TRACE_WHITELIST
 
 
 def module_array_bindings(tree: ast.Module) -> Dict[str, int]:

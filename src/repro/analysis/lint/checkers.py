@@ -80,11 +80,12 @@ class ClosureArrayChecker(Checker):
 
 class SideEffectChecker(Checker):
     """R2: no Python side effects in traced bodies — they run once per
-    trace, not once per call, so anything but the whitelisted
-    ``TRACE_COUNTS`` bump is a silent correctness bug."""
+    trace, not once per call, so anything but a ``base.TRACE_WHITELIST``
+    counter bump (``TRACE_COUNTS``, ``TRACE_EVENTS``) is a silent
+    correctness bug."""
 
     rule = "R2"
-    title = "no Python side effects in traced bodies except TRACE_COUNTS"
+    title = "no Python side effects in traced bodies except TRACE_WHITELIST"
 
     def check(self, ctx: ModuleContext) -> List[Violation]:
         out, seen = [], set()
@@ -136,8 +137,8 @@ class SideEffectChecker(Checker):
                             emit(node,
                                  f"assignment into module-level {root!r} "
                                  f"inside a traced body is a trace-time "
-                                 f"side effect (only TRACE_COUNTS bumps are "
-                                 f"whitelisted)")
+                                 f"side effect (only the TRACE_WHITELIST "
+                                 f"counter bumps are allowed)")
         return out
 
 

@@ -53,6 +53,7 @@ class ChainResult:
     selected_initial: list  # per switch: True if selection kept the pre-stage point
     bits_up: Optional[jnp.ndarray] = None  # [R] per-round uplink bits (comm)
     bits_down: Optional[jnp.ndarray] = None  # [R] per-round downlink bits
+    diagnostics: Optional[dict] = None  # per-round taps ([R] leaves), obs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -234,6 +235,12 @@ class Chain:
                 j, [lambda s, i=i: stages[i].output(s[i]) for i in range(n)],
                 states)
 
+        def _stage_x(j, states):
+            # the active stage's current iterate (what the round broadcasts),
+            # NOT its averaged output
+            return jax.lax.switch(
+                j, [lambda s, i=i: s[i].x for i in range(n)], states)
+
         def _reinit(p, j, states, x_init):
             """states with slot j re-initialized at x_init, base η preserved."""
 
@@ -310,20 +317,26 @@ class Chain:
                 hmd > 0, do_handoff, no_handoff, (states, anchor))
 
         return types.SimpleNamespace(
-            select2=_select2, output=_output, reinit=_reinit, round=_round,
-            round_comm=_round_comm, handoff=_handoff)
+            select2=_select2, output=_output, stage_x=_stage_x,
+            reinit=_reinit, round=_round, round_comm=_round_comm,
+            handoff=_handoff)
 
-    def _plain_scan_body(self, ops, p, f_star):
+    def _plain_scan_body(self, ops, p, f_star, telemetry=None):
         """The non-comm per-round scan body over operand schedule rows
         ``(k_round, k_sel, sid, knd, hmd, scale)`` — shared by the fixed-
         schedule executor and the fraction-sweep (schedule-as-operand)
-        executor."""
+        executor. With ``telemetry`` set, the per-round taps dict rides as a
+        third scan output (``update_norm`` measures the active stage's own
+        movement — the post-handoff iterate before vs after the round)."""
+        from repro.obs import telemetry as obs_tel
 
         def body(carry, xs):
             states, anchor = carry
             k_round, k_sel, sid, knd, hmd, scale = xs
             states, anchor, h_kept = ops.handoff(
                 p, states, anchor, sid, hmd, k_sel)
+            prev_x = (ops.stage_x(sid, states) if telemetry is not None
+                      else None)
 
             def sel_round(args):
                 states, anchor = args
@@ -340,13 +353,21 @@ class Chain:
 
             states, anchor, sub, s_kept = jax.lax.cond(
                 knd == 1, sel_round, alg_round, (states, anchor))
-            return (states, anchor), (sub, h_kept | s_kept)
+            if telemetry is None:
+                return (states, anchor), (sub, h_kept | s_kept)
+            x_eval = (ops.output(sid, states) if telemetry.grad_norm
+                      else None)
+            taps = obs_tel.round_taps(
+                telemetry, problem=p, prev_x=prev_x,
+                new_x=ops.stage_x(sid, states), x_eval=x_eval, stage=sid)
+            return (states, anchor), (sub, h_kept | s_kept, taps)
 
         return body
 
     # -- executor ----------------------------------------------------------
 
-    def executor_body(self, problem, rounds: int, comm: bool = False):
+    def executor_body(self, problem, rounds: int, comm: bool = False,
+                      telemetry=None):
         """Unjitted single-scan chain executor.
 
         Returns ``fn(spec, x0, states0, key, eta_scale) -> (x_hat, history,
@@ -367,9 +388,14 @@ class Chain:
         bit meters persist across stage handoffs) and injected into the
         active stage's state each round; selection rounds are billed at the
         Lemma H.2 cost (2 candidates down, 1 scalar per candidate up).
+
+        ``telemetry`` (a ``repro.obs.Telemetry``, part of the cache key)
+        appends the per-round taps dict — stage index included — as a
+        trailing scan output on either variant; ``None`` traces exactly the
+        pre-telemetry jaxpr.
         """
         key = ("chain-body", self._key(), runner_lib.problem_key(problem),
-               rounds, comm)
+               rounds, comm, telemetry)
         fn = runner_lib._cache_get(key)
         if fn is not None:
             return fn
@@ -389,30 +415,40 @@ class Chain:
 
             def executor(spec, x0, states0, key, eta_scale):
                 from repro.core.algorithms import base as algo_base
+                from repro.obs import events as obs_events
 
                 p = resolve(spec)
                 for st in states0:
                     algo_base.audit_state(st)  # protocol check, once per trace
                 runner_lib.TRACE_COUNTS[f"chain/{self.name}"] += 1
+                obs_events.TRACE_EVENTS[f"chain/{self.name}"] += 1
                 f_star = runner_lib.f_star_operand(p)
                 keys_r, keys_s = self._derive_keys(sched, key)
 
-                (states, _), (history, kept_flags) = jax.lax.scan(
-                    self._plain_scan_body(ops, p, f_star), (states0, x0),
+                (states, _), ys = jax.lax.scan(
+                    self._plain_scan_body(ops, p, f_star, telemetry),
+                    (states0, x0),
                     (keys_r, keys_s, stage_id, kind, hmode, eta_scale))
                 x_hat = stages[-1].output(states[-1])
-                return x_hat, history, kept_flags
+                if telemetry is None:
+                    history, kept_flags = ys
+                    return x_hat, history, kept_flags
+                history, kept_flags, taps = ys
+                return x_hat, history, kept_flags, taps
 
         else:
 
             def executor(spec, x0, states0, key, eta_scale, masks, comm0):
                 from repro.comm import config as comm_cfg
                 from repro.core.algorithms import base as algo_base
+                from repro.obs import events as obs_events
+                from repro.obs import telemetry as obs_tel
 
                 p = resolve(spec)
                 for st in states0:
                     algo_base.audit_state(st)
                 runner_lib.TRACE_COUNTS[f"chain-comm/{self.name}"] += 1
+                obs_events.TRACE_EVENTS[f"chain-comm/{self.name}"] += 1
                 f_star = runner_lib.f_star_operand(p)
                 keys_r, keys_s = self._derive_keys(sched, key)
                 # selection broadcasts the whole parameter pytree (leaf dims
@@ -440,6 +476,8 @@ class Chain:
                             comm_st.down_residual))
                     states, anchor, h_kept = ops.handoff(
                         p, states, anchor, sid, hmd, k_sel)
+                    prev_x = (ops.stage_x(sid, states)
+                              if telemetry is not None else None)
 
                     def sel_round(args):
                         states, anchor, comm_st = args
@@ -468,21 +506,38 @@ class Chain:
                         + jnp.where(did_sel, sel_up, 0.0),
                         bits_down=comm_st.bits_down
                         + jnp.where(did_sel, sel_down, 0.0))
+                    if telemetry is None:
+                        return ((states, anchor, comm_st),
+                                (sub, h_kept | s_kept,
+                                 comm_st.bits_up, comm_st.bits_down))
+                    x_eval = (ops.output(sid, states) if telemetry.grad_norm
+                              else None)
+                    taps = obs_tel.round_taps(
+                        telemetry, problem=p, prev_x=prev_x,
+                        new_x=ops.stage_x(sid, states), x_eval=x_eval,
+                        comm=comm_st, mask=mask, stage=sid,
+                        bits_up=comm_st.bits_up,
+                        bits_down=comm_st.bits_down)
                     return ((states, anchor, comm_st),
                             (sub, h_kept | s_kept,
-                             comm_st.bits_up, comm_st.bits_down))
+                             comm_st.bits_up, comm_st.bits_down, taps))
 
-                (states, _, _), (history, kept_flags, bits_up, bits_down) = (
-                    jax.lax.scan(
-                        body, (states0, x0, comm0),
-                        (keys_r, keys_s, stage_id, kind, hmode, eta_scale,
-                         masks)))
+                (states, _, _), ys = jax.lax.scan(
+                    body, (states0, x0, comm0),
+                    (keys_r, keys_s, stage_id, kind, hmode, eta_scale,
+                     masks))
                 x_hat = stages[-1].output(states[-1])
-                return x_hat, history, kept_flags, bits_up, bits_down
+                if telemetry is None:
+                    history, kept_flags, bits_up, bits_down = ys
+                    return x_hat, history, kept_flags, bits_up, bits_down
+                history, kept_flags, bits_up, bits_down, taps = ys
+                return (x_hat, history, kept_flags, bits_up, bits_down,
+                        taps)
 
         return runner_lib._cache_put(key, executor)
 
-    def executor(self, problem, rounds: int, comm: bool = False):
+    def executor(self, problem, rounds: int, comm: bool = False,
+                 telemetry=None):
         """The jitted, module-cached chain executor.
 
         ``states0`` (argnum 2) is donated — the per-stage scan carry is
@@ -495,15 +550,15 @@ class Chain:
         """
         donate = (2, 6) if comm else (2,)
         key = ("chain-jit", self._key(), runner_lib.problem_key(problem),
-               rounds, comm, donate)
+               rounds, comm, telemetry, donate)
         fn = runner_lib._cache_get(key)
         if fn is not None:
             return fn
         return runner_lib._cache_put(
-            key, jax.jit(self.executor_body(problem, rounds, comm),
+            key, jax.jit(self.executor_body(problem, rounds, comm, telemetry),
                          donate_argnums=donate))
 
-    def selection_executor_body(self, problem, rounds: int):
+    def selection_executor_body(self, problem, rounds: int, telemetry=None):
         """The policy-selection chain executor (comm-enabled).
 
         Returns ``fn(spec, x0, states0, key, eta_scale, sel_keys, pparams,
@@ -517,9 +572,13 @@ class Chain:
         rounds too (one ``sel_keys`` row per scheduled round, so the key
         stream stays aligned with the schedule); probing policies bill
         their value probe every round on top of the stage/selection bits.
+
+        With ``telemetry`` set (part of the cache key) the scan additionally
+        emits the per-round taps dict — policy-state summaries and the
+        active stage index included — as a trailing output.
         """
         key = ("chain-sel-body", self._key(),
-               runner_lib.problem_key(problem), rounds)
+               runner_lib.problem_key(problem), rounds, telemetry)
         fn = runner_lib._cache_get(key)
         if fn is not None:
             return fn
@@ -528,7 +587,6 @@ class Chain:
 
         sched = self._schedule(rounds)
         stages = tuple(self.stages)
-        n_stages = len(stages)
         ops = self._round_ops(problem)
         sel_s = (self.selection_s if self.selection_s > 0
                  else problem.num_clients)
@@ -536,22 +594,19 @@ class Chain:
         kind = jnp.asarray(sched.kind)
         hmode = jnp.asarray(sched.hmode)
 
-        def _stage_x(j, states):
-            # the active stage's current iterate (what the round broadcasts),
-            # NOT its averaged output
-            return jax.lax.switch(
-                j, [lambda s, i=i: s[i].x for i in range(n_stages)], states)
-
         def executor(spec, x0, states0, key, eta_scale, sel_keys, pparams,
                      pstate0, comm0):
             from repro.comm import config as comm_cfg
             from repro.core.algorithms import base as algo_base
+            from repro.obs import events as obs_events
+            from repro.obs import telemetry as obs_tel
             from repro.selection import policies as pol
 
             p = resolve(spec)
             for st in states0:
                 algo_base.audit_state(st)
             runner_lib.TRACE_COUNTS[f"chain-sel/{self.name}"] += 1
+            obs_events.TRACE_EVENTS[f"chain-sel/{self.name}"] += 1
             f_star = runner_lib.f_star_operand(p)
             keys_r, keys_s = self._derive_keys(sched, key)
             sel_up, sel_down = comm_cfg.selection_round_bits(x0, sel_s)
@@ -570,8 +625,10 @@ class Chain:
                         comm_st.down_residual))
                 states, anchor, h_kept = ops.handoff(
                     p, states, anchor, sid, hmd, k_sel)
+                prev_x = (ops.stage_x(sid, states) if telemetry is not None
+                          else None)
                 mask, pstate = pol.round_select(
-                    p, _stage_x(sid, states), pstate, pparams, k_pol)
+                    p, ops.stage_x(sid, states), pstate, pparams, k_pol)
 
                 def sel_round(args):
                     states, anchor, comm_st = args
@@ -597,18 +654,33 @@ class Chain:
                     + jnp.where(did_sel, sel_up, 0.0) + extra_up,
                     bits_down=comm_st.bits_down
                     + jnp.where(did_sel, sel_down, 0.0))
+                if telemetry is None:
+                    return ((states, anchor, comm_st, pstate),
+                            (sub, h_kept | s_kept,
+                             comm_st.bits_up, comm_st.bits_down, mask))
+                x_eval = (ops.output(sid, states) if telemetry.grad_norm
+                          else None)
+                taps = obs_tel.round_taps(
+                    telemetry, problem=p, prev_x=prev_x,
+                    new_x=ops.stage_x(sid, states), x_eval=x_eval,
+                    comm=comm_st, mask=mask, pstate=pstate, stage=sid,
+                    bits_up=comm_st.bits_up, bits_down=comm_st.bits_down)
                 return ((states, anchor, comm_st, pstate),
                         (sub, h_kept | s_kept,
-                         comm_st.bits_up, comm_st.bits_down, mask))
+                         comm_st.bits_up, comm_st.bits_down, mask, taps))
 
-            ((states, _, _, pstate),
-             (history, kept_flags, bits_up, bits_down, masks)) = jax.lax.scan(
-                 body, (states0, x0, comm0, pstate0),
-                 (keys_r, keys_s, stage_id, kind, hmode, eta_scale,
-                  sel_keys))
+            (states, _, _, pstate), ys = jax.lax.scan(
+                body, (states0, x0, comm0, pstate0),
+                (keys_r, keys_s, stage_id, kind, hmode, eta_scale,
+                 sel_keys))
             x_hat = stages[-1].output(states[-1])
+            if telemetry is None:
+                history, kept_flags, bits_up, bits_down, masks = ys
+                return (x_hat, history, kept_flags, bits_up, bits_down,
+                        masks, pstate)
+            history, kept_flags, bits_up, bits_down, masks, taps = ys
             return (x_hat, history, kept_flags, bits_up, bits_down, masks,
-                    pstate)
+                    pstate, taps)
 
         return runner_lib._cache_put(key, executor)
 
@@ -646,11 +718,13 @@ class Chain:
         def executor(spec, x0, states0, keys_r, keys_s, stage_id, kind,
                      hmode, eta_scale):
             from repro.core.algorithms import base as algo_base
+            from repro.obs import events as obs_events
 
             p = resolve(spec)
             for st in states0:
                 algo_base.audit_state(st)
             runner_lib.TRACE_COUNTS[f"chain-frac/{self.name}"] += 1
+            obs_events.TRACE_EVENTS[f"chain-frac/{self.name}"] += 1
             f_star = runner_lib.f_star_operand(p)
 
             (states, _), (history, kept_flags) = jax.lax.scan(
@@ -683,7 +757,7 @@ class Chain:
         return states
 
     def run(self, problem, x0, rounds: int, key, *, decay: Optional[dict] = None,
-            eta_scale=None, comm=None, comm_masks=None):
+            eta_scale=None, comm=None, comm_masks=None, telemetry=None):
         """Execute the chain for a total budget of ``rounds`` communication
         rounds — a single compiled call regardless of stage count, decay
         schedule, or comm config (decay multipliers, participation masks and
@@ -691,18 +765,26 @@ class Chain:
 
         ``comm`` (a ``repro.comm.CommConfig``) enables compressed uplinks +
         partial participation + bits accounting; ``comm_masks`` overrides the
-        config-derived [R, N] schedule.
+        config-derived [R, N] schedule. ``telemetry`` (a
+        ``repro.obs.Telemetry``) returns the per-round taps in the result's
+        ``diagnostics``; ``None`` is bitwise identical to a run without the
+        telemetry layer.
         """
         sched = self._schedule(rounds)
         eta_arr = self.eta_schedule(rounds, decay)
         states0 = self.init_states(problem, x0, eta_scale)
         spec = runner_lib.as_spec(problem)
-        bits_up = bits_down = None
+        bits_up = bits_down = taps = None
         if comm is None:
-            fn = self.executor(problem, rounds)
+            fn = self.executor(problem, rounds, telemetry=telemetry)
             states0 = runner_lib.dealias_donated(
                 states0, spec, x0, key, eta_arr)
-            x_hat, history, kept_flags = fn(spec, x0, states0, key, eta_arr)
+            if telemetry is None:
+                x_hat, history, kept_flags = fn(
+                    spec, x0, states0, key, eta_arr)
+            else:
+                x_hat, history, kept_flags, taps = fn(
+                    spec, x0, states0, key, eta_arr)
         else:
             from repro.comm import config as comm_cfg
 
@@ -713,13 +795,18 @@ class Chain:
                      if comm_masks is None
                      else jnp.asarray(comm_masks, jnp.float32))
             comm0 = comm.init_state(n_clients, x0)
-            fn = self.executor(problem, rounds, comm=True)
+            fn = self.executor(problem, rounds, comm=True,
+                               telemetry=telemetry)
             states0 = runner_lib.dealias_donated(
                 states0, spec, x0, key, eta_arr, masks)
             comm0 = runner_lib.dealias_donated(
                 comm0, spec, x0, states0, key, eta_arr, masks)
-            x_hat, history, kept_flags, bits_up, bits_down = fn(
-                spec, x0, states0, key, eta_arr, masks, comm0)
+            if telemetry is None:
+                x_hat, history, kept_flags, bits_up, bits_down = fn(
+                    spec, x0, states0, key, eta_arr, masks, comm0)
+            else:
+                x_hat, history, kept_flags, bits_up, bits_down, taps = fn(
+                    spec, x0, states0, key, eta_arr, masks, comm0)
         kept = np.asarray(kept_flags)
         return ChainResult(
             x_hat=x_hat,
@@ -728,6 +815,7 @@ class Chain:
             selected_initial=[bool(kept[i]) for i in sched.sel_indices],
             bits_up=bits_up,
             bits_down=bits_down,
+            diagnostics=taps,
         )
 
 

@@ -162,6 +162,7 @@ class RunResult:
     grad_norms: Optional[jnp.ndarray] = None
     bits_up: Optional[jnp.ndarray] = None  # [R] per-round uplink bits (comm)
     bits_down: Optional[jnp.ndarray] = None  # [R] per-round downlink bits
+    diagnostics: Optional[dict] = None  # per-round taps ([R] leaves), obs
 
 
 def _env_key():
@@ -216,20 +217,37 @@ def f_star_operand(problem):
     return problem.f_star if problem.f_star is not None else 0.0
 
 
+def _obs_emit(kind, **fields):
+    """Forward one cache/compile event to the obs event log — a None-check
+    no-op unless ``repro.obs.events`` has a recorder installed."""
+    from repro.obs import events as obs_events
+
+    obs_events.emit(kind, **fields)
+
+
 def _cache_get(key):
     full = (key, _env_key())
     fn = _EXECUTOR_CACHE.get(full)
     if fn is not None:
         _EXECUTOR_CACHE.move_to_end(full)
+        _obs_emit("cache", op="hit", family=key[0])
+    else:
+        _obs_emit("cache", op="miss", family=key[0])
     return fn
 
 
 def _audit_wrap(key, fn):
     def wrapped(*args, **kwargs):
-        if AUDIT_SINK is not None and not any(
-                isinstance(leaf, jax.core.Tracer)
-                for leaf in jax.tree.leaves((args, kwargs))):
+        concrete = not any(
+            isinstance(leaf, jax.core.Tracer)
+            for leaf in jax.tree.leaves((args, kwargs)))
+        if AUDIT_SINK is not None and concrete:
             AUDIT_SINK.append((key, fn, args, kwargs))
+        if concrete:
+            from repro.obs import events as obs_events
+
+            if obs_events.RECORDER is not None:
+                return obs_events.observed_call(key, fn, args, kwargs)
         return fn(*args, **kwargs)
 
     return wrapped
@@ -240,8 +258,10 @@ def _cache_put(key, fn):
     fn = _audit_wrap(key, fn)
     _EXECUTOR_CACHE[full] = fn
     _EXECUTOR_CACHE.move_to_end(full)
+    _obs_emit("cache", op="put", family=key[0])
     while len(_EXECUTOR_CACHE) > _EXECUTOR_CACHE_MAX:
-        _EXECUTOR_CACHE.popitem(last=False)
+        evicted, _ = _EXECUTOR_CACHE.popitem(last=False)
+        _obs_emit("cache", op="evict", family=evicted[0][0])
     return fn
 
 
@@ -260,15 +280,20 @@ def _bind(problem):
     return None, (lambda spec_op: problem)
 
 
-def executor_body(algo, problem, eval_output: bool = True):
+def executor_body(algo, problem, eval_output: bool = True, telemetry=None):
     """The unjitted single-compile executor.
 
     Returns ``fn(spec, state0, keys, eta_scale) -> (state, history)``
     scanning all rounds at once; ``spec`` is the problem operand (None for
     legacy closure problems), ``keys`` is [R, 2] raw PRNG keys, ``eta_scale``
     is [R] multipliers on the *base* stepsize carried in ``state0.eta``.
+
+    ``telemetry`` (a ``repro.obs.Telemetry``, part of the cache key like
+    ``eval_output``) switches the scan output to ``(history, taps)`` where
+    ``taps`` is the per-round diagnostics dict; ``None`` traces exactly the
+    pre-telemetry jaxpr.
     """
-    key = ("body", algo, problem_key(problem), eval_output)
+    key = ("body", algo, problem_key(problem), eval_output, telemetry)
     fn = _cache_get(key)
     if fn is not None:
         return fn
@@ -277,10 +302,13 @@ def executor_body(algo, problem, eval_output: bool = True):
 
     def executor(spec, state0, keys, eta_scale):
         from repro.core.algorithms import base as algo_base
+        from repro.obs import events as obs_events
+        from repro.obs import telemetry as obs_tel
 
         p = resolve(spec)
         algo_base.audit_state(state0)  # protocol check, once per trace
         TRACE_COUNTS[f"runner/{algo.name}"] += 1  # trace-time side effect
+        obs_events.TRACE_EVENTS[f"runner/{algo.name}"] += 1
         f_star = f_star_operand(p)
         base_eta = state0.eta
 
@@ -290,14 +318,19 @@ def executor_body(algo, problem, eval_output: bool = True):
             st = st._replace(eta=base_eta)  # executor owns annealing
             x_eval = algo.output(st) if eval_output else st.x
             sub = p.global_loss(x_eval) - f_star
-            return st, sub
+            if telemetry is None:
+                return st, sub
+            taps = obs_tel.round_taps(
+                telemetry, problem=p, prev_x=state.x, new_x=st.x,
+                x_eval=x_eval)
+            return st, (sub, taps)
 
         return jax.lax.scan(one_round, state0, (keys, eta_scale))
 
     return _cache_put(key, executor)
 
 
-def executor(algo, problem, eval_output: bool = True):
+def executor(algo, problem, eval_output: bool = True, telemetry=None):
     """The jitted, module-cached executor (same signature as the body).
 
     ``state0`` (argnum 1) is DONATED: it is the scan carry, dead the moment
@@ -307,15 +340,17 @@ def executor(algo, problem, eval_output: bool = True):
     cache key.
     """
     donate = (1,)
-    key = ("jit", algo, problem_key(problem), eval_output, donate)
+    key = ("jit", algo, problem_key(problem), eval_output, telemetry, donate)
     fn = _cache_get(key)
     if fn is not None:
         return fn
-    return _cache_put(key, jax.jit(executor_body(algo, problem, eval_output),
-                                   donate_argnums=donate))
+    return _cache_put(key, jax.jit(
+        executor_body(algo, problem, eval_output, telemetry),
+        donate_argnums=donate))
 
 
-def comm_executor_body(algo, problem, eval_output: bool = True):
+def comm_executor_body(algo, problem, eval_output: bool = True,
+                       telemetry=None):
     """The comm-enabled single-compile executor.
 
     Returns ``fn(spec, state0, keys, eta_scale, masks) -> (state, (history,
@@ -323,8 +358,12 @@ def comm_executor_body(algo, problem, eval_output: bool = True):
     ``comm`` leaf; ``masks`` is the [R, N] participation schedule — pure scan
     data, like the keys and η multipliers, so comm config (participation
     fraction, compressor, bit-width) never re-traces this executor.
+
+    With ``telemetry`` set the scan emits ``(history, bits_up, bits_down,
+    taps)`` — the taps include the EF residual norms of all three CommPlan
+    legs and the per-round participation count.
     """
-    key = ("comm-body", algo, problem_key(problem), eval_output)
+    key = ("comm-body", algo, problem_key(problem), eval_output, telemetry)
     fn = _cache_get(key)
     if fn is not None:
         return fn
@@ -334,11 +373,14 @@ def comm_executor_body(algo, problem, eval_output: bool = True):
     def executor(spec, state0, keys, eta_scale, masks):
         from repro.comm import config as comm_cfg
         from repro.core.algorithms import base as algo_base
+        from repro.obs import events as obs_events
+        from repro.obs import telemetry as obs_tel
 
         p = resolve(spec)
         algo_base.audit_state(state0)
         comm_cfg.comm_state_or_error(state0, algo.name)
         TRACE_COUNTS[f"runner-comm/{algo.name}"] += 1
+        obs_events.TRACE_EVENTS[f"runner-comm/{algo.name}"] += 1
         f_star = f_star_operand(p)
         base_eta = state0.eta
 
@@ -352,28 +394,36 @@ def comm_executor_body(algo, problem, eval_output: bool = True):
             st = st._replace(eta=base_eta)
             x_eval = algo.output(st) if eval_output else st.x
             sub = p.global_loss(x_eval) - f_star
-            return st, (sub, comm.bits_up, comm.bits_down)
+            if telemetry is None:
+                return st, (sub, comm.bits_up, comm.bits_down)
+            taps = obs_tel.round_taps(
+                telemetry, problem=p, prev_x=state.x, new_x=st.x,
+                x_eval=x_eval, comm=comm, mask=mask, bits_up=comm.bits_up,
+                bits_down=comm.bits_down)
+            return st, (sub, comm.bits_up, comm.bits_down, taps)
 
         return jax.lax.scan(one_round, state0, (keys, eta_scale, masks))
 
     return _cache_put(key, executor)
 
 
-def comm_executor(algo, problem, eval_output: bool = True):
+def comm_executor(algo, problem, eval_output: bool = True, telemetry=None):
     """The jitted, module-cached comm executor. ``state0`` is donated like
     the plain executor's (the [R, N] masks are NOT — ``run`` forwards
     user-supplied ``comm_masks`` arrays there)."""
     donate = (1,)
-    key = ("comm-jit", algo, problem_key(problem), eval_output, donate)
+    key = ("comm-jit", algo, problem_key(problem), eval_output, telemetry,
+           donate)
     fn = _cache_get(key)
     if fn is not None:
         return fn
     return _cache_put(key, jax.jit(
-        comm_executor_body(algo, problem, eval_output),
+        comm_executor_body(algo, problem, eval_output, telemetry),
         donate_argnums=donate))
 
 
-def selection_executor_body(algo, problem, eval_output: bool = True):
+def selection_executor_body(algo, problem, eval_output: bool = True,
+                            telemetry=None):
     """The policy-selection single-compile executor.
 
     Returns ``fn(spec, state0, keys, eta_scale, sel_keys, pparams, pstate0)
@@ -386,8 +436,11 @@ def selection_executor_body(algo, problem, eval_output: bool = True):
     (``PolicyState`` pytree leaves carried through the scan).  The mask
     feeds the comm ledger unchanged; probing policies additionally bill
     their value-probe uplink via ``policies.probe_bits``.
+
+    With ``telemetry`` set the scan additionally emits the per-round taps
+    dict (policy-state summaries included) as a trailing output.
     """
-    key = ("sel-body", algo, problem_key(problem), eval_output)
+    key = ("sel-body", algo, problem_key(problem), eval_output, telemetry)
     fn = _cache_get(key)
     if fn is not None:
         return fn
@@ -397,12 +450,15 @@ def selection_executor_body(algo, problem, eval_output: bool = True):
     def executor(spec, state0, keys, eta_scale, sel_keys, pparams, pstate0):
         from repro.comm import config as comm_cfg
         from repro.core.algorithms import base as algo_base
+        from repro.obs import events as obs_events
+        from repro.obs import telemetry as obs_tel
         from repro.selection import policies as pol
 
         p = resolve(spec)
         algo_base.audit_state(state0)
         comm_cfg.comm_state_or_error(state0, algo.name)
         TRACE_COUNTS[f"runner-sel/{algo.name}"] += 1
+        obs_events.TRACE_EVENTS[f"runner-sel/{algo.name}"] += 1
         f_star = f_star_operand(p)
         base_eta = state0.eta
         extra_up = pol.probe_bits(pparams, p.num_clients)
@@ -421,7 +477,15 @@ def selection_executor_body(algo, problem, eval_output: bool = True):
             st = st._replace(eta=base_eta, comm=comm)
             x_eval = algo.output(st) if eval_output else st.x
             sub = p.global_loss(x_eval) - f_star
-            return (st, pstate), (sub, comm.bits_up, comm.bits_down, mask)
+            if telemetry is None:
+                return (st, pstate), (sub, comm.bits_up, comm.bits_down,
+                                      mask)
+            taps = obs_tel.round_taps(
+                telemetry, problem=p, prev_x=state.x, new_x=st.x,
+                x_eval=x_eval, comm=comm, mask=mask, pstate=pstate,
+                bits_up=comm.bits_up, bits_down=comm.bits_down)
+            return (st, pstate), (sub, comm.bits_up, comm.bits_down, mask,
+                                  taps)
 
         return jax.lax.scan(one_round, (state0, pstate0),
                             (keys, eta_scale, sel_keys))
@@ -450,10 +514,12 @@ def method_executor_body(methods, problem, eval_output: bool = True):
 
     def executor(spec, state0, keys, eta_scale, midx):
         from repro.core.algorithms import base as algo_base
+        from repro.obs import events as obs_events
 
         p = resolve(spec)
         algo_base.audit_state(state0)
         TRACE_COUNTS[f"runner-methods/{tag}"] += 1
+        obs_events.TRACE_EVENTS[f"runner-methods/{tag}"] += 1
         f_star = f_star_operand(p)
         base_eta = state0.eta
 
@@ -481,7 +547,8 @@ def method_executor_body(methods, problem, eval_output: bool = True):
 
 
 def run(algo, problem, x0, rounds: int, key, *, eval_output: bool = True,
-        jit: bool = True, eta=None, comm=None, comm_masks=None):
+        jit: bool = True, eta=None, comm=None, comm_masks=None,
+        telemetry=None):
     """Run ``rounds`` communication rounds; record suboptimality each round.
 
     ``eta`` overrides the state's base stepsize (used by the sweep engine's
@@ -489,7 +556,10 @@ def run(algo, problem, x0, rounds: int, key, *, eval_output: bool = True,
     ``comm`` (a ``repro.comm.CommConfig``) enables the communication layer:
     compressed uplinks, the per-round participation schedule (``comm_masks``
     overrides the config-derived [R, N] masks) and exact bits accounting in
-    the result's ``bits_up``/``bits_down``.
+    the result's ``bits_up``/``bits_down``. ``telemetry`` (a
+    ``repro.obs.Telemetry``) additionally returns the per-round taps in the
+    result's ``diagnostics`` ([R]-shaped leaves); ``None`` is bitwise
+    identical to a run without the telemetry layer.
     """
     spec = as_spec(problem)
     state0 = algo.init_with_eta(problem, x0, eta)
@@ -508,16 +578,27 @@ def run(algo, problem, x0, rounds: int, key, *, eval_output: bool = True,
         state0 = dealias_donated(state0, spec, keys, eta_scale, masks,
                                  x0, eta)
         fn = (comm_executor if jit else comm_executor_body)(
-            algo, problem, eval_output)
-        state, (history, bits_up, bits_down) = fn(
-            spec, state0, keys, eta_scale, masks)
+            algo, problem, eval_output, telemetry)
+        if telemetry is None:
+            state, (history, bits_up, bits_down) = fn(
+                spec, state0, keys, eta_scale, masks)
+            taps = None
+        else:
+            state, (history, bits_up, bits_down, taps) = fn(
+                spec, state0, keys, eta_scale, masks)
         return RunResult(state=state, x_hat=algo.output(state),
                          history=history, bits_up=bits_up,
-                         bits_down=bits_down)
-    fn = (executor if jit else executor_body)(algo, problem, eval_output)
+                         bits_down=bits_down, diagnostics=taps)
+    fn = (executor if jit else executor_body)(algo, problem, eval_output,
+                                              telemetry)
     state0 = dealias_donated(state0, spec, keys, eta_scale, x0, eta)
-    state, history = fn(spec, state0, keys, eta_scale)
-    return RunResult(state=state, x_hat=algo.output(state), history=history)
+    if telemetry is None:
+        state, history = fn(spec, state0, keys, eta_scale)
+        taps = None
+    else:
+        state, (history, taps) = fn(spec, state0, keys, eta_scale)
+    return RunResult(state=state, x_hat=algo.output(state), history=history,
+                     diagnostics=taps)
 
 
 def decay_segments(rounds: int, decay_first: float = 0.3):

@@ -147,6 +147,7 @@ class SweepResult:
     bits_down: Optional[jnp.ndarray] = None  # [S, E, R] downlink bits
     problems: Optional[tuple] = None  # problem names along the leading axis
     methods: Optional[tuple] = None  # method names along the leading axis
+    diagnostics: Optional[dict] = None  # per-round obs taps, leaves [..., R]
 
     def cumulative_bits(self):
         """[S, E, R] total (up + down) bits through each round, float64 —
@@ -159,91 +160,132 @@ class SweepResult:
 
 
 def make_algo_cell(algo, problem, rounds: int, eval_output: bool,
-                   eta_mode: str, tag: str):
+                   eta_mode: str, tag: str, telemetry=None):
     """ONE grid cell of a plain-algorithm sweep: ``cell(spec, x0, key, eta)``.
 
     The vmapped engine below and the sharded engine (``repro.dist.grid``)
     both build their grids from these cell factories, so a sharded sweep
     runs bit-for-bit the same per-cell computation as the single-device one
     — only the batching around the cell differs. ``tag`` names the
-    ``TRACE_COUNTS`` entry the cell bumps when traced.
+    ``TRACE_COUNTS`` entry the cell bumps when traced. A non-None
+    ``telemetry`` (``repro.obs.Telemetry``) appends the per-round taps dict
+    as a trailing output.
     """
-    body = runner_lib.executor_body(algo, problem, eval_output)
+    from repro.obs import events as obs_events
+
+    body = runner_lib.executor_body(algo, problem, eval_output, telemetry)
     _, resolve = runner_lib._bind(problem)
     eta_scale = jnp.ones((rounds,), jnp.float32)
 
     def cell(spec, x0, key, eta):
         p = resolve(spec)
         runner_lib.TRACE_COUNTS[f"{tag}/{algo.name}"] += 1
+        obs_events.TRACE_EVENTS[f"{tag}/{algo.name}"] += 1
         state0 = algo.init(p, x0)
         new_eta = (state0.eta * eta if eta_mode == "scale"
                    else jnp.asarray(eta, jnp.result_type(state0.eta)))
         state0 = state0._replace(eta=new_eta)
         keys = jax.random.split(key, rounds)
-        state, history = body(spec, state0, keys, eta_scale)
+        if telemetry is None:
+            state, history = body(spec, state0, keys, eta_scale)
+        else:
+            state, (history, taps) = body(spec, state0, keys, eta_scale)
         x_hat = algo.output(state)
         sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
-        return x_hat, history, sub
+        if telemetry is None:
+            return x_hat, history, sub
+        return x_hat, history, sub, taps
 
     return cell
 
 
 def make_algo_comm_cell(algo, problem, rounds: int, eval_output: bool,
-                        eta_mode: str, tag: str):
+                        eta_mode: str, tag: str, telemetry=None):
     """Comm-enabled cell: ``cell(spec, x0, key, eta, masks, comm0)``."""
-    body = runner_lib.comm_executor_body(algo, problem, eval_output)
+    from repro.obs import events as obs_events
+
+    body = runner_lib.comm_executor_body(algo, problem, eval_output,
+                                         telemetry)
     _, resolve = runner_lib._bind(problem)
     eta_scale = jnp.ones((rounds,), jnp.float32)
 
     def cell(spec, x0, key, eta, masks, comm0):
         p = resolve(spec)
         runner_lib.TRACE_COUNTS[f"{tag}/{algo.name}"] += 1
+        obs_events.TRACE_EVENTS[f"{tag}/{algo.name}"] += 1
         state0 = algo.init(p, x0)
         new_eta = (state0.eta * eta if eta_mode == "scale"
                    else jnp.asarray(eta, jnp.result_type(state0.eta)))
         state0 = state0._replace(eta=new_eta, comm=comm0)
         keys = jax.random.split(key, rounds)
-        state, (history, bits_up, bits_down) = body(
-            spec, state0, keys, eta_scale, masks)
+        if telemetry is None:
+            state, (history, bits_up, bits_down) = body(
+                spec, state0, keys, eta_scale, masks)
+        else:
+            state, (history, bits_up, bits_down, taps) = body(
+                spec, state0, keys, eta_scale, masks)
         x_hat = algo.output(state)
         sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
-        return x_hat, history, sub, bits_up, bits_down
+        if telemetry is None:
+            return x_hat, history, sub, bits_up, bits_down
+        return x_hat, history, sub, bits_up, bits_down, taps
 
     return cell
 
 
-def make_chain_cell(chain, problem, rounds: int, tag: str):
+def make_chain_cell(chain, problem, rounds: int, tag: str, telemetry=None):
     """Chain cell: ``cell(spec, x0, key, mult, eta_scale)``."""
-    body = chain.executor_body(problem, rounds)
+    from repro.obs import events as obs_events
+
+    body = chain.executor_body(problem, rounds, telemetry=telemetry)
     _, resolve = runner_lib._bind(problem)
     sel_idx = jnp.asarray(chain._schedule(rounds).sel_indices, jnp.int32)
 
     def cell(spec, x0, key, mult, eta_scale):
         p = resolve(spec)
         runner_lib.TRACE_COUNTS[f"{tag}/{chain.name}"] += 1
+        obs_events.TRACE_EVENTS[f"{tag}/{chain.name}"] += 1
         states0 = chain.init_states(p, x0, eta_scale=mult)
-        x_hat, history, kept = body(spec, x0, states0, key, eta_scale)
+        if telemetry is None:
+            x_hat, history, kept = body(spec, x0, states0, key, eta_scale)
+        else:
+            x_hat, history, kept, taps = body(spec, x0, states0, key,
+                                              eta_scale)
         sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
-        return x_hat, history, sub, kept[sel_idx]
+        if telemetry is None:
+            return x_hat, history, sub, kept[sel_idx]
+        return x_hat, history, sub, kept[sel_idx], taps
 
     return cell
 
 
-def make_chain_comm_cell(chain, problem, rounds: int, tag: str):
+def make_chain_comm_cell(chain, problem, rounds: int, tag: str,
+                         telemetry=None):
     """Comm-enabled chain cell:
     ``cell(spec, x0, key, mult, eta_scale, masks, comm0)``."""
-    body = chain.executor_body(problem, rounds, comm=True)
+    from repro.obs import events as obs_events
+
+    body = chain.executor_body(problem, rounds, comm=True,
+                               telemetry=telemetry)
     _, resolve = runner_lib._bind(problem)
     sel_idx = jnp.asarray(chain._schedule(rounds).sel_indices, jnp.int32)
 
     def cell(spec, x0, key, mult, eta_scale, masks, comm0):
         p = resolve(spec)
         runner_lib.TRACE_COUNTS[f"{tag}/{chain.name}"] += 1
+        obs_events.TRACE_EVENTS[f"{tag}/{chain.name}"] += 1
         states0 = chain.init_states(p, x0, eta_scale=mult)
-        x_hat, history, kept, bits_up, bits_down = body(
-            spec, x0, states0, key, eta_scale, masks, comm0)
+        if telemetry is None:
+            x_hat, history, kept, bits_up, bits_down = body(
+                spec, x0, states0, key, eta_scale, masks, comm0)
+        else:
+            x_hat, history, kept, bits_up, bits_down, taps = body(
+                spec, x0, states0, key, eta_scale, masks, comm0)
         sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
-        return x_hat, history, sub, kept[sel_idx], bits_up, bits_down
+        if telemetry is None:
+            return x_hat, history, sub, kept[sel_idx], bits_up, bits_down
+        return (x_hat, history, sub, kept[sel_idx], bits_up, bits_down,
+                taps)
 
     return cell
 
@@ -253,12 +295,15 @@ def make_chain_fraction_cell(chain, problem, rounds: int, tag: str):
     ``cell(spec, x0, keys_r, keys_s, stage_id, kind, hmode, eta_scale)``.
     Returns the FULL [R] kept-flags row (selection positions differ per
     fraction, so callers gather them per schedule)."""
+    from repro.obs import events as obs_events
+
     body = chain.fraction_executor_body(problem, rounds)
     _, resolve = runner_lib._bind(problem)
 
     def cell(spec, x0, keys_r, keys_s, stage_id, kind, hmode, eta_scale):
         p = resolve(spec)
         runner_lib.TRACE_COUNTS[f"{tag}/{chain.name}"] += 1
+        obs_events.TRACE_EVENTS[f"{tag}/{chain.name}"] += 1
         states0 = chain.init_states(p, x0)
         x_hat, history, kept = body(spec, x0, states0, keys_r, keys_s,
                                     stage_id, kind, hmode, eta_scale)
@@ -269,7 +314,7 @@ def make_chain_fraction_cell(chain, problem, rounds: int, tag: str):
 
 
 def make_selection_algo_cell(algo, problem, rounds: int, eval_output: bool,
-                             eta_mode: str, tag: str):
+                             eta_mode: str, tag: str, telemetry=None):
     """Policy-selection cell:
     ``cell(spec, x0, pparams, pstate0, key, eta, sel_keys, comm0)``.
 
@@ -277,32 +322,48 @@ def make_selection_algo_cell(algo, problem, rounds: int, eval_output: bool,
     are leading operands so the policy-index adapter
     (``make_policy_cell``) can gather them per cell exactly like the
     problem stacks."""
-    body = runner_lib.selection_executor_body(algo, problem, eval_output)
+    from repro.obs import events as obs_events
+
+    body = runner_lib.selection_executor_body(algo, problem, eval_output,
+                                              telemetry)
     _, resolve = runner_lib._bind(problem)
     eta_scale = jnp.ones((rounds,), jnp.float32)
 
     def cell(spec, x0, pparams, pstate0, key, eta, sel_keys, comm0):
         p = resolve(spec)
         runner_lib.TRACE_COUNTS[f"{tag}/{algo.name}"] += 1
+        obs_events.TRACE_EVENTS[f"{tag}/{algo.name}"] += 1
         state0 = algo.init(p, x0)
         new_eta = (state0.eta * eta if eta_mode == "scale"
                    else jnp.asarray(eta, jnp.result_type(state0.eta)))
         state0 = state0._replace(eta=new_eta, comm=comm0)
         keys = jax.random.split(key, rounds)
-        (state, pstate), (history, bits_up, bits_down, masks) = body(
-            spec, state0, keys, eta_scale, sel_keys, pparams, pstate0)
+        if telemetry is None:
+            (state, pstate), (history, bits_up, bits_down, masks) = body(
+                spec, state0, keys, eta_scale, sel_keys, pparams, pstate0)
+        else:
+            (state, pstate), (history, bits_up, bits_down, masks,
+                              taps) = body(
+                spec, state0, keys, eta_scale, sel_keys, pparams, pstate0)
         x_hat = algo.output(state)
         sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
-        return x_hat, history, sub, bits_up, bits_down, masks, pstate
+        if telemetry is None:
+            return x_hat, history, sub, bits_up, bits_down, masks, pstate
+        return (x_hat, history, sub, bits_up, bits_down, masks, pstate,
+                taps)
 
     return cell
 
 
-def make_selection_chain_cell(chain, problem, rounds: int, tag: str):
+def make_selection_chain_cell(chain, problem, rounds: int, tag: str,
+                              telemetry=None):
     """Policy-selection chain cell:
     ``cell(spec, x0, pparams, pstate0, key, mult, eta_sched, sel_keys,
     comm0)``."""
-    body = chain.selection_executor_body(problem, rounds)
+    from repro.obs import events as obs_events
+
+    body = chain.selection_executor_body(problem, rounds,
+                                         telemetry=telemetry)
     _, resolve = runner_lib._bind(problem)
     sel_idx = jnp.asarray(chain._schedule(rounds).sel_indices, jnp.int32)
 
@@ -310,13 +371,23 @@ def make_selection_chain_cell(chain, problem, rounds: int, tag: str):
              comm0):
         p = resolve(spec)
         runner_lib.TRACE_COUNTS[f"{tag}/{chain.name}"] += 1
+        obs_events.TRACE_EVENTS[f"{tag}/{chain.name}"] += 1
         states0 = chain.init_states(p, x0, eta_scale=mult)
-        x_hat, history, kept, bits_up, bits_down, masks, pstate = body(
-            spec, x0, states0, key, eta_sched, sel_keys, pparams, pstate0,
-            comm0)
+        if telemetry is None:
+            x_hat, history, kept, bits_up, bits_down, masks, pstate = body(
+                spec, x0, states0, key, eta_sched, sel_keys, pparams,
+                pstate0, comm0)
+        else:
+            (x_hat, history, kept, bits_up, bits_down, masks, pstate,
+             taps) = body(
+                spec, x0, states0, key, eta_sched, sel_keys, pparams,
+                pstate0, comm0)
         sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
+        if telemetry is None:
+            return (x_hat, history, sub, kept[sel_idx], bits_up, bits_down,
+                    masks, pstate)
         return (x_hat, history, sub, kept[sel_idx], bits_up, bits_down,
-                masks, pstate)
+                masks, pstate, taps)
 
     return cell
 
@@ -409,18 +480,18 @@ def policy_index_operands(n_pols: int, n_probs: int, n_seeds: int):
 
 
 def _sweep_fn_selection_algo(algo, problem, rounds: int, eval_output: bool,
-                             eta_mode: str):
+                             eta_mode: str, telemetry=None):
     # donate everything but the problem stacks: the policy stacks, index
     # vectors, keys and comm state are all built fresh per call
     donate = (2, 3, 4, 5, 6, 7, 8, 9)
     key = ("sweep-sel-algo", algo, runner_lib.problem_key(problem), rounds,
-           eval_output, eta_mode, donate)
+           eval_output, eta_mode, telemetry, donate)
     fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
 
     cell = make_selection_algo_cell(algo, problem, rounds, eval_output,
-                                    eta_mode, "sweep-sel")
+                                    eta_mode, "sweep-sel", telemetry)
     pcell = make_policy_cell(cell)
     # (spec, x0, pol, pst, pidx, qidx, key, eta, sel_keys, comm0):
     # inner vmap is the dense η axis, outer the flattened cells axis
@@ -431,15 +502,16 @@ def _sweep_fn_selection_algo(algo, problem, rounds: int, eval_output: bool,
     return runner_lib._cache_put(key, jax.jit(grid, donate_argnums=donate))
 
 
-def _sweep_fn_selection_chain(chain, problem, rounds: int):
+def _sweep_fn_selection_chain(chain, problem, rounds: int, telemetry=None):
     donate = (2, 3, 4, 5, 6, 7, 8, 9, 10)
     key = ("sweep-sel-chain", chain._key(), runner_lib.problem_key(problem),
-           rounds, donate)
+           rounds, telemetry, donate)
     fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
 
-    cell = make_selection_chain_cell(chain, problem, rounds, "sweep-sel")
+    cell = make_selection_chain_cell(chain, problem, rounds, "sweep-sel",
+                                     telemetry)
     pcell = make_policy_cell(cell)
     # (spec, x0, pol, pst, pidx, qidx, key, mult, eta_sched, sel_keys, comm0)
     inner = jax.vmap(pcell, in_axes=(None, None, None, None, None, None,
@@ -451,7 +523,7 @@ def _sweep_fn_selection_chain(chain, problem, rounds: int):
 
 def _sweep_fn_algo(algo, problem, rounds: int, eval_output: bool,
                    eta_mode: str, problem_axis: bool = False,
-                   layout: str = "indexed"):
+                   layout: str = "indexed", telemetry=None):
     """The seeds × etas grid cell; ``problem_axis`` wraps one more vmap over
     the problem operands — one compiled call for the whole problems × seeds
     × stepsizes grid (O(P) spec memory under the indexed layout)."""
@@ -461,13 +533,14 @@ def _sweep_fn_algo(algo, problem, rounds: int, eval_output: bool,
         donate = (2, 3)  # keys, etas
     key = ("sweep-algo", algo, runner_lib.problem_key(problem), rounds,
            eval_output, eta_mode, problem_axis,
-           layout if problem_axis else None, donate)
+           layout if problem_axis else None, telemetry, donate)
     fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
 
     tag = "sweep-probs" if problem_axis else "sweep"
-    cell = make_algo_cell(algo, problem, rounds, eval_output, eta_mode, tag)
+    cell = make_algo_cell(algo, problem, rounds, eval_output, eta_mode, tag,
+                          telemetry)
     # problems × seeds ride ONE flattened cells axis (c = p·S + s) — the
     # same batching structure the sharded engine (repro.dist.grid) runs per
     # shard, so sharding is bitwise. Indexed layout: the O(P) spec/x0
@@ -485,21 +558,21 @@ def _sweep_fn_algo(algo, problem, rounds: int, eval_output: bool,
 
 def _sweep_fn_algo_comm(algo, problem, rounds: int, eval_output: bool,
                         eta_mode: str, problem_axis: bool = False,
-                        layout: str = "indexed"):
+                        layout: str = "indexed", telemetry=None):
     if problem_axis and layout == "indexed":
         donate = (2, 3, 4, 5, 6)  # pidx, keys, etas, masks, comm0
     else:
         donate = (2, 3, 4, 5)  # keys, etas, masks, comm0
     key = ("sweep-algo-comm", algo, runner_lib.problem_key(problem), rounds,
            eval_output, eta_mode, problem_axis,
-           layout if problem_axis else None, donate)
+           layout if problem_axis else None, telemetry, donate)
     fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
 
     tag = "sweep-comm-probs" if problem_axis else "sweep-comm"
     cell = make_algo_comm_cell(algo, problem, rounds, eval_output, eta_mode,
-                               tag)
+                               tag, telemetry)
     # masks batch with the cells axis (one independent [R, N] schedule per
     # (problem, seed) cell); the initial CommState is identical across the
     # grid (zeros) so it broadcasts
@@ -517,19 +590,20 @@ def _sweep_fn_algo_comm(algo, problem, rounds: int, eval_output: bool,
 
 
 def _sweep_fn_chain(chain, problem, rounds: int, problem_axis: bool = False,
-                    layout: str = "indexed"):
+                    layout: str = "indexed", telemetry=None):
     if problem_axis and layout == "indexed":
         donate = (2, 3, 4, 5)  # pidx, keys, mults, eta_sched
     else:
         donate = (2, 3, 4)  # keys, mults, eta_sched
     key = ("sweep-chain", chain._key(), runner_lib.problem_key(problem),
-           rounds, problem_axis, layout if problem_axis else None, donate)
+           rounds, problem_axis, layout if problem_axis else None,
+           telemetry, donate)
     fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
 
     tag = "sweep-probs" if problem_axis else "sweep"
-    cell = make_chain_cell(chain, problem, rounds, tag)
+    cell = make_chain_cell(chain, problem, rounds, tag, telemetry)
     if problem_axis and layout == "indexed":
         icell = make_indexed_cell(cell)
         inner = jax.vmap(icell,
@@ -544,19 +618,20 @@ def _sweep_fn_chain(chain, problem, rounds: int, problem_axis: bool = False,
 
 def _sweep_fn_chain_comm(chain, problem, rounds: int,
                          problem_axis: bool = False,
-                         layout: str = "indexed"):
+                         layout: str = "indexed", telemetry=None):
     if problem_axis and layout == "indexed":
         donate = (2, 3, 4, 5, 6, 7)  # pidx, keys, mults, η-sched, masks, comm0
     else:
         donate = (2, 3, 4, 5, 6)
     key = ("sweep-chain-comm", chain._key(), runner_lib.problem_key(problem),
-           rounds, problem_axis, layout if problem_axis else None, donate)
+           rounds, problem_axis, layout if problem_axis else None,
+           telemetry, donate)
     fn = runner_lib._cache_get(key)
     if fn is not None:
         return fn
 
     tag = "sweep-comm-probs" if problem_axis else "sweep-comm"
-    cell = make_chain_comm_cell(chain, problem, rounds, tag)
+    cell = make_chain_comm_cell(chain, problem, rounds, tag, telemetry)
     if problem_axis and layout == "indexed":
         icell = make_indexed_cell(cell)
         inner = jax.vmap(
@@ -596,12 +671,15 @@ def _sweep_fn_chain_decay(chain, problem, rounds: int):
     if fn is not None:
         return fn
 
+    from repro.obs import events as obs_events
+
     body = chain.executor_body(problem, rounds)  # SAME executor as run_sweep
     _, resolve = runner_lib._bind(problem)
 
     def cell(spec, x0, key, eta_scale):
         p = resolve(spec)
         runner_lib.TRACE_COUNTS[f"sweep-decay/{chain.name}"] += 1
+        obs_events.TRACE_EVENTS[f"sweep-decay/{chain.name}"] += 1
         states0 = chain.init_states(p, x0)
         x_hat, history, _ = body(spec, x0, states0, key, eta_scale)
         sub = p.global_loss(x_hat) - runner_lib.f_star_operand(p)
@@ -622,6 +700,8 @@ def _sweep_fn_methods(methods, problem, rounds: int, eval_output: bool):
     if fn is not None:
         return fn
 
+    from repro.obs import events as obs_events
+
     body = runner_lib.method_executor_body(methods, problem, eval_output)
     _, resolve = runner_lib._bind(problem)
     eta_scale = jnp.ones((rounds,), jnp.float32)
@@ -629,6 +709,7 @@ def _sweep_fn_methods(methods, problem, rounds: int, eval_output: bool):
     def cell(spec, x0, state0, key, eta, midx):
         p = resolve(spec)
         runner_lib.TRACE_COUNTS[f"sweep-methods/{tag}"] += 1
+        obs_events.TRACE_EVENTS[f"sweep-methods/{tag}"] += 1
         state0 = state0._replace(eta=state0.eta * eta)  # scale semantics
         keys = jax.random.split(key, rounds)
         state, history = body(spec, state0, keys, eta_scale, midx)
@@ -698,12 +779,21 @@ def _as_stacked_specs(problems):
     return spec_lib.stack_specs(specs), names
 
 
+def _split_taps(outs, telemetry):
+    """Split the trailing taps element off a grid output tuple when
+    telemetry was enabled — ``(outs, taps-or-None)``."""
+    if telemetry is None:
+        return outs, None
+    return outs[:-1], outs[-1]
+
+
 def _run_grid_sweep(algo_or_chain, problem, x0, rounds: int, *,
                     seeds: Sequence[int], etas: Sequence[float],
                     eta_mode: Optional[str] = None, eval_output: bool = True,
                     decay: Optional[dict] = None, comm=None,
                     problems=None, mesh=None,
-                    operand_layout: str = "indexed") -> SweepResult:
+                    operand_layout: str = "indexed",
+                    telemetry=None) -> SweepResult:
     """The (seed, η) / (problem, seed, η) grid family — see ``run()``."""
     if mesh is not None:
         from repro.dist import grid as dist_grid
@@ -712,7 +802,7 @@ def _run_grid_sweep(algo_or_chain, problem, x0, rounds: int, *,
             algo_or_chain, problem, x0, rounds, seeds=seeds, etas=etas,
             eta_mode=eta_mode, eval_output=eval_output, decay=decay,
             comm=comm, problems=problems, mesh=mesh,
-            operand_layout=operand_layout)
+            operand_layout=operand_layout, telemetry=telemetry)
     is_chain = isinstance(algo_or_chain, chain_lib.Chain)
     eta_mode = _resolve_eta_mode(algo_or_chain, eta_mode)
     check_operand_layout(operand_layout)
@@ -766,37 +856,47 @@ def _run_grid_sweep(algo_or_chain, problem, x0, rounds: int, *,
             if comm is not None:
                 fn = _sweep_fn_chain_comm(chain, stacked, rounds,
                                           problem_axis=True,
-                                          layout=operand_layout)
-                x_hat, history, final, kept, bits_up, bits_down = grid_shape(
-                    fn(*lead, keys_c, etas_arr, eta_sched, masks, comm0))
+                                          layout=operand_layout,
+                                          telemetry=telemetry)
+                outs, taps = _split_taps(grid_shape(
+                    fn(*lead, keys_c, etas_arr, eta_sched, masks, comm0)),
+                    telemetry)
+                x_hat, history, final, kept, bits_up, bits_down = outs
                 return SweepResult(history=history, final_sub=final,
                                    x_hat=x_hat, seeds=seeds, etas=etas,
                                    selected_initial=kept, bits_up=bits_up,
-                                   bits_down=bits_down, problems=prob_names)
+                                   bits_down=bits_down, problems=prob_names,
+                                   diagnostics=taps)
             fn = _sweep_fn_chain(chain, stacked, rounds, problem_axis=True,
-                                 layout=operand_layout)
-            x_hat, history, final, kept = grid_shape(
-                fn(*lead, keys_c, etas_arr, eta_sched))
+                                 layout=operand_layout, telemetry=telemetry)
+            outs, taps = _split_taps(grid_shape(
+                fn(*lead, keys_c, etas_arr, eta_sched)), telemetry)
+            x_hat, history, final, kept = outs
             return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                                seeds=seeds, etas=etas, selected_initial=kept,
-                               problems=prob_names)
+                               problems=prob_names, diagnostics=taps)
         if comm is not None:
             fn = _sweep_fn_algo_comm(algo_or_chain, stacked, rounds,
                                      eval_output, eta_mode,
                                      problem_axis=True,
-                                     layout=operand_layout)
-            x_hat, history, final, bits_up, bits_down = grid_shape(
-                fn(*lead, keys_c, etas_arr, masks, comm0))
+                                     layout=operand_layout,
+                                     telemetry=telemetry)
+            outs, taps = _split_taps(grid_shape(
+                fn(*lead, keys_c, etas_arr, masks, comm0)), telemetry)
+            x_hat, history, final, bits_up, bits_down = outs
             return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                                seeds=seeds, etas=etas, bits_up=bits_up,
-                               bits_down=bits_down, problems=prob_names)
+                               bits_down=bits_down, problems=prob_names,
+                               diagnostics=taps)
         fn = _sweep_fn_algo(algo_or_chain, stacked, rounds, eval_output,
                             eta_mode, problem_axis=True,
-                            layout=operand_layout)
-        x_hat, history, final = grid_shape(
-            fn(*lead, keys_c, etas_arr))
+                            layout=operand_layout, telemetry=telemetry)
+        outs, taps = _split_taps(grid_shape(
+            fn(*lead, keys_c, etas_arr)), telemetry)
+        x_hat, history, final = outs
         return SweepResult(history=history, final_sub=final, x_hat=x_hat,
-                           seeds=seeds, etas=etas, problems=prob_names)
+                           seeds=seeds, etas=etas, problems=prob_names,
+                           diagnostics=taps)
 
     spec = runner_lib.as_spec(problem)
 
@@ -812,16 +912,23 @@ def _run_grid_sweep(algo_or_chain, problem, x0, rounds: int, *,
             masks = jnp.stack([
                 comm.round_masks(n_sched, n_clients, fold=s)
                 for s in range(len(seeds))])
-            fn = _sweep_fn_chain_comm(chain, problem, rounds)
-            x_hat, history, final, kept, bits_up, bits_down = fn(
-                spec, x0, keys, etas_arr, eta_sched, masks, comm0)
+            fn = _sweep_fn_chain_comm(chain, problem, rounds,
+                                      telemetry=telemetry)
+            outs, taps = _split_taps(
+                fn(spec, x0, keys, etas_arr, eta_sched, masks, comm0),
+                telemetry)
+            x_hat, history, final, kept, bits_up, bits_down = outs
             return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                                seeds=seeds, etas=etas, selected_initial=kept,
-                               bits_up=bits_up, bits_down=bits_down)
-        fn = _sweep_fn_chain(chain, problem, rounds)
-        x_hat, history, final, kept = fn(spec, x0, keys, etas_arr, eta_sched)
+                               bits_up=bits_up, bits_down=bits_down,
+                               diagnostics=taps)
+        fn = _sweep_fn_chain(chain, problem, rounds, telemetry=telemetry)
+        outs, taps = _split_taps(
+            fn(spec, x0, keys, etas_arr, eta_sched), telemetry)
+        x_hat, history, final, kept = outs
         return SweepResult(history=history, final_sub=final, x_hat=x_hat,
-                           seeds=seeds, etas=etas, selected_initial=kept)
+                           seeds=seeds, etas=etas, selected_initial=kept,
+                           diagnostics=taps)
 
     if decay is not None:
         raise NotImplementedError("decay sweeps: wrap the algorithm in a Chain")
@@ -830,16 +937,20 @@ def _run_grid_sweep(algo_or_chain, problem, x0, rounds: int, *,
             comm.round_masks(rounds, n_clients, fold=s)
             for s in range(len(seeds))])
         fn = _sweep_fn_algo_comm(algo_or_chain, problem, rounds, eval_output,
-                                 eta_mode)
-        x_hat, history, final, bits_up, bits_down = fn(
-            spec, x0, keys, etas_arr, masks, comm0)
+                                 eta_mode, telemetry=telemetry)
+        outs, taps = _split_taps(
+            fn(spec, x0, keys, etas_arr, masks, comm0), telemetry)
+        x_hat, history, final, bits_up, bits_down = outs
         return SweepResult(history=history, final_sub=final, x_hat=x_hat,
                            seeds=seeds, etas=etas,
-                           bits_up=bits_up, bits_down=bits_down)
-    fn = _sweep_fn_algo(algo_or_chain, problem, rounds, eval_output, eta_mode)
-    x_hat, history, final = fn(spec, x0, keys, etas_arr)
+                           bits_up=bits_up, bits_down=bits_down,
+                           diagnostics=taps)
+    fn = _sweep_fn_algo(algo_or_chain, problem, rounds, eval_output, eta_mode,
+                        telemetry=telemetry)
+    outs, taps = _split_taps(fn(spec, x0, keys, etas_arr), telemetry)
+    x_hat, history, final = outs
     return SweepResult(history=history, final_sub=final, x_hat=x_hat,
-                       seeds=seeds, etas=etas)
+                       seeds=seeds, etas=etas, diagnostics=taps)
 
 
 def run_method_sweep(methods, problem, x0, rounds: int, *,
@@ -1072,6 +1183,12 @@ class SweepRequest:
     * ``mesh``: a 1-D ``('grid',)`` device mesh (``dist.make_grid_mesh``)
       shard_maps the flattened cells axis — same semantics, same bits,
       bitwise identical results including the ledgers.
+    * ``telemetry``: a ``repro.obs.Telemetry`` spec enabling in-scan round
+      taps — ``SweepResult.diagnostics`` carries the per-round diagnostics
+      dict with the grid's leading axes. A structural cache-key dimension:
+      ``telemetry=None`` (the default) reuses today's executors bitwise.
+      Supported by the (seed, η) and ``policies`` families; the
+      decay/fraction families reject it.
 
     The legacy entry points (``run_sweep``, ``run_decay_sweep``,
     ``run_fraction_sweep``, ``selection.run_selection_sweep``) are thin
@@ -1098,6 +1215,7 @@ class SweepRequest:
     problems: object = None
     mesh: object = None
     operand_layout: str = "indexed"
+    telemetry: object = None
 
 
 def run(req: SweepRequest) -> SweepResult:
@@ -1112,6 +1230,10 @@ def run(req: SweepRequest) -> SweepResult:
         raise ValueError(
             f"SweepRequest selects at most one sweep family; got "
             f"{families} together")
+    if req.telemetry is not None and families not in ([], ["policies"]):
+        raise ValueError(
+            f"telemetry round taps are supported by the (seed, η) and "
+            f"policies sweep families, not {families[0]!r}")
     if req.policies is not None:
         from repro.selection import sweep as sel_sweep
 
@@ -1119,7 +1241,8 @@ def run(req: SweepRequest) -> SweepResult:
             req.algo_or_chain, req.problem, req.x0, req.rounds,
             policies=req.policies, seeds=req.seeds, etas=req.etas,
             eta_mode=req.eta_mode, comm=req.comm, problems=req.problems,
-            eval_output=req.eval_output, mesh=req.mesh)
+            eval_output=req.eval_output, mesh=req.mesh,
+            telemetry=req.telemetry)
     if req.fractions is not None:
         return _run_fraction_sweep(
             req.algo_or_chain, req.problem, req.x0, req.rounds,
@@ -1135,7 +1258,7 @@ def run(req: SweepRequest) -> SweepResult:
         seeds=req.seeds, etas=req.etas, eta_mode=req.eta_mode,
         eval_output=req.eval_output, decay=req.decay, comm=req.comm,
         problems=req.problems, mesh=req.mesh,
-        operand_layout=req.operand_layout)
+        operand_layout=req.operand_layout, telemetry=req.telemetry)
 
 
 def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
@@ -1143,14 +1266,15 @@ def run_sweep(algo_or_chain, problem, x0, rounds: int, *,
               eta_mode: Optional[str] = None, eval_output: bool = True,
               decay: Optional[dict] = None, comm=None,
               problems=None, mesh=None,
-              operand_layout: str = "indexed") -> SweepResult:
+              operand_layout: str = "indexed",
+              telemetry=None) -> SweepResult:
     """Thin keyword shim over ``run()`` for the (seed, η) grid family —
     ``SweepRequest`` documents the operand axes."""
     return run(SweepRequest(
         algo_or_chain=algo_or_chain, problem=problem, x0=x0, rounds=rounds,
         seeds=seeds, etas=etas, eta_mode=eta_mode, eval_output=eval_output,
         decay=decay, comm=comm, problems=problems, mesh=mesh,
-        operand_layout=operand_layout))
+        operand_layout=operand_layout, telemetry=telemetry))
 
 
 def run_decay_sweep(chain, problem, x0, rounds: int, *,

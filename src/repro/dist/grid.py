@@ -156,8 +156,8 @@ def run_sweep_sharded(algo_or_chain, problem, x0, rounds: int, *,
                       eval_output: bool = True,
                       decay: Optional[dict] = None, comm=None,
                       problems=None,
-                      operand_layout: str = "indexed"
-                      ) -> "sweep_lib.SweepResult":
+                      operand_layout: str = "indexed",
+                      telemetry=None) -> "sweep_lib.SweepResult":
     """``core.sweep.run_sweep`` on a ``('grid',)`` device mesh.
 
     Same arguments, same semantics, same ``SweepResult`` shapes; results,
@@ -254,77 +254,87 @@ def run_sweep_sharded(algo_or_chain, problem, x0, rounds: int, *,
         if comm is not None:
             cell, axes, reps, lead, donate = plan(
                 sweep_lib.make_chain_comm_cell(chain, stacked, rounds,
-                                               name_tag),
+                                               name_tag, telemetry),
                 (None, None, None, 0, None, None, None),
                 (rep, rep, False, True, True, False, True))
             fn = _sharded_grid_fn(
                 ("dist-chain-comm", chain._key(), pkey, rounds, per_cell,
-                 layout_key),
+                 layout_key, telemetry),
                 mesh, cell, cell_in_axes=axes, replicated_args=reps,
                 donate_argnums=donate)
-            outs = fn(*lead, keys_c, etas_arr, eta_sched, masks_c, comm0)
-            x_hat, history, final, kept, bits_up, bits_down = _unpad_cells(
-                outs, n_cells, lead_shape)
+            outs, taps = sweep_lib._split_taps(_unpad_cells(
+                fn(*lead, keys_c, etas_arr, eta_sched, masks_c, comm0),
+                n_cells, lead_shape), telemetry)
+            x_hat, history, final, kept, bits_up, bits_down = outs
             return sweep_lib.SweepResult(
                 history=history, final_sub=final, x_hat=x_hat, seeds=seeds,
                 etas=etas, selected_initial=kept, bits_up=bits_up,
-                bits_down=bits_down, problems=prob_names)
+                bits_down=bits_down, problems=prob_names, diagnostics=taps)
         cell, axes, reps, lead, donate = plan(
-            sweep_lib.make_chain_cell(chain, stacked, rounds, name_tag),
+            sweep_lib.make_chain_cell(chain, stacked, rounds, name_tag,
+                                      telemetry),
             (None, None, None, 0, None),
             (rep, rep, False, True, True))
         fn = _sharded_grid_fn(
-            ("dist-chain", chain._key(), pkey, rounds, per_cell, layout_key),
+            ("dist-chain", chain._key(), pkey, rounds, per_cell, layout_key,
+             telemetry),
             mesh, cell, cell_in_axes=axes, replicated_args=reps,
             donate_argnums=donate)
-        outs = fn(*lead, keys_c, etas_arr, eta_sched)
-        x_hat, history, final, kept = _unpad_cells(
-            outs, n_cells, lead_shape)
+        outs, taps = sweep_lib._split_taps(_unpad_cells(
+            fn(*lead, keys_c, etas_arr, eta_sched), n_cells, lead_shape),
+            telemetry)
+        x_hat, history, final, kept = outs
         return sweep_lib.SweepResult(
             history=history, final_sub=final, x_hat=x_hat, seeds=seeds,
-            etas=etas, selected_initial=kept, problems=prob_names)
+            etas=etas, selected_initial=kept, problems=prob_names,
+            diagnostics=taps)
 
     algo = algo_or_chain
     if comm is not None:
         cell, axes, reps, lead, donate = plan(
             sweep_lib.make_algo_comm_cell(
-                algo, stacked, rounds, eval_output, eta_mode, name_tag),
+                algo, stacked, rounds, eval_output, eta_mode, name_tag,
+                telemetry),
             (None, None, None, 0, None, None),
             (rep, rep, False, True, False, True))
         fn = _sharded_grid_fn(
             ("dist-algo-comm", algo, pkey, rounds, eval_output, eta_mode,
-             per_cell, layout_key),
+             per_cell, layout_key, telemetry),
             mesh, cell, cell_in_axes=axes, replicated_args=reps,
             donate_argnums=donate)
-        outs = fn(*lead, keys_c, etas_arr, masks_c, comm0)
-        x_hat, history, final, bits_up, bits_down = _unpad_cells(
-            outs, n_cells, lead_shape)
+        outs, taps = sweep_lib._split_taps(_unpad_cells(
+            fn(*lead, keys_c, etas_arr, masks_c, comm0), n_cells,
+            lead_shape), telemetry)
+        x_hat, history, final, bits_up, bits_down = outs
         return sweep_lib.SweepResult(
             history=history, final_sub=final, x_hat=x_hat, seeds=seeds,
             etas=etas, bits_up=bits_up, bits_down=bits_down,
-            problems=prob_names)
+            problems=prob_names, diagnostics=taps)
     cell, axes, reps, lead, donate = plan(
         sweep_lib.make_algo_cell(
-            algo, stacked, rounds, eval_output, eta_mode, name_tag),
+            algo, stacked, rounds, eval_output, eta_mode, name_tag,
+            telemetry),
         (None, None, None, 0),
         (rep, rep, False, True))
     fn = _sharded_grid_fn(
         ("dist-algo", algo, pkey, rounds, eval_output, eta_mode, per_cell,
-         layout_key),
+         layout_key, telemetry),
         mesh, cell, cell_in_axes=axes, replicated_args=reps,
         donate_argnums=donate)
-    outs = fn(*lead, keys_c, etas_arr)
-    x_hat, history, final = _unpad_cells(outs, n_cells, lead_shape)
+    outs, taps = sweep_lib._split_taps(_unpad_cells(
+        fn(*lead, keys_c, etas_arr), n_cells, lead_shape), telemetry)
+    x_hat, history, final = outs
     return sweep_lib.SweepResult(history=history, final_sub=final,
                                  x_hat=x_hat, seeds=seeds, etas=etas,
-                                 problems=prob_names)
+                                 problems=prob_names, diagnostics=taps)
 
 
 def run_selection_sweep_sharded(algo_or_chain, problem, x0, rounds: int, *,
                                 policies, seeds: Sequence[int], mesh,
                                 etas: Sequence[float] = (1.0,),
                                 eta_mode: Optional[str] = None, comm=None,
-                                problems=None, eval_output: bool = True):
+                                problems=None, eval_output: bool = True,
+                                telemetry=None):
     """``selection.sweep.run_selection_sweep`` with the flattened policies ×
     problems × seeds cells sharded over the ``grid`` mesh axis.
 
@@ -357,9 +367,9 @@ def run_selection_sweep_sharded(algo_or_chain, problem, x0, rounds: int, *,
         chain = algo_or_chain
         cell = sweep_lib.make_policy_cell(
             sweep_lib.make_selection_chain_cell(chain, ops.stacked, rounds,
-                                                "dist-sel"))
+                                                "dist-sel", telemetry))
         fn = _sharded_grid_fn(
-            ("dist-sel-chain", chain._key(), pkey, rounds),
+            ("dist-sel-chain", chain._key(), pkey, rounds, telemetry),
             mesh, cell,
             cell_in_axes=(None, None, None, None, None, None, None, 0,
                           None, None, None),
@@ -368,21 +378,25 @@ def run_selection_sweep_sharded(algo_or_chain, problem, x0, rounds: int, *,
             donate_argnums=tuple(range(2, 11)))
         outs = fn(*lead, pidx_c, qidx_c, keys_c, ops.etas_arr,
                   ops.eta_sched, sel_keys_c, ops.comm0)
+        outs, taps = sweep_lib._split_taps(
+            _unpad_cells(outs, n_cells, lead_shape), telemetry)
         (x_hat, history, final, kept, bits_up, bits_down, masks,
-         pstate) = _unpad_cells(outs, n_cells, lead_shape)
+         pstate) = outs
         return sel_sweep.SelectionSweepResult(
             history=history, final_sub=final, x_hat=x_hat, bits_up=bits_up,
             bits_down=bits_down, masks=masks, policy_state=pstate,
             policies=ops.pol_names, problems=ops.prob_names,
-            seeds=ops.seeds, etas=ops.etas, selected_initial=kept)
+            seeds=ops.seeds, etas=ops.etas, selected_initial=kept,
+            diagnostics=taps)
 
     algo = algo_or_chain
     cell = sweep_lib.make_policy_cell(
         sweep_lib.make_selection_algo_cell(algo, ops.stacked, rounds,
                                            eval_output, ops.eta_mode,
-                                           "dist-sel"))
+                                           "dist-sel", telemetry))
     fn = _sharded_grid_fn(
-        ("dist-sel-algo", algo, pkey, rounds, eval_output, ops.eta_mode),
+        ("dist-sel-algo", algo, pkey, rounds, eval_output, ops.eta_mode,
+         telemetry),
         mesh, cell,
         cell_in_axes=(None, None, None, None, None, None, None, 0, None,
                       None),
@@ -391,13 +405,14 @@ def run_selection_sweep_sharded(algo_or_chain, problem, x0, rounds: int, *,
         donate_argnums=tuple(range(2, 10)))
     outs = fn(*lead, pidx_c, qidx_c, keys_c, ops.etas_arr, sel_keys_c,
               ops.comm0)
-    x_hat, history, final, bits_up, bits_down, masks, pstate = _unpad_cells(
-        outs, n_cells, lead_shape)
+    outs, taps = sweep_lib._split_taps(
+        _unpad_cells(outs, n_cells, lead_shape), telemetry)
+    x_hat, history, final, bits_up, bits_down, masks, pstate = outs
     return sel_sweep.SelectionSweepResult(
         history=history, final_sub=final, x_hat=x_hat, bits_up=bits_up,
         bits_down=bits_down, masks=masks, policy_state=pstate,
         policies=ops.pol_names, problems=ops.prob_names, seeds=ops.seeds,
-        etas=ops.etas)
+        etas=ops.etas, diagnostics=taps)
 
 
 def run_fraction_sweep_sharded(chain, problem, x0, rounds: int, *,

@@ -1,47 +1,28 @@
 """Lightweight run-metrics logging: JSONL event stream + rolling aggregates.
 
 Used by the training/serving drivers; offline-friendly (plain files, no
-external services).
+external services). ``MetricsLogger`` is a thin shim over the obs event
+recorder (``repro.obs.events.EventRecorder``): every ``log()`` call is a
+``metric`` event in the obs schema, so a training log and an executor event
+log are the same JSONL dialect and ``python -m repro.obs report``
+summarizes both. Context-managed — ``with MetricsLogger(path) as m: ...``
+closes the file handle even when the training loop raises.
 """
 from __future__ import annotations
 
 import json
-import os
-import time
-from collections import deque
-from typing import Optional
+
+from repro.obs.events import EventRecorder
 
 
-class MetricsLogger:
-    def __init__(self, path: Optional[str] = None, *, window: int = 50):
-        self.path = path
-        self._fh = None
-        if path:
-            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-            self._fh = open(path, "a")
-        self._win = {}
-        self._window = window
-        self._t0 = time.time()
+class MetricsLogger(EventRecorder):
+    """Training-metric recorder: ``log(step, loss=...)`` appends one
+    ``metric`` event (JSONL when a path is given) and feeds the rolling
+    ``mean(key)`` windows. A plain ``EventRecorder`` restricted to the
+    metric kind, kept as the drivers' stable entry point."""
 
-    def log(self, step: int, **values):
-        rec = {"step": step, "t": round(time.time() - self._t0, 3)}
-        for k, v in values.items():
-            v = float(v)
-            rec[k] = v
-            self._win.setdefault(k, deque(maxlen=self._window)).append(v)
-        if self._fh:
-            self._fh.write(json.dumps(rec) + "\n")
-            self._fh.flush()
-        return rec
-
-    def mean(self, key: str) -> float:
-        buf = self._win.get(key)
-        return sum(buf) / len(buf) if buf else float("nan")
-
-    def close(self):
-        if self._fh:
-            self._fh.close()
-            self._fh = None
+    def log(self, step: int, **values) -> dict:
+        return self.metric(step, **values)
 
 
 def read_jsonl(path: str):

@@ -76,21 +76,21 @@ def run_plain(cfg, args):
     stream = SyntheticTokenStream(TokenStreamConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq, batch_size=args.batch,
         num_clients=1, seed=args.seed))
-    logger = MetricsLogger(args.metrics_path)
 
     losses = []
     t0 = time.time()
-    for step in range(args.steps):
-        batch = _full_batch(cfg, stream.batch(0, step), args)
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
-        losses.append(float(metrics["loss"]))
-        logger.log(step, loss=losses[-1])
-        if step % args.log_every == 0:
-            print(f"step {step:5d} loss {losses[-1]:.4f} "
-                  f"({(time.time()-t0)/(step+1):.2f}s/step)")
-        if args.ckpt_every and args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, step + 1, params)
-    logger.close()
+    with MetricsLogger(args.metrics_path) as logger:
+        for step in range(args.steps):
+            batch = _full_batch(cfg, stream.batch(0, step), args)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            losses.append(float(metrics["loss"]))
+            logger.log(step, loss=losses[-1])
+            if step % args.log_every == 0:
+                print(f"step {step:5d} loss {losses[-1]:.4f} "
+                      f"({(time.time()-t0)/(step+1):.2f}s/step)")
+            if (args.ckpt_every and args.ckpt_dir
+                    and (step + 1) % args.ckpt_every == 0):
+                save_checkpoint(args.ckpt_dir, step + 1, params)
     return params, losses
 
 
@@ -110,6 +110,8 @@ def _full_batch(cfg, batch, args):
 def run_fedchain(cfg, args):
     """FedChain (Algo 1) over simulated client groups:
     local rounds (K steps each, per-client replicas) → selection → global."""
+    from repro.launch.metrics import MetricsLogger
+
     key = jax.random.PRNGKey(args.seed)
     c = args.clients
     params0 = transformer.init_model(cfg, key)
@@ -146,31 +148,37 @@ def run_fedchain(cfg, args):
     client_o = jax.vmap(opt.init)(client_p)
     losses = []
     step0 = 0
-    for r in range(fl.local_rounds):
-        batches = client_batches(step0, fl.local_steps)
-        client_p, client_o, loss = local_round(client_p, client_o, batches)
-        step0 += fl.local_steps
-        losses.append(float(loss))
-        print(f"[local round {r}] loss {loss:.4f}")
+    with MetricsLogger(args.metrics_path) as logger:
+        for r in range(fl.local_rounds):
+            batches = client_batches(step0, fl.local_steps)
+            client_p, client_o, loss = local_round(client_p, client_o,
+                                                   batches)
+            step0 += fl.local_steps
+            losses.append(float(loss))
+            logger.log(step0, loss=losses[-1], phase=0.0, local_round=r)
+            print(f"[local round {r}] loss {loss:.4f}")
 
-    # ---- selection (Lemma H.2) --------------------------------------------
-    probe = client_batches(step0, 1)
-    probe = jax.tree.map(lambda t: t[0], probe)  # [C, b, ...]
-    cand_a = fc.broadcast_to_clients(params0, c)
-    chosen, picked_init, (la, lb) = select(cand_a, client_p, probe)
-    print(f"[selection] F(x0)={float(la):.4f} F(x_half)={float(lb):.4f} "
-          f"kept {'x0' if bool(picked_init) else 'x_half'}")
+        # ---- selection (Lemma H.2) ----------------------------------------
+        probe = client_batches(step0, 1)
+        probe = jax.tree.map(lambda t: t[0], probe)  # [C, b, ...]
+        cand_a = fc.broadcast_to_clients(params0, c)
+        chosen, picked_init, (la, lb) = select(cand_a, client_p, probe)
+        print(f"[selection] F(x0)={float(la):.4f} F(x_half)={float(lb):.4f} "
+              f"kept {'x0' if bool(picked_init) else 'x_half'}")
 
-    # ---- phase 2: A_global (synchronous SGD) -------------------------------
-    params = jax.tree.map(lambda t: t[0], chosen)
-    opt_state = opt.init(params)
-    remaining = max(0, args.steps - fl.local_rounds * fl.local_steps)
-    for step in range(remaining):
-        batch = _full_batch(cfg, stream.batch(step % c, step0 + step), args)
-        params, opt_state, metrics = global_step(params, opt_state, batch)
-        losses.append(float(metrics["loss"]))
-        if step % args.log_every == 0:
-            print(f"[global step {step}] loss {losses[-1]:.4f}")
+        # ---- phase 2: A_global (synchronous SGD) --------------------------
+        params = jax.tree.map(lambda t: t[0], chosen)
+        opt_state = opt.init(params)
+        remaining = max(0, args.steps - fl.local_rounds * fl.local_steps)
+        for step in range(remaining):
+            batch = _full_batch(cfg, stream.batch(step % c, step0 + step),
+                                args)
+            params, opt_state, metrics = global_step(params, opt_state,
+                                                     batch)
+            losses.append(float(metrics["loss"]))
+            logger.log(step0 + step, loss=losses[-1], phase=1.0)
+            if step % args.log_every == 0:
+                print(f"[global step {step}] loss {losses[-1]:.4f}")
     return params, losses
 
 

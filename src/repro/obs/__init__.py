@@ -1,0 +1,51 @@
+"""Run-telemetry subsystem: in-scan round taps, executor event log, and
+profiled benchmarks.
+
+The telemetry model, in one page
+================================
+
+**What is traced.** Layer 1 (``repro.obs.telemetry``) lives INSIDE the
+compiled executors: a frozen ``Telemetry`` spec makes the
+runner/chain/sweep/dist scan bodies emit a per-round diagnostics dict as
+extra ``lax.scan`` outputs — update/gradient norms, the error-feedback
+residual norms of all three ``CommPlan`` legs (uplink and momentum share
+the per-client tables; downlink is the server-side residual), participation
+counts, per-leg bits, policy-state summaries, and the active chain stage.
+Every tap is a pure in-trace reduction of values the round body already
+holds (batch-invariant ``tree_math`` ops — the vmapped and sharded engines
+agree bitwise); there are no host callbacks and no trace-time side effects
+beyond the whitelisted ``TRACE_EVENTS`` counter bump, so the taps are
+R1/R2-clean by construction.
+
+**Cache-key semantics.** ``Telemetry`` is a STRUCTURAL cache-key dimension,
+like the named donate tuples: executor bodies append it to their cache key,
+so a taps-on run compiles its own executor (exactly one extra compile per
+family) and ``telemetry=None`` — the default on every entry point — reuses
+today's keys and traces today's jaxprs, making the None path bitwise
+identical to a build without this package. The taps-on warm path is gated
+by ``BENCH_obs.json`` (≤1.15× the taps-off warm time, zero warm retraces)
+in ``benchmarks/check_regression.py``.
+
+**What is host-side.** Layer 2 (``repro.obs.events``) is a JSONL event
+recorder hooked beside ``runner.AUDIT_SINK`` and the executor cache:
+``compile`` events (family, trace tags, wall seconds, donation tuple,
+optional jaxpr const bytes), ``cache`` hit/miss/put/evict events, benchmark
+``phase`` events, and training ``metric`` events (the
+``launch.metrics.MetricsLogger`` schema — that logger is now a shim over
+this recorder). ``python -m repro.obs report`` summarizes a log. Layer 3
+(``repro.obs.profile``) adds run manifests and ``jax.profiler`` annotations
+for ``benchmarks/run.py --profile``. Both layers observe from the host and
+never execute at trace time — a recorder can be installed or removed
+without invalidating a single cached executor.
+"""
+from repro.obs.events import (
+    EventRecorder, TRACE_EVENTS, emit, install, recording, uninstall,
+)
+from repro.obs.profile import annotate, phase, run_manifest, write_manifest
+from repro.obs.telemetry import Telemetry, round_taps
+
+__all__ = [
+    "EventRecorder", "TRACE_EVENTS", "Telemetry", "annotate", "emit",
+    "install", "phase", "recording", "round_taps", "run_manifest",
+    "uninstall", "write_manifest",
+]

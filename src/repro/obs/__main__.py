@@ -1,0 +1,87 @@
+"""``python -m repro.obs report [PATH]`` — summarize an event-log JSONL.
+
+Prints, for one run's ``obs_events.jsonl``: event counts by kind, compiles
+per executor family with total compile seconds, executor-cache
+hit/miss/put/evict tallies, the benchmark phases with their trace counts,
+and rolling means of the logged training metrics.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import sys
+
+from repro.obs import events as events_lib
+
+
+def _load(path: str):
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def report(records, out=sys.stdout) -> None:
+    kinds = collections.Counter(r.get("kind", "?") for r in records)
+    print(f"events: {sum(kinds.values())} "
+          f"({', '.join(f'{k}={v}' for k, v in sorted(kinds.items()))})",
+          file=out)
+
+    compiles = [r for r in records if r.get("kind") == "compile"]
+    if compiles:
+        per_family = collections.defaultdict(lambda: [0, 0.0])
+        for r in compiles:
+            fam = per_family[r.get("family", "?")]
+            fam[0] += int(r.get("traces", 1))
+            fam[1] += float(r.get("compile_s", 0.0))
+        print("compiles:", file=out)
+        for name, (n, secs) in sorted(per_family.items()):
+            print(f"  {name}: {n} trace(s), {secs:.3f}s", file=out)
+        total = sum(f[1] for f in per_family.values())
+        print(f"  total: {sum(f[0] for f in per_family.values())} trace(s), "
+              f"{total:.3f}s", file=out)
+
+    cache_ops = collections.Counter(
+        r.get("op", "?") for r in records if r.get("kind") == "cache")
+    if cache_ops:
+        print("cache: " + ", ".join(
+            f"{k}={v}" for k, v in sorted(cache_ops.items())), file=out)
+
+    phases = [r for r in records if r.get("kind") == "phase"]
+    if phases:
+        print("phases:", file=out)
+        for r in phases:
+            print(f"  {r.get('name', '?')}: {r.get('seconds', 0.0):.3f}s, "
+                  f"{r.get('traces', 0)} trace(s)", file=out)
+
+    metrics = [r for r in records if r.get("kind") == "metric"]
+    if metrics:
+        sums = collections.defaultdict(lambda: [0, 0.0])
+        for r in metrics:
+            for k, v in r.items():
+                if k in ("kind", "t", "step"):
+                    continue
+                if isinstance(v, (int, float)):
+                    sums[k][0] += 1
+                    sums[k][1] += float(v)
+        print(f"metrics: {len(metrics)} record(s)", file=out)
+        for k, (n, s) in sorted(sums.items()):
+            print(f"  {k}: mean {s / n:.6g} over {n}", file=out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    rep = sub.add_parser("report", help="summarize an event-log JSONL")
+    rep.add_argument("path", nargs="?", default=events_lib.DEFAULT_PATH)
+    args = ap.parse_args(argv)
+    try:
+        records = _load(args.path)
+    except OSError as e:
+        print(f"cannot read {args.path}: {e}", file=sys.stderr)
+        return 2
+    report(records)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,88 @@
+"""Layer 3: profiled benchmarks — run manifests, ``jax.profiler`` trace
+annotations, and a uniform compile-vs-warm phase capture.
+
+``benchmarks/run.py --profile`` composes these: every harness runs inside
+``annotate`` scopes (visible in a profiler trace when one is being
+captured), each phase's wall seconds and ``TRACE_COUNTS`` movement land in
+the obs event log as ``phase`` events, and ``write_manifest`` records the
+run environment (backend, devices, XLA flags, config hash) next to every
+``BENCH_*.json`` so benchmark numbers are attributable to a machine state.
+All host-side; nothing here runs in a trace.
+"""
+from __future__ import annotations
+
+import contextlib
+import hashlib
+import json
+import os
+import time
+
+MANIFEST_PATH = "BENCH_manifest.json"
+
+
+def run_manifest(extra: dict = None) -> dict:
+    """The run environment a benchmark number depends on, as a flat dict
+    with a stable ``config_hash`` over the sorted contents."""
+    import jax
+
+    manifest = {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "devices": [str(d) for d in jax.devices()],
+        "jax_version": jax.__version__,
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "force_pallas": os.environ.get("REPRO_FORCE_PALLAS", ""),
+    }
+    if extra:
+        manifest.update(extra)
+    digest = hashlib.sha256(
+        json.dumps(manifest, sort_keys=True).encode()).hexdigest()
+    manifest["config_hash"] = digest[:16]
+    return manifest
+
+
+def write_manifest(path: str = MANIFEST_PATH, extra: dict = None) -> dict:
+    manifest = run_manifest(extra)
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return manifest
+
+
+@contextlib.contextmanager
+def annotate(name: str):
+    """A named ``jax.profiler`` trace annotation (no-op without profiler
+    support) — harness phases show up as labeled spans in captured traces."""
+    try:
+        from jax.profiler import TraceAnnotation
+    except ImportError:  # profiler not available on this build
+        yield
+        return
+    with TraceAnnotation(name):
+        yield
+
+
+@contextlib.contextmanager
+def phase(name: str):
+    """Measure one benchmark phase: wall seconds + TRACE_COUNTS movement.
+
+    Yields a dict filled at exit with ``seconds``, ``traces`` (total trace
+    count the phase paid) and ``trace_tags``; the same summary is emitted as
+    a ``phase`` event to the installed obs recorder. Wrapping a harness call
+    twice — cold then warm — is the uniform compile-vs-warm breakdown
+    ``benchmarks/run.py --profile`` reports: the cold phase carries the
+    compiles, the warm phase must carry none.
+    """
+    from repro.core import runner
+    from repro.obs import events
+
+    info = {"name": name}
+    before = dict(runner.TRACE_COUNTS)
+    t0 = time.perf_counter()
+    with annotate(name):
+        yield info
+    info["seconds"] = round(time.perf_counter() - t0, 6)
+    deltas = runner.trace_deltas(before)
+    info["traces"] = sum(deltas.values())
+    info["trace_tags"] = sorted(deltas)
+    events.emit("phase", **info)

@@ -60,6 +60,7 @@ class SelectionSweepResult:
     seeds: Tuple[int, ...]
     etas: Tuple[float, ...]
     selected_initial: Optional[jnp.ndarray] = None
+    diagnostics: Optional[dict] = None  # per-round obs taps, [Q,P,S,E,R]
 
     def cumulative_bits(self) -> np.ndarray:
         """Cumulative up+down bits per round, [Q, P, S, E, R] float64 (the
@@ -188,14 +189,14 @@ def run_selection_sweep(algo_or_chain, problem, x0, rounds: int, *,
                         etas: Sequence[float] = (1.0,),
                         eta_mode: Optional[str] = None, comm=None,
                         problems=None, eval_output: bool = True,
-                        mesh=None) -> SelectionSweepResult:
+                        mesh=None, telemetry=None) -> SelectionSweepResult:
     """Thin keyword shim over ``core.sweep.run()`` for the policy grid
     family — ``core.sweep.SweepRequest`` documents the operand axes."""
     return sweep_lib.run(sweep_lib.SweepRequest(
         algo_or_chain=algo_or_chain, problem=problem, x0=x0, rounds=rounds,
         seeds=seeds, etas=etas, policies=tuple(policies),
         eta_mode=eta_mode, comm=comm, problems=problems,
-        eval_output=eval_output, mesh=mesh))
+        eval_output=eval_output, mesh=mesh, telemetry=telemetry))
 
 
 def _run_selection_sweep(algo_or_chain, problem, x0, rounds: int, *,
@@ -203,7 +204,7 @@ def _run_selection_sweep(algo_or_chain, problem, x0, rounds: int, *,
                          etas: Sequence[float] = (1.0,),
                          eta_mode: Optional[str] = None, comm=None,
                          problems=None, eval_output: bool = True,
-                         mesh=None) -> SelectionSweepResult:
+                         mesh=None, telemetry=None) -> SelectionSweepResult:
     """The policies × problems × seeds × stepsizes grid family, ONE
     compiled call per executor structure (see ``core.sweep.run``).
 
@@ -220,7 +221,8 @@ def _run_selection_sweep(algo_or_chain, problem, x0, rounds: int, *,
         return dist_grid.run_selection_sweep_sharded(
             algo_or_chain, problem, x0, rounds, policies=policies,
             seeds=seeds, etas=etas, eta_mode=eta_mode, comm=comm,
-            problems=problems, eval_output=eval_output, mesh=mesh)
+            problems=problems, eval_output=eval_output, mesh=mesh,
+            telemetry=telemetry)
 
     ops = selection_grid_operands(
         algo_or_chain, problem, x0, rounds, policies=policies, seeds=seeds,
@@ -229,26 +231,29 @@ def _run_selection_sweep(algo_or_chain, problem, x0, rounds: int, *,
 
     if ops.is_chain:
         fn = sweep_lib._sweep_fn_selection_chain(
-            algo_or_chain, ops.stacked, rounds)
+            algo_or_chain, ops.stacked, rounds, telemetry)
+        outs, taps = sweep_lib._split_taps(_grid_shape(ops, fn(
+            ops.stacked, ops.x0_stack, ops.pol_stack, ops.pst_stack,
+            ops.pidx, ops.qidx, ops.keys_c, ops.etas_arr, ops.eta_sched,
+            ops.sel_keys_c, ops.comm0)), telemetry)
         (x_hat, history, final, kept, bits_up, bits_down, masks,
-         pstate) = _grid_shape(ops, fn(
-             ops.stacked, ops.x0_stack, ops.pol_stack, ops.pst_stack,
-             ops.pidx, ops.qidx, ops.keys_c, ops.etas_arr, ops.eta_sched,
-             ops.sel_keys_c, ops.comm0))
+         pstate) = outs
         return SelectionSweepResult(
             history=history, final_sub=final, x_hat=x_hat, bits_up=bits_up,
             bits_down=bits_down, masks=masks, policy_state=pstate,
             policies=ops.pol_names, problems=ops.prob_names, seeds=ops.seeds,
-            etas=ops.etas, selected_initial=kept)
+            etas=ops.etas, selected_initial=kept, diagnostics=taps)
 
     fn = sweep_lib._sweep_fn_selection_algo(
-        algo_or_chain, ops.stacked, rounds, eval_output, ops.eta_mode)
-    x_hat, history, final, bits_up, bits_down, masks, pstate = _grid_shape(
+        algo_or_chain, ops.stacked, rounds, eval_output, ops.eta_mode,
+        telemetry)
+    outs, taps = sweep_lib._split_taps(_grid_shape(
         ops, fn(ops.stacked, ops.x0_stack, ops.pol_stack, ops.pst_stack,
                 ops.pidx, ops.qidx, ops.keys_c, ops.etas_arr, ops.sel_keys_c,
-                ops.comm0))
+                ops.comm0)), telemetry)
+    x_hat, history, final, bits_up, bits_down, masks, pstate = outs
     return SelectionSweepResult(
         history=history, final_sub=final, x_hat=x_hat, bits_up=bits_up,
         bits_down=bits_down, masks=masks, policy_state=pstate,
         policies=ops.pol_names, problems=ops.prob_names, seeds=ops.seeds,
-        etas=ops.etas)
+        etas=ops.etas, diagnostics=taps)
